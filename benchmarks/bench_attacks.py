@@ -1,0 +1,22 @@
+"""§III (Thm 1-2, Cor 1-2) — KPA attacks break every ASPE variant.
+
+Reported as recovery error + attack wall time; DCE/AME by contrast leak
+only comparison signs (no analogous linear system exists)."""
+
+from __future__ import annotations
+
+from repro.core import attacks
+
+from .common import row, timeit
+
+
+def run() -> list[str]:
+    rows = []
+    for tr, d in [("linear", 16), ("exp", 16), ("log", 16), ("square", 8)]:
+        t, res = timeit(
+            lambda tr=tr, d=d: attacks.attack_roundtrip(
+                d=d, n=120, nq=60, transform=tr), repeats=1)
+        rows.append(row(f"sec3/aspe-{tr}-kpa", 1e6 * t,
+                        f"d={d} query_err={res['query_err']:.1e} "
+                        f"db_err={res['db_err']:.1e} BROKEN"))
+    return rows

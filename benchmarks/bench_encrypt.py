@@ -1,0 +1,36 @@
+"""Fig. 8 — data-owner encryption cost per vector: DCPE < DCE << AME."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ame, dce, dcpe
+
+from .common import row, timeit
+
+
+def run(n: int = 2000, d: int = 128) -> list[str]:
+    rng = np.random.default_rng(0)
+    P = rng.standard_normal((n, d)).astype(np.float32)
+    rows = []
+
+    sap = dcpe.keygen(s=1024.0, beta=2.0)
+    t, _ = timeit(lambda: dcpe.encrypt(P, sap, seed=1))
+    rows.append(row("fig8/dcpe_enc", 1e6 * t / n, f"d={d}"))
+
+    dk = dce.keygen(d, seed=0)
+    t, _ = timeit(lambda: dce.encrypt(P, dk, seed=1))
+    rows.append(row("fig8/dce_enc", 1e6 * t / n,
+                    f"d={d} cipher={4 * dce.ciphertext_dim(d)}floats"))
+    t, _ = timeit(lambda: dce.trapgen(P[:200], dk, seed=2))
+    rows.append(row("fig8/dce_trapgen(user)", 1e6 * t / 200, f"d={d}"))
+
+    ak = ame.keygen(d, seed=0)
+    na = min(n, 200)                       # AME is ~50x slower; subsample
+    t, _ = timeit(lambda: ame.encrypt(P[:na], ak, seed=1), repeats=1)
+    rows.append(row("fig8/ame_enc", 1e6 * t / na,
+                    f"d={d} cipher=32x{2 * d + 6}floats"))
+    t, _ = timeit(lambda: ame.trapgen(P[:20], ak, seed=2), repeats=1)
+    rows.append(row("fig8/ame_trapgen(user)", 1e6 * t / 20,
+                    f"d={d} 16 matrices"))
+    return rows

@@ -1,0 +1,29 @@
+"""Fig. 5 — effect of Ratio_k (= k'/k) on recall and QPS.
+
+Larger k' refines more candidates: recall rises, QPS falls."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import synth
+
+from .common import row, system, timeit
+
+
+def run(n: int = 8000, nq: int = 25) -> list[str]:
+    ds, owner, user, server = system("sift1m", n, nq)
+    k = 10
+    enc = [user.encrypt_query(q) for q in ds.queries]
+    rows = []
+    for ratio in [1, 2, 4, 8, 16]:
+        def search_all():
+            return np.stack([
+                server.search(cs, tq, k, ratio_k=ratio, ef_search=160)[0]
+                for cs, tq in enc])
+
+        t, found = timeit(search_all, repeats=1)
+        rec = synth.recall_at_k(found, ds.gt, k)
+        rows.append(row(f"fig5/ratio_k={ratio}", 1e6 * t / nq,
+                        f"recall@{k}={rec:.3f} qps={nq / t:.1f}"))
+    return rows

@@ -1,0 +1,27 @@
+"""§Roofline — three-term roofline per (arch x shape) from the dry-run
+artifacts (single-pod).  Requires results/dryrun/*.json (run
+`python -m repro.launch.dryrun --all --both-meshes` first); cells without
+artifacts are skipped with a note."""
+
+from __future__ import annotations
+
+import os
+
+from repro.launch import roofline
+
+from .common import row
+
+
+def run(results_dir: str = "results/dryrun") -> list[str]:
+    if not os.path.isdir(results_dir):
+        return [row("roofline/missing", 0.0,
+                    "run python -m repro.launch.dryrun --all first")]
+    rows = []
+    for r in roofline.table(results_dir, mesh_filter="1pod_256"):
+        rows.append(row(
+            f"roofline/{r.arch}/{r.shape}", 1e6 * max(
+                r.compute_s, r.memory_s, r.collective_s),
+            f"compute={r.compute_s:.3g}s memory={r.memory_s:.3g}s "
+            f"coll={r.collective_s:.3g}s dom={r.dominant} "
+            f"roofline={100 * r.fraction_of_roofline():.1f}%"))
+    return rows

@@ -1,0 +1,40 @@
+"""Fig. 10 — scalability: latency vs database size at fixed recall.
+
+The paper sweeps 25M..100M; CPU-scaled here to 5k..40k with the same
+sublinearity check (HNSW latency ~ O(log n))."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ppanns
+from repro.data import synth
+
+from .common import row, timeit
+
+
+def run(sizes=(5000, 10000, 20000, 40000), nq: int = 15) -> list[str]:
+    rows = []
+    lat = {}
+    for n in sizes:
+        ds = synth.make_dataset("sift1m", n=n, n_queries=nq, k_gt=20, seed=2)
+        owner, user, server = ppanns.build_system(
+            ds.base, beta_fraction=0.03, M=16, ef_construction=100, seed=2)
+        enc = [user.encrypt_query(q) for q in ds.queries]
+
+        def search_all():
+            return np.stack([server.search(cs, tq, 10, ratio_k=8,
+                                           ef_search=128)[0]
+                             for cs, tq in enc])
+        t, found = timeit(search_all, repeats=1)
+        rec = synth.recall_at_k(found, ds.gt, 10)
+        lat[n] = t / nq
+        rows.append(row(f"fig10/n={n}", 1e6 * t / nq,
+                        f"recall={rec:.3f} qps={nq / t:.1f}"))
+    # sublinearity: latency growth should be far below linear in n
+    n0, n1 = sizes[0], sizes[-1]
+    growth = lat[n1] / lat[n0]
+    rows.append(row("fig10/sublinearity", 0.0,
+                    f"nx{n1 // n0} latency x{growth:.2f} (linear would be "
+                    f"x{n1 // n0})"))
+    return rows

@@ -1,0 +1,42 @@
+"""Shared benchmark helpers: timing, dataset cache, CSV row emission."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core import ppanns
+from repro.data import synth
+
+
+def timeit(fn, *args, repeats: int = 3, **kw):
+    """Median wall time (s) of fn(*args) over repeats (1 warmup)."""
+    fn(*args, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+@functools.lru_cache(maxsize=4)
+def dataset(name: str = "sift1m", n: int = 8000, nq: int = 30,
+            seed: int = 0):
+    return synth.make_dataset(name, n=n, n_queries=nq, k_gt=100, seed=seed)
+
+
+@functools.lru_cache(maxsize=2)
+def system(name: str = "sift1m", n: int = 8000, nq: int = 30,
+           beta_fraction: float = 0.03, seed: int = 0):
+    ds = dataset(name, n, nq, seed)
+    owner, user, server = ppanns.build_system(
+        ds.base, beta_fraction=beta_fraction, M=16, ef_construction=120,
+        seed=seed)
+    return ds, owner, user, server
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

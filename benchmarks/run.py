@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6] [--full]
+
+Prints `name,us_per_call,derived` CSV rows (scaffold convention).
+Default sizes are CPU-feasible; --full enlarges toward paper scale.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    from . import (bench_attacks, bench_baselines, bench_beta,
+                   bench_encrypt, bench_kernels, bench_ratio_k,
+                   bench_refine, bench_roofline, bench_scalability)
+
+    suites = {
+        "fig4_beta": lambda: bench_beta.run(
+            n=20000 if args.full else 6000),
+        "fig5_ratio_k": lambda: bench_ratio_k.run(
+            n=20000 if args.full else 8000),
+        "fig6_refine": lambda: bench_refine.run(
+            n=20000 if args.full else 6000),
+        "fig7_9_baselines": lambda: bench_baselines.run(
+            n=20000 if args.full else 6000),
+        "fig8_encrypt": lambda: bench_encrypt.run(),
+        "fig10_scalability": lambda: bench_scalability.run(
+            sizes=(10000, 20000, 40000, 80000) if args.full
+            else (5000, 10000, 20000, 40000)),
+        "sec3_attacks": lambda: bench_attacks.run(),
+        "kernels": lambda: bench_kernels.run(),
+        "roofline": lambda: bench_roofline.run(),
+    }
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            for r in fn():
+                print(r, flush=True)
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:                      # noqa: BLE001
+            failed.append(name)
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: the paper's full pipeline in ~60 lines.
+
+  1. Data owner encrypts a vector database (DCPE filter ciphertexts +
+     DCE refine ciphertexts) and builds the privacy-preserving HNSW index.
+  2. User encrypts a query (DCPE ciphertext + DCE trapdoor).
+  3. Server answers k-ANN over ciphertexts only (filter-and-refine,
+     Algorithm 2) — and we check recall against exact brute force.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import ppanns
+from repro.data import synth
+
+
+def main():
+    print("== PP-ANNS quickstart ==")
+    ds = synth.make_dataset("sift1m", n=5000, n_queries=25, k_gt=50, seed=0)
+    print(f"dataset: n={ds.n} d={ds.d} (clustered synthetic, SIFT dims)")
+
+    print("data owner: encrypting database + building DCPE-HNSW index ...")
+    owner, user, server = ppanns.build_system(
+        ds.base, beta_fraction=0.03, M=16, ef_construction=120, seed=7)
+    print(f"  DCPE ciphertexts: {server.db.C_sap.shape}  "
+          f"DCE ciphertexts: {server.db.C_dce.shape}")
+
+    k = 10
+    found, lat = [], []
+    for q in ds.queries:
+        c_sap, t_q = user.encrypt_query(q)          # user-side O(d^2)
+        ids, stats = server.search(c_sap, t_q, k, ratio_k=8, ef_search=128)
+        found.append(ids)
+        lat.append(stats.latency_s)
+    rec = synth.recall_at_k(np.stack(found), ds.gt, k)
+    print(f"server-side search: recall@{k} = {rec:.3f}, "
+          f"median latency {1e3 * np.median(lat):.1f} ms, "
+          f"QPS ~ {1.0 / np.median(lat):.1f}")
+
+    # what the server never sees: plaintexts or distances
+    c_sap, t_q = user.encrypt_query(ds.queries[0])
+    ids, stats = server.search(c_sap, t_q, k)
+    print(f"bytes up per query: {stats.bytes_up} (O(d)); "
+          f"bytes down: {stats.bytes_down} (4k)")
+    print(f"refine comparisons: {stats.refine_comparisons} "
+          f"(each leaks only a sign, Theorem 3)")
+    assert rec >= 0.85
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

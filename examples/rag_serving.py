@@ -1,0 +1,80 @@
+"""RAG / kNN-LM bridge: the paper's PP-ANNS as a first-class serving
+feature of the LM stack.
+
+An LM server decodes while a privacy-preserving retrieval sidecar serves
+k-NN over an *encrypted* embedding datastore (kNN-LM style: the datastore
+maps context embeddings -> next tokens; retrieved neighbors' targets blend
+with the LM logits).  The cloud host of the datastore never sees
+embeddings, queries, or distances — only DCE comparison signs.
+
+  PYTHONPATH=src python examples/rag_serving.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import dce, dcpe, ppanns
+from repro.models import Model
+from repro.serving import DistributedSecureANN, LMServer
+
+
+def main():
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").smoke(), remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    server = LMServer(model, params)
+    rng = np.random.default_rng(0)
+
+    # ---- build an encrypted kNN-LM datastore: (embedding, next-token)
+    print("building encrypted kNN-LM datastore ...")
+    n_store, d = 4000, cfg.d_model
+    store_emb = rng.standard_normal((n_store, d)).astype(np.float32)
+    store_tok = rng.integers(0, cfg.vocab_size, n_store).astype(np.int32)
+
+    owner = ppanns.DataOwner(d=d, sap_beta=1.0, seed=1)
+    C_sap = dcpe.encrypt(store_emb, owner.keys.sap_key, seed=2)
+    C_dce = dce.encrypt(store_emb, owner.keys.dce_key, seed=3)
+    user = ppanns.User(owner.share_keys())
+    ann = DistributedSecureANN(C_sap, C_dce)
+
+    # ---- decode with secure retrieval at each step
+    B, k, lam = 2, 8, 0.3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 16), 0,
+                              cfg.vocab_size, jnp.int32)
+    cache = model.init_cache(B, 64)
+    logits, cache = model.prefill(params, {"tokens": toks}, cache)
+
+    generated = []
+    for step in range(8):
+        # query the encrypted datastore with the *current* hidden summary
+        # (here: the embedding row of the argmax token as a cheap proxy)
+        probe = np.asarray(
+            jnp.take(params["embed"]["tokens"],
+                     jnp.argmax(logits, -1), axis=0), np.float32)
+        qs, ts_ = zip(*(user.encrypt_query(p) for p in probe))
+        nbr = ann.query_batch(np.stack(qs), np.stack(ts_), k=k)   # (B, k)
+        knn_tokens = store_tok[nbr]                               # (B, k)
+
+        # kNN-LM blend: boost retrieved tokens' logits
+        knn_logits = np.full(logits.shape, -1e30, np.float32)
+        for b in range(B):
+            for t in knn_tokens[b]:
+                knn_logits[b, t] = 0.0
+        blended = (1 - lam) * np.asarray(logits) + lam * knn_logits
+        nxt = jnp.asarray(blended.argmax(-1).astype(np.int32))[:, None]
+        generated.append(nxt)
+        logits, cache = model.decode_step(params, nxt, cache)
+
+    out = jnp.concatenate(generated, 1)
+    print(f"decoded {out.shape} tokens with privacy-preserving retrieval "
+          f"at every step (datastore host saw only ciphertexts)")
+    assert out.shape == (B, 8)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

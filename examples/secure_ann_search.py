@@ -1,0 +1,61 @@
+"""The paper's experimental pipeline end-to-end, including the TPU-native
+distributed scan and the §III attack demonstration.
+
+  PYTHONPATH=src python examples/secure_ann_search.py [--n 8000]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import aspe, attacks, dce, dcpe, ppanns
+from repro.data import synth
+from repro.serving import DistributedSecureANN
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--queries", type=int, default=20)
+    args = ap.parse_args()
+
+    ds = synth.make_dataset("deep1m", n=args.n, n_queries=args.queries,
+                            k_gt=50, seed=1)
+    k = 10
+
+    # ---- 1. single-server filter-and-refine (the paper's Algorithm 2)
+    owner, user, server = ppanns.build_system(ds.base, beta_fraction=0.03,
+                                              M=16, ef_construction=120)
+    t0 = time.time()
+    found = []
+    for q in ds.queries:
+        c_sap, t_q = user.encrypt_query(q)
+        ids, _ = server.search(c_sap, t_q, k, ratio_k=8, ef_search=128)
+        found.append(ids)
+    rec = synth.recall_at_k(np.stack(found), ds.gt, k)
+    print(f"[hnsw-dce] recall@{k}={rec:.3f}  "
+          f"{args.queries / (time.time() - t0):.1f} QPS")
+
+    # ---- 2. distributed sharded secure scan (TPU-native path)
+    C_sap = server.db.C_sap
+    C_dce = server.db.C_dce
+    eng = DistributedSecureANN(np.asarray(C_sap), np.asarray(C_dce))
+    qs, ts_ = zip(*(user.encrypt_query(q) for q in ds.queries))
+    t0 = time.time()
+    ids = eng.query_batch(np.stack(qs), np.stack(ts_), k=k, ratio_k=8)
+    rec2 = synth.recall_at_k(ids, ds.gt, k)
+    print(f"[dist-scan] recall@{k}={rec2:.3f}  "
+          f"{args.queries / (time.time() - t0):.1f} QPS (exact filter)")
+
+    # ---- 3. why DCE instead of ASPE: the §III KPA attack
+    res = attacks.attack_roundtrip(d=12, n=100, nq=30, transform="linear")
+    print(f"[attack] ASPE-linear KPA: query recovery err "
+          f"{res['query_err']:.2e}, db recovery err {res['db_err']:.2e} "
+          f"(broken; DCE leaks only comparison signs)")
+    assert rec >= 0.85 and rec2 >= 0.9
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — Privacy-Preserving ANN Search (Liu et al., 2025) as a
+multi-pod JAX framework.  See README.md / DESIGN.md / EXPERIMENTS.md."""

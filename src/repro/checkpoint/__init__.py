@@ -1,0 +1,3 @@
+from .ckpt import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_step, cleanup_old,
+)

@@ -1,0 +1,5 @@
+"""Paper core: DCE, DCPE, ASPE(+attacks), AME, indexes, and the PP-ANNS
+scheme (DataOwner / User / Server)."""
+
+from . import ame, aspe, attacks, dce, dcpe, hnsw, ivf, lsh  # noqa: F401
+from . import ppanns, secure_knn  # noqa: F401

@@ -1,0 +1,169 @@
+"""The complete PP-ANNS scheme (paper §V, Figs. 1 & 3).
+
+Three roles:
+  * DataOwner — holds the secret keys; encrypts the database with DCPE
+    (filter ciphertexts) and DCE (refine ciphertexts); builds the HNSW
+    index over the DCPE ciphertexts; outsources everything to the server.
+  * User — receives the keys from the owner; per query computes the DCPE
+    ciphertext C_SAP_q and the DCE trapdoor T_q (O(d^2) work, §V-C) and
+    sends (C_SAP_q, T_q, k).
+  * Server — honest-but-curious; runs Algorithm 2: k'-ANN filter on the
+    DCPE-HNSW, then the exact DCE refine.  Never sees plaintexts or
+    distance values; only comparison signs (the proven leakage L).
+
+Communication (paper §V-C): user -> server is (36 d + O(1)) bytes/query,
+server -> user is 4k bytes of ids.  Both are measured in `Server.search`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from . import dce, dcpe, hnsw as hnsw_mod, secure_knn
+
+__all__ = ["Keys", "EncryptedDatabase", "DataOwner", "User", "Server",
+           "SearchStats", "build_system"]
+
+
+@dataclasses.dataclass
+class Keys:
+    dce_key: dce.DCEKey
+    sap_key: dcpe.SAPKey
+
+
+@dataclasses.dataclass
+class EncryptedDatabase:
+    """Everything the server stores (paper §V-A): C_SAP, HNSW over C_SAP,
+    and C_DCE."""
+    C_sap: np.ndarray            # (n, d)       DCPE ciphertexts
+    index: hnsw_mod.HNSW         # HNSW built on C_sap
+    C_dce: np.ndarray            # (n, 4, 2d+16) DCE ciphertexts
+
+    @property
+    def n(self) -> int:
+        return self.C_sap.shape[0]
+
+
+@dataclasses.dataclass
+class SearchStats:
+    latency_s: float
+    filter_dist_evals: int
+    refine_comparisons: int
+    bytes_up: int
+    bytes_down: int
+
+
+class DataOwner:
+    def __init__(self, d: int, sap_beta: float, sap_s: float = 1024.0,
+                 seed: int = 0):
+        self.keys = Keys(
+            dce_key=dce.keygen(d, seed=seed),
+            sap_key=dcpe.keygen(s=sap_s, beta=sap_beta),
+        )
+        self._seed = seed
+
+    def encrypt_database(
+        self, P: np.ndarray, M: int = 16, ef_construction: int = 200,
+        progress_every: int = 0,
+    ) -> EncryptedDatabase:
+        P = np.atleast_2d(np.asarray(P))
+        C_sap = dcpe.encrypt(P, self.keys.sap_key, seed=self._seed + 1)
+        C_dce = dce.encrypt(P, self.keys.dce_key, seed=self._seed + 2)
+        index = hnsw_mod.HNSW(dim=P.shape[1], M=M,
+                              ef_construction=ef_construction,
+                              seed=self._seed + 3)
+        index.build(C_sap, progress_every=progress_every)
+        return EncryptedDatabase(C_sap=C_sap, index=index, C_dce=C_dce)
+
+    def encrypt_vector(self, p: np.ndarray, seed: int):
+        """For incremental insert (paper §V-D): owner encrypts, server links."""
+        C_sap = dcpe.encrypt(p[None], self.keys.sap_key, seed=seed)[0]
+        C_dce = dce.encrypt(p[None], self.keys.dce_key, seed=seed + 1)[0]
+        return C_sap, C_dce
+
+    def share_keys(self) -> Keys:
+        """Owner -> trusted user key handoff (threat model §II-B)."""
+        return self.keys
+
+
+class User:
+    def __init__(self, keys: Keys, seed: int = 17):
+        self.keys = keys
+        self._ctr = seed
+
+    def encrypt_query(self, q: np.ndarray):
+        """-> (C_SAP_q, T_q): the only user-side work per query (O(d^2))."""
+        self._ctr += 2
+        C_sap_q = dcpe.encrypt(q[None], self.keys.sap_key, seed=self._ctr)[0]
+        T_q = dce.trapgen(q[None], self.keys.dce_key, seed=self._ctr + 1)[0]
+        return C_sap_q, T_q
+
+
+class Server:
+    """Runs Algorithm 2 on ciphertexts only."""
+
+    def __init__(self, db: EncryptedDatabase):
+        self.db = db
+
+    def search(
+        self,
+        C_sap_q: np.ndarray,
+        T_q: np.ndarray,
+        k: int,
+        ratio_k: float = 8.0,
+        ef_search: int = 96,
+        refine: str = "heap",          # "heap" (paper) | "tournament" (TPU)
+    ) -> tuple[np.ndarray, SearchStats]:
+        t0 = time.perf_counter()
+        k_prime = max(k, int(round(ratio_k * k)))
+        evals0 = self.db.index.n_dist_evals
+        # ---- filter phase: k'-ANN on HNSW over DCPE ciphertexts
+        cand_ids, _ = self.db.index.search(
+            C_sap_q, k_prime, ef=max(ef_search, k_prime))
+        # ---- refine phase: exact DCE comparisons among the candidates
+        C_cands = self.db.C_dce[cand_ids]
+        if refine == "heap":
+            ids, ncmp = secure_knn.refine_heap(C_cands, cand_ids, T_q, k)
+        elif refine == "tournament":
+            ids, ncmp = secure_knn.refine_tournament(C_cands, cand_ids, T_q, k)
+        elif refine == "none":        # HNSW(filter)-only baseline (Fig. 6)
+            ids, ncmp = cand_ids[:k], 0
+        else:
+            raise ValueError(refine)
+        stats = SearchStats(
+            latency_s=time.perf_counter() - t0,
+            filter_dist_evals=self.db.index.n_dist_evals - evals0,
+            refine_comparisons=ncmp,
+            bytes_up=C_sap_q.nbytes + T_q.nbytes + 4,
+            bytes_down=4 * len(ids),
+        )
+        return ids, stats
+
+    # ------------------------------------------------- maintenance (§V-D)
+
+    def insert(self, C_sap: np.ndarray, C_dce_vec: np.ndarray):
+        node = self.db.index.insert(C_sap)
+        self.db.C_sap = np.concatenate([self.db.C_sap, C_sap[None]], 0)
+        self.db.C_dce = np.concatenate([self.db.C_dce, C_dce_vec[None]], 0)
+        return node
+
+    def delete(self, node: int):
+        """Deletion needs no data-owner participation (paper §V-D)."""
+        self.db.index.delete(node)
+        self.db.C_dce[node] = 0.0     # scrub ciphertext
+
+
+def build_system(P: np.ndarray, beta_fraction: float = 0.05,
+                 beta: float | None = None, s: float = 1024.0,
+                 M: int = 16, ef_construction: int = 200, seed: int = 0):
+    """Convenience: owner encrypts P, returns (owner, user, server)."""
+    P = np.atleast_2d(np.asarray(P))
+    if beta is None:
+        beta = dcpe.suggest_beta(P, fraction=beta_fraction)
+    owner = DataOwner(d=P.shape[1], sap_beta=beta, sap_s=s, seed=seed)
+    db = owner.encrypt_database(P, M=M, ef_construction=ef_construction)
+    user = User(owner.share_keys())
+    return owner, user, Server(db)

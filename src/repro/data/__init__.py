@@ -1,0 +1,1 @@
+from . import synth  # noqa: F401

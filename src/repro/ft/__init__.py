@@ -1,0 +1,1 @@
+from .runner import RetryPolicy, ResilientRunner, StragglerWatchdog  # noqa: F401

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+l2_topk  — filter-phase batched squared-L2 distance tiles + streaming k-NN
+dce_comp — refine-phase batched DCE DistanceComp (pairwise Z) tiles
+
+Each kernel directory carries ops.py (jit wrapper) and ref.py (pure-jnp
+oracle); tests sweep shapes/dtypes in interpret mode against the oracle.
+"""

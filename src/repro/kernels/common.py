@@ -1,0 +1,35 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with interpret=True, per the repo conventions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# MXU/VPU-aligned tile sizes.
+LANE = 128
+SUBLANE = 8
+
+
+def interpret_default() -> bool:
+    """Run pallas in interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jnp.ndarray, axis: int, multiple: int,
+           value: float = 0.0) -> jnp.ndarray:
+    """Right-pad `axis` of x up to a multiple (hardware-aligned shapes)."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def padded_size(n: int, multiple: int) -> int:
+    return n + ((-n) % multiple)

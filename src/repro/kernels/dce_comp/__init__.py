@@ -1,0 +1,2 @@
+from .ops import top_k_by_wins, z_matrix  # noqa: F401
+from . import ref  # noqa: F401

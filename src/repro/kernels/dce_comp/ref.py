@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the dce_comp kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def z_matrix(C: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs DCE Z-scores.  C: (n, 4, D), t: (D,) -> (n, n).
+
+    Z[i, j] = DistanceComp(C_i, C_j, t) = 2 r_i r_j r_q (d_i - d_j);
+    Z[i, j] < 0  iff  dist(i, q) < dist(j, q).
+    """
+    C = C.astype(jnp.float32)
+    t = t.astype(jnp.float32)
+    term1 = (C[:, 0, :] * t) @ C[:, 2, :].T
+    term2 = (C[:, 1, :] * t) @ C[:, 3, :].T
+    return term1 - term2
+
+
+def win_counts(C: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """wins[i] = #{j != i : dist(i,q) < dist(j,q)} — ranking by wins is an
+    exact total order because DCE comparisons are exact (Theorem 3).  The
+    diagonal is excluded: Z_ii is mathematically 0 but floats to ±eps."""
+    Z = z_matrix(C, t)
+    n = Z.shape[0]
+    offdiag = ~jnp.eye(n, dtype=bool)
+    return ((Z < 0) & offdiag).sum(axis=1).astype(jnp.int32)
+
+
+def top_k_by_wins(C: jnp.ndarray, t: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Indices of the k closest candidates (descending win count)."""
+    wins = win_counts(C, t)
+    return jnp.argsort(-wins)[:k]

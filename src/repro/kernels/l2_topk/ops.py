@@ -1,0 +1,71 @@
+"""Jitted public wrappers around the l2_topk Pallas kernel.
+
+`knn` streams the database through the distance kernel tile-by-tile and
+keeps a running top-k (the HBM-resident database never materializes an
+(nq, n) distance matrix) — the TPU analogue of the paper's linear scan with
+a max-heap, restructured as a chunked merge so it is O(n/chunk) sequential
+steps instead of O(n).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import l2_topk as _kernel
+from . import ref as _ref
+
+pairwise_sq_dists = _kernel.pairwise_sq_dists
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "chunk", "interpret", "use_kernel"))
+def knn(
+    Q: jnp.ndarray,
+    X: jnp.ndarray,
+    k: int,
+    *,
+    chunk: int = 4096,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact k-NN of each query against X.
+
+    Q: (nq, d), X: (n, d)  ->  (dists (nq, k) ascending, idx (nq, k)).
+    Scans X in `chunk`-row tiles; per tile the Pallas kernel produces the
+    distance block and a top-k merge folds it into the running state.
+    """
+    nq, _ = Q.shape
+    n = X.shape[0]
+    k = min(k, n)
+    chunk = min(chunk, n)
+    n_chunks = -(-n // chunk)
+    n_pad = n_chunks * chunk
+    Xp = jnp.pad(X, ((0, n_pad - n), (0, 0)))
+
+    dist_fn = pairwise_sq_dists if use_kernel else _ref.pairwise_sq_dists
+
+    def body(carry, ci):
+        best_d, best_i = carry
+        start = ci * chunk
+        xs = jax.lax.dynamic_slice_in_dim(Xp, start, chunk, axis=0)
+        if use_kernel:
+            d_blk = dist_fn(Q, xs, interpret=interpret)
+        else:
+            d_blk = dist_fn(Q, xs)
+        idx_blk = start + jnp.arange(chunk)[None, :]
+        # mask padded rows
+        valid = (idx_blk < n)
+        d_blk = jnp.where(valid, d_blk, jnp.inf)
+        cat_d = jnp.concatenate([best_d, d_blk], axis=1)
+        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(idx_blk, (nq, chunk))],
+                                axis=1)
+        neg, pos = jax.lax.top_k(-cat_d, k)
+        return (-neg, jnp.take_along_axis(cat_i, pos, axis=1)), None
+
+    init = (jnp.full((nq, k), jnp.inf, jnp.float32),
+            jnp.full((nq, k), -1, jnp.int32))
+    (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return best_d, best_i.astype(jnp.int32)

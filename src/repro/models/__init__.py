@@ -1,0 +1,3 @@
+from .config import ModelConfig, ShapeConfig, SHAPES  # noqa: F401
+from .model import Model, batch_metas, abstract_batch, concrete_batch  # noqa: F401
+from . import layers, moe, ssm, transformer  # noqa: F401

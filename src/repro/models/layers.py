@@ -1,0 +1,259 @@
+"""Pure-JAX transformer building blocks shared by every assigned arch.
+
+Conventions
+  * Params are nested dicts of arrays; shapes/logical-axes come from the
+    ParamMeta trees defined by each family (single source of truth).
+  * Attention projections are stored FUSED 2D, (d_model, n_heads*d_head):
+    the fused dim is always mesh-divisible even when the head count is not
+    (qwen2.5: 40 heads, whisper: 12, paligemma: 8) — activations may shard
+    unevenly (GSPMD pads), jit inputs may not.
+  * All softmax / norm statistics accumulate in float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.rules import AxisRules, constrain
+from .config import ModelConfig
+
+
+# ------------------------------------------------------------------ norms
+
+def rms_norm(x, scale, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x, params, cfg: ModelConfig):
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"], cfg.norm_eps)
+    return rms_norm(x, params["scale"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------- rope
+
+def rope(x, positions, *, fraction: float = 1.0, theta: float = 10_000.0):
+    """Rotary embedding on the leading `fraction` of head dims.
+
+    x: (B, S, H, dh); positions: (B, S) int32.  chatglm3's "2d rope" is the
+    fraction=0.5 case (rotary on half the dims, pass-through on the rest).
+    """
+    dh = x.shape[-1]
+    rot = int(dh * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, :, None, None] * freq  # (B,S,1,half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([xr1, xr2, x_pass], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+
+FLASH_THRESHOLD = 2048      # chunk KV when S > 1 and T exceeds this
+FLASH_KV_CHUNK = 512
+
+
+def _mask_block(q_positions, t_idx, kv_valid_len, causal, prefix_len, B, S):
+    """(B,1,1,S,c) boolean allowed-mask for a KV block at absolute t_idx."""
+    ok = jnp.ones((B, 1, 1, S, t_idx.shape[0]), bool)
+    t = t_idx[None, None, None, None, :]
+    if causal:
+        qp = q_positions[:, None, None, :, None]
+        ok &= (t <= qp) | (t < prefix_len)
+    if kv_valid_len is not None:
+        ok &= t < kv_valid_len[:, None, None, None, None]
+    return ok
+
+
+def attn_core(
+    q, k, v, *,
+    q_positions, kv_valid_len=None, causal=True, prefix_len=0,
+):
+    """Grouped-query attention core.
+
+    q: (B, S, H, dh); k, v: (B, T, K, dh) with H = K * G.  Never materializes
+    repeated KV (decode caches stay K-headed); logits are computed in the
+    (K, G) factored form and fp32.
+
+    Long sequences (S > 1 and T > FLASH_THRESHOLD) take a flash-style
+    KV-chunked path (lax.scan with running max/sum/acc) so the (S, T)
+    logits tensor never materializes — mandatory at prefill_32k scale.
+
+    q_positions: (B, S) absolute positions of the queries.
+    kv_valid_len: (B,) or None — number of valid cache rows (T laid out
+      from absolute position 0).
+    prefix_len: bidirectional prefix (PaliGemma prefix-LM).
+    """
+    B, S, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.reshape(B, S, K, G, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / np.sqrt(dh)
+
+    if S > 1 and T > FLASH_THRESHOLD and T % FLASH_KV_CHUNK == 0:
+        c = FLASH_KV_CHUNK
+
+        def body(carry, ci):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(kf, ci * c, c, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vf, ci * c, c, axis=1)
+            logits = jnp.einsum("bskgd,btkd->bkgst", qf, ks) * scale
+            t_idx = ci * c + jnp.arange(c)
+            ok = _mask_block(q_positions, t_idx, kv_valid_len, causal,
+                             prefix_len, B, S)              # (B,1,1,S,c)
+            logits = jnp.where(ok, logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p, vs)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, S), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, K, G, S), jnp.float32)
+        a0 = jnp.zeros((B, K, G, S, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                      jnp.arange(T // c))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]         # (B,K,G,S,dh)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, dh)
+        return out.astype(q.dtype)
+
+    logits = jnp.einsum("bskgd,btkd->bkgst", qf, kf) * scale
+    t_idx = jnp.arange(T)
+    ok = _mask_block(q_positions, t_idx, kv_valid_len, causal, prefix_len,
+                     B, S)                                   # (B,1,1,S,T)
+    logits = jnp.where(ok, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, vf)
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def attention(
+    x_q, params, cfg: ModelConfig, mesh, rules: AxisRules, *,
+    x_kv=None,                 # cross attention source (whisper decoder)
+    q_positions,               # (B, S)
+    cache=None,                # dict(k=(B,T,K,dh), v=..., pos scalar) or None
+    causal=True,
+    prefix_len=0,
+    use_rope=True,
+):
+    """Full attention block body (no residual / pre-norm — caller owns).
+
+    Returns (out (B,S,D), new_cache_kv or None).
+    """
+    B, S, D = x_q.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    K = cfg.n_kv_heads
+    x_kv_in = x_q if x_kv is None else x_kv
+
+    def proj(x, w, b, n):
+        y = x @ w.astype(x.dtype)
+        if b is not None:
+            y = y + b.astype(x.dtype)
+        y = constrain(y, mesh, rules, "act_batch", None, "act_heads")
+        return y.reshape(x.shape[0], x.shape[1], n, dh)
+
+    q = proj(x_q, params["wq"], params.get("bq"), H)
+    new_cache = None
+    if cache is not None and "xk" in cache:
+        # cross-attention with precomputed encoder KV (x_kv may be None
+        # during decode — the encoder output is only needed at prefill)
+        k, v = cache["xk"], cache["xv"]
+    else:
+        k = proj(x_kv_in, params["wk"], params.get("bk"), K)
+        v = proj(x_kv_in, params["wv"], params.get("bv"), K)
+
+    if cfg.qk_norm:  # qwen3: per-head RMSNorm before rope
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+
+    if use_rope and (x_kv is None):
+        # new K rows share the query positions (contiguous decode/prefill)
+        q = rope(q, q_positions, fraction=cfg.rope_fraction,
+                 theta=cfg.rope_theta)
+        k = rope(k, q_positions, fraction=cfg.rope_fraction,
+                 theta=cfg.rope_theta)
+
+    kv_valid = None
+    if cache is not None and "k" in cache:
+        # self-attention cache: write new K/V at position `pos`
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                 k.astype(cache["k"].dtype),
+                                                 pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                 v.astype(cache["v"].dtype),
+                                                 pos, axis=1)
+        k, v = ck, cv
+        kv_valid = jnp.full((B,), pos + S, jnp.int32)
+        new_cache = {"k": ck, "v": cv}
+
+    out = attn_core(q, k, v, q_positions=q_positions, kv_valid_len=kv_valid,
+                    causal=causal, prefix_len=prefix_len)
+    out = out.reshape(B, S, H * dh)
+    out = constrain(out, mesh, rules, "act_batch", None, "act_heads")
+    y = out @ params["wo"].astype(out.dtype)
+    if params.get("bo") is not None:
+        y = y + params["bo"].astype(y.dtype)
+    return constrain(y, mesh, rules, "act_batch", None, None), new_cache
+
+
+# -------------------------------------------------------------------- mlp
+
+def mlp(x, params, cfg: ModelConfig, mesh, rules: AxisRules):
+    if cfg.mlp_type == "swiglu":
+        g = x @ params["wg"].astype(x.dtype)
+        u = x @ params["wu"].astype(x.dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif cfg.mlp_type == "squared_relu":     # nemotron-4
+        h = x @ params["wi"].astype(x.dtype)
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    elif cfg.mlp_type == "gelu":             # whisper
+        h = x @ params["wi"].astype(x.dtype)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(cfg.mlp_type)
+    h = constrain(h, mesh, rules, "act_batch", None, "act_ff")
+    y = h @ params["wo"].astype(x.dtype)
+    return constrain(y, mesh, rules, "act_batch", None, None)
+
+
+# -------------------------------------------------------------- embedding
+
+def embed(tokens, table, mesh, rules):
+    y = jnp.take(table, tokens, axis=0)
+    return constrain(y, mesh, rules, "act_batch", None, None)
+
+
+def unembed(x, params, cfg: ModelConfig, mesh, rules):
+    if cfg.tie_embeddings:
+        w = params["embed"]["tokens"]
+        logits = x @ w.astype(x.dtype).T
+    else:
+        logits = x @ params["unembed"]["kernel"].astype(x.dtype)
+    return constrain(logits, mesh, rules, "act_batch", None, "act_vocab")

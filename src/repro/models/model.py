@@ -1,0 +1,171 @@
+"""Public model API: a thin façade over transformer.py keyed by config,
+plus batch/cache ShapeDtypeStruct + PartitionSpec builders used by the
+trainer, the server and the multi-pod dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.rules import (AxisRules, ParamMeta, param_pspecs,
+                              resolve_spec)
+from . import transformer as T
+from .config import ModelConfig, ShapeConfig
+
+
+# ------------------------------------------------------------ batch metas
+
+def batch_metas(cfg: ModelConfig, sc: ShapeConfig) -> dict[str, ParamMeta]:
+    """Input tensors for one step of the given shape cell."""
+    B, S = sc.global_batch, sc.seq_len
+    out: dict[str, ParamMeta] = {}
+    if sc.kind == "train":
+        s_text = S - (cfg.n_vision_tokens if cfg.family == "vlm" else 0)
+        out["tokens"] = ParamMeta((B, s_text), ("act_batch", None), "int32")
+        out["labels"] = ParamMeta((B, s_text), ("act_batch", None), "int32")
+    elif sc.kind == "prefill":
+        s_text = S - (cfg.n_vision_tokens if cfg.family == "vlm" else 0)
+        out["tokens"] = ParamMeta((B, s_text), ("act_batch", None), "int32")
+    else:                                    # decode: one new token
+        out["tokens"] = ParamMeta((B, 1), ("act_batch", None), "int32")
+    if cfg.family == "vlm" and sc.kind != "decode":
+        out["vision"] = ParamMeta((B, cfg.n_vision_tokens, cfg.d_model),
+                                  ("act_batch", None, None), cfg.dtype)
+    if cfg.family == "encdec" and sc.kind != "decode":
+        out["enc_input"] = ParamMeta((B, cfg.enc_seq_len, cfg.d_model),
+                                     ("act_batch", None, None), cfg.dtype)
+    return out
+
+
+def abstract_batch(cfg: ModelConfig, sc: ShapeConfig):
+    return {k: jax.ShapeDtypeStruct(m.shape, np.dtype(m.dtype))
+            for k, m in batch_metas(cfg, sc).items()}
+
+
+def concrete_batch(cfg: ModelConfig, sc: ShapeConfig, key):
+    out = {}
+    for name, m in batch_metas(cfg, sc).items():
+        key, sub = jax.random.split(key)
+        if np.dtype(m.dtype) == np.int32:
+            out[name] = jax.random.randint(sub, m.shape, 0, cfg.vocab_size,
+                                           jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, m.shape, jnp.float32) \
+                .astype(m.dtype)
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, sc: ShapeConfig, mesh, rules: AxisRules):
+    return {k: resolve_spec(mesh, rules, m.axes, m.shape, strict=True)
+            for k, m in batch_metas(cfg, sc).items()}
+
+
+# ------------------------------------------------------------ cache metas
+
+def cache_metas(cfg: ModelConfig, B: int, T_max: int,
+                enc_len: int | None = None) -> dict:
+    dt = cfg.dtype
+    K, dh, Ls = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    kv_axes = (None, "cache_batch", "cache_seq", None, None)
+    out: dict[str, Any] = {"pos": ParamMeta((), (), "int32")}
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        out["k"] = ParamMeta((Ls, B, T_max, K, dh), kv_axes, dt)
+        out["v"] = ParamMeta((Ls, B, T_max, K, dh), kv_axes, dt)
+    if cfg.family == "encdec":
+        Se = enc_len or cfg.enc_seq_len
+        xa = (None, "cache_batch", None, None, None)
+        out["xk"] = ParamMeta((Ls, B, Se, K, dh), xa, dt)
+        out["xv"] = ParamMeta((Ls, B, Se, K, dh), xa, dt)
+    if cfg.family in ("ssm", "hybrid"):
+        conv_d = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        out["conv"] = ParamMeta((Ls, B, cfg.ssm_conv - 1, conv_d),
+                                (None, "cache_batch", None, "conv_dim"), dt)
+        out["state"] = ParamMeta(
+            (Ls, B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            (None, "cache_batch", "state_heads", None, None), "float32")
+    if cfg.family == "hybrid":
+        every = max(cfg.attn_every, 1)
+        n_slots = int(np.sum([i % every == 0 for i in range(Ls)]))
+        out["ak"] = ParamMeta((n_slots, B, T_max, K, dh), kv_axes, dt)
+        out["av"] = ParamMeta((n_slots, B, T_max, K, dh), kv_axes, dt)
+    return out
+
+
+def cache_pspecs(cfg, B, T_max, mesh, rules, enc_len=None):
+    return jax.tree.map(
+        lambda m: resolve_spec(mesh, rules, m.axes, m.shape, strict=True),
+        cache_metas(cfg, B, T_max, enc_len),
+        is_leaf=lambda m: isinstance(m, ParamMeta))
+
+
+# ------------------------------------------------------------------ model
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # params
+    def param_metas(self):
+        return T.param_metas(self.cfg)
+
+    def init(self, key):
+        return T.init_params(self.cfg, key)
+
+    def abstract_params(self):
+        return jax.tree.map(
+            lambda m: jax.ShapeDtypeStruct(m.shape, np.dtype(m.dtype)),
+            self.param_metas(),
+            is_leaf=lambda m: isinstance(m, ParamMeta))
+
+    def param_specs(self, mesh, rules: AxisRules):
+        return param_pspecs(self.param_metas(), mesh, rules)
+
+    def n_params(self) -> int:
+        metas = jax.tree.leaves(
+            self.param_metas(),
+            is_leaf=lambda m: isinstance(m, ParamMeta))
+        return int(sum(np.prod(m.shape) for m in metas))
+
+    def n_active_params(self) -> int:
+        """MoE: parameters touched per token (top-k of E experts)."""
+        cfg = self.cfg
+        if cfg.family != "moe":
+            return self.n_params()
+        total = 0
+        flat = jax.tree_util.tree_flatten_with_path(
+            self.param_metas(),
+            is_leaf=lambda m: isinstance(m, ParamMeta))[0]
+        for path, m in flat:
+            size = int(np.prod(m.shape))
+            names = [getattr(p, "key", "") for p in path]
+            if any(n in ("wg", "wu", "wo") for n in names) and \
+               "mlp" in names and len(m.shape) == 4:
+                size = size * cfg.experts_per_token // cfg.n_experts
+            total += size
+        return total
+
+    # compute
+    def forward(self, params, batch, mesh=None, rules=None):
+        return T.forward(params, batch, self.cfg, mesh, rules)
+
+    def loss(self, params, batch, mesh=None, rules=None):
+        return T.loss_fn(params, batch, self.cfg, mesh, rules)
+
+    def init_cache(self, B, T_max, abstract=False, enc_len=None):
+        metas = cache_metas(self.cfg, B, T_max, enc_len)
+        def mk(m):
+            if abstract:
+                return jax.ShapeDtypeStruct(m.shape, np.dtype(m.dtype))
+            return jnp.zeros(m.shape, np.dtype(m.dtype))
+        return jax.tree.map(mk, metas,
+                            is_leaf=lambda m: isinstance(m, ParamMeta))
+
+    def prefill(self, params, batch, cache, mesh=None, rules=None):
+        return T.prefill(params, batch, cache, self.cfg, mesh, rules)
+
+    def decode_step(self, params, token, cache, mesh=None, rules=None):
+        return T.decode_step(params, token, cache, self.cfg, mesh, rules)

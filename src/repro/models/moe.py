@@ -1,0 +1,110 @@
+"""Token-choice top-k Mixture-of-Experts with sort-based capacity dispatch.
+
+Shardable design (EP over the `model` mesh axis when the expert count
+divides it — kimi-k2's 384 experts; grok-1's 8 experts fall back to
+per-expert tensor parallelism on d_ff, see sharding rules):
+
+  router -> top-k -> flatten (T*k assignments) -> argsort by expert ->
+  rank-within-expert -> capacity-bounded slots -> gather into an
+  (E, C, D) dispatch buffer -> per-expert batched matmul -> weighted
+  scatter-add back to tokens.
+
+Memory is O(T * k * D) for the dispatch buffer (inherent to top-k routing),
+which is why MoE train configs run with gradient accumulation
+(see repro.training.train_loop).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.rules import AxisRules, constrain
+from .config import ModelConfig
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    """Static per-expert capacity: cf * T * k / E, floored at 4."""
+    c = int(cfg.moe_capacity_factor * n_tokens * cfg.experts_per_token
+            / cfg.n_experts)
+    return max(4, c)
+
+
+def moe_block(x, params, cfg: ModelConfig, mesh, rules: AxisRules):
+    """x: (B, S, D) -> (B, S, D); params: router (D,E), wg/wu (E,D,F),
+    wo (E,F,D)."""
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.experts_per_token
+    C = capacity(cfg, T)
+    xf = x.reshape(T, D)
+
+    # ---- routing (fp32)
+    logits = (xf.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, sel = jax.lax.top_k(probs, k)                            # (T, k)
+    w = w / (w.sum(-1, keepdims=True) + 1e-9)
+
+    # ---- sort assignments by expert
+    flat_e = sel.reshape(-1)                                    # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = w.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+
+    # rank of each assignment within its expert's group
+    counts = jnp.bincount(se, length=E)                         # (E,)
+    seg_start = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * k) - seg_start[se]
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)                # E*C = drop bin
+
+    # ---- dispatch via INVERSE-PERMUTATION GATHERS.
+    # A direct (T*k, D).at[slot].set scatter makes GSPMD replicate the
+    # update tensor per device (~100 GB at kimi-k2 scale).  Instead we
+    # scatter only int32 indices (tiny) to build slot->source maps, then
+    # move activations with gathers, which GSPMD shards (EXPERIMENTS.md
+    # §Perf, kimi hillclimb iteration 1).
+    inv = jnp.full((E * C + 1,), T * k, jnp.int32)              # drop bin
+    inv = inv.at[slot].set(jnp.arange(T * k, dtype=jnp.int32))
+    inv = inv[:-1]                                              # (E*C,)
+    valid = (inv < T * k)
+    src_tok = jnp.where(valid, st[jnp.minimum(inv, T * k - 1)], 0)
+    h_in = xf[src_tok] * valid[:, None].astype(x.dtype)         # (E*C, D)
+    h_in = h_in.reshape(E, C, D)
+    h_in = constrain(h_in, mesh, rules, "act_expert", "act_batch", None)
+
+    # ---- per-expert ffn (swiglu)
+    g = jnp.einsum("ecd,edf->ecf", h_in, params["wg"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", h_in, params["wu"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = constrain(h, mesh, rules, "act_expert", "act_batch", "act_ff")
+    out = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(x.dtype))
+    out = constrain(out, mesh, rules, "act_expert", "act_batch", None)
+
+    # ---- combine: gather each token's k contributions (no scatter-add)
+    contrib = out.reshape(E * C, D)
+    contrib = constrain(contrib, mesh, rules, "act_batch", None)
+    # slot of the j-th assignment of token t, in original (t, j) order
+    rank_of_flat = jnp.argsort(order)                           # (T*k,)
+    slot_of_flat = slot[rank_of_flat]
+    w_of_flat = (flat_w * keep[rank_of_flat]).astype(x.dtype)
+    picked = contrib[jnp.minimum(slot_of_flat, E * C - 1)]      # (T*k, D)
+    picked = jnp.where((slot_of_flat < E * C)[:, None], picked, 0.0)
+    picked = constrain(picked, mesh, rules, "act_batch", None)
+    y = (picked * w_of_flat[:, None]).reshape(T, k, D).sum(axis=1)
+    y = y.reshape(B, S, D)
+    return constrain(y, mesh, rules, "act_batch", None, None)
+
+
+def aux_load_balance_loss(x, params, cfg: ModelConfig) -> jnp.ndarray:
+    """Switch-style load-balance auxiliary loss (fraction * prob per expert)."""
+    T = x.shape[0] * x.shape[1]
+    logits = (x.reshape(T, -1).astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    sel = jnp.argmax(probs, -1)
+    frac = jnp.mean(jax.nn.one_hot(sel, cfg.n_experts), axis=0)
+    mean_p = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * mean_p)

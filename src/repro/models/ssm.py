@@ -1,0 +1,181 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training path: chunked SSD — within-chunk quadratic "attention" term plus
+an inter-chunk state recurrence (lax.scan over chunks).  Decode path: O(1)
+recurrent state update (B, H, P, N), no KV growth — this is why the ssm /
+hybrid archs are the `long_500k` cells.
+
+Layout: x (B, S, D) -> z, xs (B, S, dI), B/C (B, S, G, N), dt (B, S, H);
+depthwise causal conv over [xs, B, C]; heads H = dI / P.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.rules import AxisRules, constrain
+from .config import ModelConfig
+from .layers import rms_norm
+
+
+def _segsum(dA):
+    """dA: (..., q) -> (..., q, q) with out[i, j] = sum_{j < m <= i} dA[m],
+    -inf above the diagonal (exp -> lower-triangular decay matrix)."""
+    q = dA.shape[-1]
+    csum = jnp.cumsum(dA, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) head inputs;   dt: (B, S, H) positive step sizes
+    A:  (H,) negative decay rates;  Bm, Cm: (B, S, H, N) (head-expanded)
+    Returns (y (B, S, H, P), final_state (B, H, P, N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S, f"seq {S} must be a multiple of chunk {chunk}"
+
+    f32 = jnp.float32
+    dA = (dt * A).astype(f32)                                   # (B,S,H)
+    xdt = (xh * dt[..., None]).astype(f32)                      # dt-scaled in
+
+    def c(t, extra=()):        # (B, S, ...) -> (B, nc, chunk, ...)
+        return t.reshape((Bsz, nc, chunk) + t.shape[2:])
+
+    dA_c = c(dA).transpose(0, 3, 1, 2)                          # (B,H,nc,q)
+    x_c, B_c, C_c = c(xdt), c(Bm.astype(f32)), c(Cm.astype(f32))
+
+    # 1. within-chunk (quadratic) term
+    L = jnp.exp(_segsum(dA_c))                                  # (B,H,nc,q,q)
+    y_diag = jnp.einsum("bcqhn,bckhn,bhcqk,bckhp->bcqhp",
+                        C_c, B_c, L, x_c)
+
+    # 2. per-chunk states
+    dA_cs = jnp.cumsum(dA_c, axis=-1)                           # (B,H,nc,q)
+    decay_in = jnp.exp(dA_cs[..., -1:] - dA_cs)                 # (B,H,nc,q)
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn", B_c, decay_in, x_c)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[..., -1])                       # (B,H,nc)
+
+    def step(carry, inp):
+        s_c, d_c = inp                                          # (B,H,P,N),(B,H)
+        prev = carry
+        new = prev * d_c[..., None, None] + s_c
+        return new, prev
+
+    s0 = jnp.zeros((Bsz, H, P, N), f32)
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4),                      # (nc,B,H,P,N)
+         chunk_decay.transpose(2, 0, 1)))                      # (nc,B,H)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (B,nc,H,P,N)
+
+    # 4. state -> output contribution
+    out_decay = jnp.exp(dA_cs)                                 # (B,H,nc,q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp",
+                       C_c, prev_states, out_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(xh.dtype), final
+
+
+def _split_proj(x, params, cfg: ModelConfig):
+    dI = cfg.d_inner
+    GN = cfg.ssm_groups * cfg.ssm_state
+    z = x @ params["wz"].astype(x.dtype)                        # (B,S,dI)
+    xs = x @ params["wx"].astype(x.dtype)                       # (B,S,dI)
+    Bp = x @ params["wb"].astype(x.dtype)                       # (B,S,GN)
+    Cp = x @ params["wc"].astype(x.dtype)                       # (B,S,GN)
+    dt = x @ params["wdt"].astype(x.dtype)                      # (B,S,H)
+    return z, jnp.concatenate([xs, Bp, Cp], axis=-1), dt, dI, GN
+
+
+def _conv_apply(conv_in, kernel, *, conv_state=None):
+    """Depthwise causal conv1d.  conv_in: (B, S, Cd); kernel: (kw, Cd).
+
+    Train: left-pad.  Decode (S==1): use/update the (B, kw-1, Cd) state.
+    Returns (out, new_state or None)."""
+    kw = kernel.shape[0]
+    if conv_state is None:
+        pad = jnp.pad(conv_in, ((0, 0), (kw - 1, 0), (0, 0)))
+        new_state = None
+    else:
+        pad = jnp.concatenate([conv_state.astype(conv_in.dtype), conv_in], 1)
+        new_state = pad[:, -(kw - 1):, :]
+    out = sum(pad[:, i:i + conv_in.shape[1], :] * kernel[i][None, None, :]
+              for i in range(kw))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(conv_in.dtype), new_state
+
+
+def _heads(cfg, conv_out, dI, GN):
+    B, S, _ = conv_out.shape
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    xs = conv_out[..., :dI].reshape(B, S, H, P)
+    Bm = conv_out[..., dI:dI + GN].reshape(B, S, G, N)
+    Cm = conv_out[..., dI + GN:].reshape(B, S, G, N)
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)                            # (B,S,H,N)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+    return xs, Bm, Cm
+
+
+def mamba_block(x, params, cfg: ModelConfig, mesh, rules: AxisRules,
+                chunk: int = 128):
+    """Training/prefill forward.  Returns (y (B,S,D), cache dict)."""
+    z, conv_in, dt, dI, GN = _split_proj(x, params, cfg)
+    conv_in = constrain(conv_in, mesh, rules, "act_batch", None, "act_ssm")
+    conv_out, _ = _conv_apply(conv_in, params["conv"])
+    xs, Bm, Cm = _heads(cfg, conv_out, dI, GN)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))           # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    y, state = ssd_chunked(xs, dt, A, Bm, Cm, chunk)
+    y = y + xs * params["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(x.shape[0], x.shape[1], dI)
+    y = constrain(y, mesh, rules, "act_batch", None, "act_ssm")
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm_scale"], cfg.norm_eps)
+    out = y @ params["wo"].astype(x.dtype)
+    kw = params["conv"].shape[0]
+    conv_state = jnp.concatenate(
+        [jnp.zeros((x.shape[0], kw - 1, conv_in.shape[-1]), conv_in.dtype),
+         conv_in], axis=1)[:, -(kw - 1):, :]
+    cache = {"state": state, "conv": conv_state}
+    return constrain(out, mesh, rules, "act_batch", None, None), cache
+
+
+def mamba_decode_step(x, params, cfg: ModelConfig, mesh, rules: AxisRules,
+                      cache):
+    """Single-token decode.  x: (B, 1, D); cache: state (B,H,P,N) f32,
+    conv (B, kw-1, conv_dim)."""
+    z, conv_in, dt, dI, GN = _split_proj(x, params, cfg)
+    conv_out, new_conv = _conv_apply(conv_in, params["conv"],
+                                     conv_state=cache["conv"])
+    xs, Bm, Cm = _heads(cfg, conv_out, dI, GN)                  # S=1
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    xh = xs[:, 0].astype(jnp.float32)                           # (B,H,P)
+    Bh = Bm[:, 0].astype(jnp.float32)                           # (B,H,N)
+    Ch = Cm[:, 0].astype(jnp.float32)
+    state = cache["state"]
+    state = constrain(state, mesh, rules, "cache_batch", "state_heads",
+                      None, None)
+    dA = jnp.exp(dt * A)                                        # (B,H)
+    state = state * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", Bh, xh * dt[..., None])
+    yh = jnp.einsum("bhn,bhpn->bhp", Ch, state)
+    yh = yh + xh * params["d_skip"].astype(jnp.float32)[:, None]
+    y = yh.reshape(x.shape[0], 1, dI).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm_scale"], cfg.norm_eps)
+    out = y @ params["wo"].astype(x.dtype)
+    return out, {"state": state, "conv": new_conv}

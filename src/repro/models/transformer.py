@@ -1,0 +1,598 @@
+"""Family assembly: param metas + forward/loss/prefill/decode for
+dense / moe / vlm (decoder-only), ssm (mamba2), hybrid (zamba2) and
+encdec (whisper).
+
+Params are nested dicts whose leaves mirror a ParamMeta tree (the single
+source of truth for shapes, logical sharding axes and dtypes).  Layer
+stacks store weights with a leading L axis and run under jax.lax.scan
+(+ optional jax.checkpoint) — compile time stays flat in depth.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.rules import AxisRules, ParamMeta, constrain
+from . import layers as L
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+
+# =====================================================================
+# Param metas
+# =====================================================================
+
+def _fs(cfg: ModelConfig):
+    """Logical axis for ZeRO-3 weight sharding of the d_model dim."""
+    return "embed_fsdp" if cfg.fsdp else None
+
+
+def _attn_metas(cfg: ModelConfig, stack: int | None, dt: str) -> dict:
+    """Attention projections, fused-2D; leading stack axis optional."""
+    def pm(shape, axes):
+        if stack is not None:
+            shape = (stack,) + shape
+            axes = (None,) + axes
+        return ParamMeta(shape, axes, dt)
+
+    D, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    fs = _fs(cfg)
+    out = {
+        "wq": pm((D, H * dh), (fs, "heads")),
+        "wk": pm((D, K * dh), (fs, "kv")),
+        "wv": pm((D, K * dh), (fs, "kv")),
+        "wo": pm((H * dh, D), ("heads", fs)),
+    }
+    if cfg.qkv_bias:
+        out |= {"bq": pm((H * dh,), ("heads",)),
+                "bk": pm((K * dh,), ("kv",)),
+                "bv": pm((K * dh,), ("kv",))}
+    if cfg.qk_norm:
+        out |= {"q_norm": pm((dh,), (None,)),
+                "k_norm": pm((dh,), (None,))}
+    return out
+
+
+def _mlp_metas(cfg: ModelConfig, stack: int | None, dt: str) -> dict:
+    def pm(shape, axes):
+        if stack is not None:
+            shape = (stack,) + shape
+            axes = (None,) + axes
+        return ParamMeta(shape, axes, dt)
+
+    D, F = cfg.d_model, cfg.d_ff
+    fs = _fs(cfg)
+    if cfg.mlp_type == "swiglu":
+        return {"wg": pm((D, F), (fs, "ff")), "wu": pm((D, F), (fs, "ff")),
+                "wo": pm((F, D), ("ff", fs))}
+    return {"wi": pm((D, F), (fs, "ff")), "wo": pm((F, D), ("ff", fs))}
+
+
+def _moe_metas(cfg: ModelConfig, stack: int | None, dt: str) -> dict:
+    def pm(shape, axes):
+        if stack is not None:
+            shape = (stack,) + shape
+            axes = (None,) + axes
+        return ParamMeta(shape, axes, dt)
+
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    fs = _fs(cfg)
+    return {
+        "router": pm((D, E), (None, None)),
+        "wg": pm((E, D, F), ("expert", fs, "ff")),
+        "wu": pm((E, D, F), ("expert", fs, "ff")),
+        "wo": pm((E, F, D), ("expert", "ff", fs)),
+    }
+
+
+def _norm_metas(cfg: ModelConfig, stack: int | None, dt: str,
+                dim: int | None = None) -> dict:
+    shape = (dim or cfg.d_model,)
+    axes: tuple = (None,)
+    if stack is not None:
+        shape = (stack,) + shape
+        axes = (None, None)
+    out = {"scale": ParamMeta(shape, axes, dt)}
+    if cfg.norm_type == "layernorm":
+        out["bias"] = ParamMeta(shape, axes, dt)
+    return out
+
+
+def _ssm_metas(cfg: ModelConfig, stack: int | None, dt: str) -> dict:
+    def pm(shape, axes):
+        if stack is not None:
+            shape = (stack,) + shape
+            axes = (None,) + axes
+        return ParamMeta(shape, axes, dt)
+
+    D, dI = cfg.d_model, cfg.d_inner
+    GN = cfg.ssm_groups * cfg.ssm_state
+    H = cfg.ssm_heads
+    kw = cfg.ssm_conv
+    fs = _fs(cfg)
+    return {
+        "wz": pm((D, dI), (fs, "ssm_inner")),
+        "wx": pm((D, dI), (fs, "ssm_inner")),
+        "wb": pm((D, GN), (fs, None)),
+        "wc": pm((D, GN), (fs, None)),
+        "wdt": pm((D, H), (fs, None)),
+        "conv": pm((kw, dI + 2 * GN), (None, "conv_dim")),
+        "a_log": pm((H,), (None,)),
+        "dt_bias": pm((H,), (None,)),
+        "d_skip": pm((H,), (None,)),
+        "norm_scale": pm((dI,), ("ssm_inner",)),
+        "wo": pm((dI, D), ("ssm_inner", fs)),
+    }
+
+
+def param_metas(cfg: ModelConfig) -> dict:
+    dt = cfg.dtype
+    V, D = cfg.vocab_size, cfg.d_model
+    Ls = cfg.n_layers if cfg.scan_layers else None
+    metas: dict[str, Any] = {
+        "embed": {"tokens": ParamMeta((V, D), ("vocab", _fs(cfg)), dt)},
+        "final_norm": _norm_metas(cfg, None, dt),
+    }
+    if not cfg.tie_embeddings:
+        metas["unembed"] = {"kernel": ParamMeta((D, V), (_fs(cfg), "vocab"), dt)}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        layer = {
+            "attn_norm": _norm_metas(cfg, Ls, dt),
+            "attn": _attn_metas(cfg, Ls, dt),
+            "mlp_norm": _norm_metas(cfg, Ls, dt),
+            "mlp": (_moe_metas(cfg, Ls, dt) if cfg.family == "moe"
+                    else _mlp_metas(cfg, Ls, dt)),
+        }
+        metas["layers"] = layer
+    elif cfg.family == "ssm":
+        metas["layers"] = {
+            "norm": _norm_metas(cfg, Ls, dt),
+            "mixer": _ssm_metas(cfg, Ls, dt),
+        }
+    elif cfg.family == "hybrid":
+        metas["layers"] = {
+            "norm": _norm_metas(cfg, Ls, dt),
+            "mixer": _ssm_metas(cfg, Ls, dt),
+        }
+        metas["shared"] = {
+            "attn_norm": _norm_metas(cfg, None, dt),
+            "attn": _attn_metas(cfg, None, dt),
+            "mlp_norm": _norm_metas(cfg, None, dt),
+            "mlp": _mlp_metas(cfg, None, dt),
+        }
+    elif cfg.family == "encdec":
+        Le = cfg.n_enc_layers if cfg.scan_layers else None
+        metas["encoder"] = {
+            "layers": {
+                "attn_norm": _norm_metas(cfg, Le, dt),
+                "attn": _attn_metas(cfg, Le, dt),
+                "mlp_norm": _norm_metas(cfg, Le, dt),
+                "mlp": _mlp_metas(cfg, Le, dt),
+            },
+            "final_norm": _norm_metas(cfg, None, dt),
+        }
+        metas["layers"] = {
+            "attn_norm": _norm_metas(cfg, Ls, dt),
+            "attn": _attn_metas(cfg, Ls, dt),
+            "cross_norm": _norm_metas(cfg, Ls, dt),
+            "cross": _attn_metas(cfg, Ls, dt),
+            "mlp_norm": _norm_metas(cfg, Ls, dt),
+            "mlp": _mlp_metas(cfg, Ls, dt),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return metas
+
+
+# =====================================================================
+# Initialization (name-based; metas drive shapes)
+# =====================================================================
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    metas = param_metas(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        metas, is_leaf=lambda m: isinstance(m, ParamMeta))
+
+    def one(path, meta: ParamMeta, k):
+        name = path[-1].key
+        shape, dt = meta.shape, meta.dtype
+        if name in ("scale", "norm_scale", "d_skip"):
+            return jnp.ones(shape, dt)
+        if name.startswith("b") and len(shape) <= 2 or name == "bias":
+            return jnp.zeros(shape, dt)
+        if name == "a_log":
+            return jnp.log(jax.random.uniform(k, shape, jnp.float32,
+                                              1.0, 16.0)).astype(dt)
+        if name == "dt_bias":
+            u = jax.random.uniform(k, shape, jnp.float32, 1e-3, 0.1)
+            return jnp.log(jnp.expm1(u)).astype(dt)       # softplus^-1
+        if name in ("q_norm", "k_norm"):
+            return jnp.ones(shape, dt)
+        if name == "tokens":
+            return (0.02 * jax.random.normal(k, shape, jnp.float32)).astype(dt)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = 1.0 / np.sqrt(fan_in)
+        return (std * jax.random.normal(k, shape, jnp.float32)).astype(dt)
+
+    leaves = []
+    for i, (path, meta) in enumerate(flat):
+        leaves.append(one(path, meta, jax.random.fold_in(key, i)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# =====================================================================
+# Forward passes
+# =====================================================================
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _dense_layer(x, lp, cfg, mesh, rules, *, positions, cache=None,
+                 prefix_len=0):
+    h = L.norm(x, lp["attn_norm"], cfg)
+    a, kv = L.attention(h, lp["attn"], cfg, mesh, rules,
+                        q_positions=positions, cache=cache,
+                        causal=True, prefix_len=prefix_len)
+    x = x + a
+    h = L.norm(x, lp["mlp_norm"], cfg)
+    if cfg.family == "moe":
+        x = x + moe_mod.moe_block(h, lp["mlp"], cfg, mesh, rules)
+    else:
+        x = x + L.mlp(h, lp["mlp"], cfg, mesh, rules)
+    return x, kv
+
+
+def _decoder_stack(params, x, cfg, mesh, rules, *, positions, cache=None,
+                   prefix_len=0):
+    """Scan the layer stack.  cache: None or dict of stacked (L, ...) KV."""
+    pos_cache = None if cache is None else cache["pos"]
+
+    def body(carry, xs):
+        xc = carry
+        if cache is None:
+            lp = xs
+            out, _ = layer_fn(xc, lp, None)
+            return out, None
+        lp, kc, vc = xs
+        out, kv = layer_fn(xc, lp, {"k": kc, "v": vc, "pos": pos_cache})
+        return out, kv
+
+    def layer_fn(xc, lp, c):
+        return _dense_layer(xc, lp, cfg, mesh, rules, positions=positions,
+                            cache=c, prefix_len=prefix_len)
+
+    body = _maybe_remat(body, cfg) if cache is None else body
+    if cache is None:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, None
+    x, kvs = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    new_cache = {"k": kvs["k"], "v": kvs["v"], "pos": pos_cache + x.shape[1]}
+    return x, new_cache
+
+
+def _ssm_layer(x, lp, cfg, mesh, rules, *, cache=None):
+    h = L.norm(x, lp["norm"], cfg)
+    if cache is None:
+        y, new_cache = ssm_mod.mamba_block(h, lp["mixer"], cfg, mesh, rules)
+    elif cache.get("decode", False):
+        y, new_cache = ssm_mod.mamba_decode_step(h, lp["mixer"], cfg, mesh,
+                                                 rules, cache)
+    else:   # prefill: run the chunked scan, keep the final state
+        y, new_cache = ssm_mod.mamba_block(h, lp["mixer"], cfg, mesh, rules)
+    return x + y, new_cache
+
+
+def _hybrid_shared_block(x, params, cfg, mesh, rules, *, positions,
+                         cache=None):
+    sp = params["shared"]
+    h = L.norm(x, sp["attn_norm"], cfg)
+    a, kv = L.attention(h, sp["attn"], cfg, mesh, rules,
+                        q_positions=positions, cache=cache, causal=True)
+    x = x + a
+    h = L.norm(x, sp["mlp_norm"], cfg)
+    x = x + L.mlp(h, sp["mlp"], cfg, mesh, rules)
+    return x, kv
+
+
+def _hybrid_stack(params, x, cfg, mesh, rules, *, positions, cache=None,
+                  decode=False):
+    """Zamba2: mamba2 layers + ONE shared attention block invoked every
+    cfg.attn_every layers (weights shared; KV caches per invocation slot).
+
+    cache: None (train) or dict(conv (L,...), state (L,...), ak/av
+    (n_slots, B, T, K, dh), pos).  `decode` is static."""
+    n_layers = cfg.n_layers
+    every = max(cfg.attn_every, 1)
+    is_attn = jnp.asarray([i % every == 0 for i in range(n_layers)])
+    slot_idx = jnp.asarray(np.cumsum([i % every == 0
+                                      for i in range(n_layers)]) - 1)
+    pos_cache = None if cache is None else cache["pos"]
+
+    def body(carry, xs):
+        xc, ak, av = carry
+        if cache is None:
+            lp, flag, slot = xs
+            conv = state = None
+        else:
+            lp, flag, slot, conv, state = xs
+
+        def with_attn(args):
+            xc, ak, av = args
+            if cache is None:
+                out, _ = _hybrid_shared_block(xc, params, cfg, mesh, rules,
+                                              positions=positions)
+                return out, ak, av
+            kc = jax.lax.dynamic_index_in_dim(ak, slot, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(av, slot, 0, keepdims=False)
+            out, kv = _hybrid_shared_block(
+                xc, params, cfg, mesh, rules, positions=positions,
+                cache={"k": kc, "v": vc, "pos": pos_cache})
+            ak = jax.lax.dynamic_update_index_in_dim(ak, kv["k"], slot, 0)
+            av = jax.lax.dynamic_update_index_in_dim(av, kv["v"], slot, 0)
+            return out, ak, av
+
+        xc, ak, av = jax.lax.cond(flag, with_attn, lambda a: a, (xc, ak, av))
+        if cache is None:
+            xc, _ = _ssm_layer(xc, lp, cfg, mesh, rules)
+            return (xc, ak, av), None
+        xc, sc = _ssm_layer(xc, lp, cfg, mesh, rules,
+                            cache={"conv": conv, "state": state,
+                                   "decode": decode})
+        return (xc, ak, av), sc
+
+    if cache is None:
+        body_r = _maybe_remat(body, cfg)
+        n_slots = int(np.sum([i % every == 0 for i in range(n_layers)]))
+        dummy = jnp.zeros((n_slots, 0), cfg.dtype)   # unused carriers
+        (x, _, _), _ = jax.lax.scan(
+            body_r, (x, dummy, dummy), (params["layers"], is_attn, slot_idx))
+        return x, None
+    (x, ak, av), sc = jax.lax.scan(
+        body, (x, cache["ak"], cache["av"]),
+        (params["layers"], is_attn, slot_idx, cache["conv"], cache["state"]))
+    new_cache = {"ak": ak, "av": av, "conv": sc["conv"], "state": sc["state"],
+                 "pos": pos_cache + x.shape[1]}
+    return x, new_cache
+
+
+def _encdec_encoder(params, enc_input, cfg, mesh, rules):
+    """Whisper encoder over stub frame embeddings (bidirectional)."""
+    x = enc_input.astype(cfg.dtype)
+    Se = x.shape[1]
+    pos = _sinusoidal(Se, cfg.d_model, x.dtype)
+    x = x + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(Se)[None], x.shape[:2])
+
+    def body(xc, lp):
+        h = L.norm(xc, lp["attn_norm"], cfg)
+        a, _ = L.attention(h, lp["attn"], cfg, mesh, rules,
+                           q_positions=positions, causal=False,
+                           use_rope=False)
+        xc = xc + a
+        h = L.norm(xc, lp["mlp_norm"], cfg)
+        xc = xc + L.mlp(h, lp["mlp"], cfg, mesh, rules)
+        return xc, None
+
+    body = _maybe_remat(body, cfg)
+    enc = params["encoder"]
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return L.norm(x, enc["final_norm"], cfg)
+
+
+def _encdec_decoder(params, x, enc_out, cfg, mesh, rules, *, positions,
+                    cache=None):
+    pos_cache = None if cache is None else cache["pos"]
+
+    def layer(xc, lp, c):
+        # split cache views: self-attention must never see the cross KV
+        self_c = None if c is None else {"k": c["k"], "v": c["v"],
+                                         "pos": c["pos"]}
+        cross_c = (None if (c is None or "xk" not in c)
+                   else {"xk": c["xk"], "xv": c["xv"]})
+        h = L.norm(xc, lp["attn_norm"], cfg)
+        a, kv = L.attention(h, lp["attn"], cfg, mesh, rules,
+                            q_positions=positions, cache=self_c, causal=True,
+                            use_rope=False)
+        xc = xc + a
+        h = L.norm(xc, lp["cross_norm"], cfg)
+        a, _ = L.attention(h, lp["cross"], cfg, mesh, rules,
+                           x_kv=enc_out, q_positions=positions,
+                           cache=cross_c, causal=False, use_rope=False)
+        xc = xc + a
+        h = L.norm(xc, lp["mlp_norm"], cfg)
+        xc = xc + L.mlp(h, lp["mlp"], cfg, mesh, rules)
+        return xc, kv
+
+    if cache is None:
+        def body(xc, lp):
+            out, _ = layer(xc, lp, None)
+            return out, None
+        body = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, None
+
+    def body(xc, xs):
+        lp, kc, vc, xk, xv = xs
+        out, kv = layer(xc, lp, {"k": kc, "v": vc, "pos": pos_cache,
+                                 "xk": xk, "xv": xv})
+        return out, kv
+
+    x, kvs = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    new_cache = {"k": kvs["k"], "v": kvs["v"], "xk": cache["xk"],
+                 "xv": cache["xv"], "pos": pos_cache + x.shape[1]}
+    return x, new_cache
+
+
+def _sinusoidal(S: int, D: int, dtype) -> jnp.ndarray:
+    pos = np.arange(S)[:, None]
+    dim = np.arange(D // 2)[None, :]
+    ang = pos / (10_000 ** (2 * dim / D))
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+    return jnp.asarray(out, dtype)
+
+
+# =====================================================================
+# Public entry points
+# =====================================================================
+
+def forward(params, batch, cfg: ModelConfig, mesh=None,
+            rules: AxisRules | None = None):
+    """Full-sequence forward -> logits (B, S_text, V)."""
+    tokens = batch["tokens"]
+    x = L.embed(tokens, params["embed"]["tokens"], mesh, rules)
+    x = x.astype(cfg.dtype)
+    prefix_len = 0
+    if cfg.family == "vlm":
+        vis = batch["vision"].astype(cfg.dtype)         # (B, Nv, D) stub
+        x = jnp.concatenate([vis, x], axis=1)
+        prefix_len = vis.shape[1]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, _ = _decoder_stack(params, x, cfg, mesh, rules,
+                              positions=positions, prefix_len=prefix_len)
+    elif cfg.family == "ssm":
+        def body(xc, lp):
+            out, _ = _ssm_layer(xc, lp, cfg, mesh, rules)
+            return out, None
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+    elif cfg.family == "hybrid":
+        x, _ = _hybrid_stack(params, x, cfg, mesh, rules, positions=positions)
+    elif cfg.family == "encdec":
+        enc_out = _encdec_encoder(params, batch["enc_input"], cfg, mesh, rules)
+        x, _ = _encdec_decoder(params, x, enc_out, cfg, mesh, rules,
+                               positions=positions)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm(x, params["final_norm"], cfg)
+    if cfg.family == "vlm":
+        x = x[:, prefix_len:]                            # logits on text only
+    return L.unembed(x, params, cfg, mesh, rules)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, mesh=None,
+            rules: AxisRules | None = None):
+    """Next-token cross entropy (labels = batch['labels'], -1 = masked)."""
+    logits = forward(params, batch, cfg, mesh, rules).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# (cache construction lives in model.py: cache_metas/init_cache)
+
+
+def prefill(params, batch, cache, cfg: ModelConfig, mesh=None,
+            rules: AxisRules | None = None):
+    """Run the prompt through the model, filling `cache`.
+    Returns (last-position logits (B, V), cache)."""
+    tokens = batch["tokens"]
+    x = L.embed(tokens, params["embed"]["tokens"], mesh, rules).astype(cfg.dtype)
+    prefix_len = 0
+    if cfg.family == "vlm":
+        vis = batch["vision"].astype(cfg.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        prefix_len = vis.shape[1]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, cache = _decoder_stack(params, x, cfg, mesh, rules,
+                                  positions=positions, cache=cache,
+                                  prefix_len=prefix_len)
+    elif cfg.family == "ssm":
+        pos0 = cache["pos"]
+
+        def body(xc, xs):
+            lp, conv, state = xs
+            out, sc = _ssm_layer(xc, lp, cfg, mesh, rules,
+                                 cache={"conv": conv, "state": state,
+                                        "decode": False})
+            return out, sc
+        x, sc = jax.lax.scan(body, x,
+                             (params["layers"], cache["conv"],
+                              cache["state"]))
+        cache = {"conv": sc["conv"], "state": sc["state"], "pos": pos0 + S}
+    elif cfg.family == "hybrid":
+        x, cache = _hybrid_stack(params, x, cfg, mesh, rules,
+                                 positions=positions, cache=cache,
+                                 decode=False)
+    elif cfg.family == "encdec":
+        enc_out = _encdec_encoder(params, batch["enc_input"], cfg, mesh, rules)
+        # precompute cross KV per layer
+        cache = dict(cache)
+        cache.update(_cross_kv(params, enc_out, cfg, mesh, rules))
+        x, cache = _encdec_decoder(params, x, enc_out, cfg, mesh, rules,
+                                   positions=positions, cache=cache)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm(x[:, -1:], params["final_norm"], cfg)
+    logits = L.unembed(x, params, cfg, mesh, rules)[:, 0]
+    return logits, cache
+
+
+def _cross_kv(params, enc_out, cfg, mesh, rules):
+    K, dh = cfg.n_kv_heads, cfg.head_dim
+
+    def body(_, lp):
+        k = (enc_out @ lp["cross"]["wk"].astype(enc_out.dtype)).reshape(
+            enc_out.shape[0], enc_out.shape[1], K, dh)
+        v = (enc_out @ lp["cross"]["wv"].astype(enc_out.dtype)).reshape(
+            enc_out.shape[0], enc_out.shape[1], K, dh)
+        return _, {"xk": k, "xv": v}
+
+    _, kv = jax.lax.scan(body, None, params["layers"])
+    return kv
+
+
+def decode_step(params, token, cache, cfg: ModelConfig, mesh=None,
+                rules: AxisRules | None = None):
+    """One decode step.  token: (B, 1) int32.  Returns (logits (B, V), cache)."""
+    x = L.embed(token, params["embed"]["tokens"], mesh, rules).astype(cfg.dtype)
+    B = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, cache = _decoder_stack(params, x, cfg, mesh, rules,
+                                  positions=positions, cache=cache)
+    elif cfg.family == "ssm":
+        pos0 = cache["pos"]
+
+        def body(xc, xs):
+            lp, conv, state = xs
+            out, sc = _ssm_layer(xc, lp, cfg, mesh, rules,
+                                 cache={"conv": conv, "state": state,
+                                        "decode": True})
+            return out, sc
+        x, sc = jax.lax.scan(body, x, (params["layers"], cache["conv"],
+                                       cache["state"]))
+        cache = {"conv": sc["conv"], "state": sc["state"], "pos": pos0 + 1}
+    elif cfg.family == "hybrid":
+        x, cache = _hybrid_stack(params, x, cfg, mesh, rules,
+                                 positions=positions, cache=cache,
+                                 decode=True)
+    elif cfg.family == "encdec":
+        x, cache = _encdec_decoder(params, x, None, cfg, mesh, rules,
+                                   positions=positions, cache=cache)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm(x, params["final_norm"], cfg)
+    logits = L.unembed(x, params, cfg, mesh, rules)[:, 0]
+    return logits, cache

@@ -1,0 +1,2 @@
+from .engine import LMServer  # noqa: F401
+from .ann_server import DistributedSecureANN  # noqa: F401

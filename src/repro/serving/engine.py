@@ -1,0 +1,51 @@
+"""LM serving engine: batched prefill + greedy/temperature decode with a
+KV cache, jitted end-to-end."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+
+__all__ = ["LMServer"]
+
+
+class LMServer:
+    def __init__(self, model: Model, params, mesh=None, rules=None):
+        self.model = model
+        self.params = params
+        self.mesh = mesh
+        self.rules = rules
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill(p, b, c, mesh, rules))
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode_step(p, t, c, mesh, rules))
+
+    def generate(self, batch: dict, max_new_tokens: int,
+                 temperature: float = 0.0, key=None):
+        """batch: {'tokens': (B, S), ...frontend stubs}.  Greedy when
+        temperature == 0.  Returns (B, max_new_tokens) int32."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        t_max = S + max_new_tokens + \
+            (self.model.cfg.n_vision_tokens
+             if self.model.cfg.family == "vlm" else 0)
+        cache = self.model.init_cache(B, t_max)
+        logits, cache = self._prefill(self.params, batch, cache)
+
+        out = []
+        for i in range(max_new_tokens):
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits / temperature,
+                                             axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            nxt = nxt.astype(jnp.int32)[:, None]
+            out.append(nxt)
+            if i + 1 < max_new_tokens:
+                logits, cache = self._decode(self.params, nxt, cache)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,171 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Tensors carry *logical* axis names; a rule table maps each name to the mesh
+axes it may shard over.  Resolution:
+
+  * parameters / jit inputs — strict: an axis is used only if the dimension
+    divides the mesh-axes product (jax rejects uneven input shardings);
+    otherwise the dimension is replicated.
+  * activations — permissive: uneven GSPMD sharding is allowed (XLA pads),
+    but a mesh axis is never used twice within one tensor and tiny dims
+    (dim < shards) fall back to replication.
+
+Rule tables:
+  TRAIN_RULES        — DP over (pod, data), TP over model, FSDP(ZeRO-3)
+                       weight sharding over data for `fsdp=True` archs.
+  SERVE_RULES        — decode: batch over (pod, data); KV-cache *sequence*
+                       over model (flash-decode style: kv-head counts are
+                       too small to shard, sequence is not).
+  LONG_DECODE_RULES  — batch=1 long-context: sequence/state sharded over
+                       both data and model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "AxisRules", "ParamMeta", "TRAIN_RULES", "SERVE_RULES",
+    "LONG_DECODE_RULES", "PURE_DP_TRAIN_RULES",
+    "resolve_spec", "constrain", "param_pspecs",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    """Shape + logical axes + dtype for one parameter tensor."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    table: dict[str, tuple[str, ...]]
+
+    def get(self, logical: str | None) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        return self.table.get(logical, ())
+
+
+# --------------------------------------------------------------- tables
+
+def _t(**kw) -> AxisRules:
+    return AxisRules({k: (v,) if isinstance(v, str) else tuple(v)
+                      for k, v in kw.items() if v is not None})
+
+
+TRAIN_RULES = _t(
+    # parameters
+    vocab="model", heads="model", kv="model", ff="model", expert="model",
+    ssm_inner="model", conv_dim="model",
+    embed_fsdp=("pod", "data"),     # only emitted when cfg.fsdp
+    # activations
+    act_batch=("pod", "data"), act_heads="model", act_ff="model",
+    act_vocab="model", act_expert="model", act_ssm="model",
+)
+
+SERVE_RULES = _t(
+    vocab="model", heads="model", kv="model", ff="model", expert="model",
+    ssm_inner="model", conv_dim="model",
+    embed_fsdp=("pod", "data"),     # 2D weight sharding: 340B/1T archs do
+                                    # not fit 16-way TP on 16 GB chips
+    act_batch=("pod", "data"), act_heads="model", act_ff="model",
+    act_vocab="model", act_expert="model", act_ssm="model",
+    cache_batch=("pod", "data"),
+    cache_seq="model",              # flash-decode: shard KV sequence
+)
+
+# Hillclimb variant (EXPERIMENTS.md §Perf, mamba2 cell): sub-1B models on
+# a 256-chip pod waste the mesh on TP all-reduces (the weights fit
+# per-chip).  Pure DP: every mesh axis becomes batch; weights and
+# optimizer state replicate (ZeRO-1 sharding of the state is the logical
+# next step for the 1-10B tier and is noted as future work).
+PURE_DP_TRAIN_RULES = _t(
+    act_batch=("pod", "data", "model"),
+)
+
+LONG_DECODE_RULES = _t(
+    vocab="model", heads="model", kv="model", ff="model", expert="model",
+    ssm_inner="model", conv_dim="model",
+    embed_fsdp=("pod", "data"),
+    act_heads="model", act_ff="model", act_vocab="model", act_ssm="model",
+    cache_seq=("data", "model"),    # batch=1: all parallelism into sequence
+    state_heads="model",            # SSM decode state heads
+)
+
+
+# ------------------------------------------------------------ resolution
+
+def _mesh_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def resolve_spec(
+    mesh: Mesh,
+    rules: AxisRules,
+    axes: tuple[str | None, ...],
+    shape: tuple[int, ...],
+    *,
+    strict: bool,
+) -> PartitionSpec:
+    """Map logical axes -> PartitionSpec under the rule table.
+
+    If the full mesh-axis tuple does not fit a dimension, suffixes are
+    tried (e.g. batch=256 on ('pod','data','model')=512 falls back to
+    ('data','model')=256) — this is what lets one rule table serve both
+    the single-pod and multi-pod meshes."""
+    used: set[str] = set()
+    out: list[Any] = []
+    for dim, logical in zip(shape, axes):
+        cand = [a for a in rules.get(logical)
+                if a in mesh.shape and a not in used]
+        placed = False
+        while cand:
+            size = _mesh_size(mesh, tuple(cand))
+            ok = (dim % size == 0) if strict else (dim >= size)
+            if ok:
+                used.update(cand)
+                out.append(tuple(cand) if len(cand) > 1 else cand[0])
+                placed = True
+                break
+            cand = cand[1:]             # drop the leading (outermost) axis
+        if not placed:
+            out.append(None)
+    return PartitionSpec(*out)
+
+
+def constrain(x, mesh: Mesh, rules: AxisRules, *axes: str | None):
+    """with_sharding_constraint by logical names (permissive resolution)."""
+    if mesh is None:
+        return x
+    spec = resolve_spec(mesh, rules, tuple(axes), tuple(x.shape), strict=False)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_pspecs(metas, mesh: Mesh, rules: AxisRules):
+    """Pytree of ParamMeta -> pytree of PartitionSpec (strict)."""
+    return jax.tree.map(
+        lambda m: resolve_spec(mesh, rules, m.axes, m.shape, strict=True),
+        metas,
+        is_leaf=lambda m: isinstance(m, ParamMeta),
+    )
+
+
+def abstract_params(metas):
+    """Pytree of ParamMeta -> ShapeDtypeStruct (dry-run stand-ins)."""
+    return jax.tree.map(
+        lambda m: jax.ShapeDtypeStruct(m.shape, np.dtype(m.dtype)),
+        metas,
+        is_leaf=lambda m: isinstance(m, ParamMeta),
+    )

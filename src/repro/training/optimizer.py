@@ -1,0 +1,207 @@
+"""Optimizers (no optax in this container — built from scratch).
+
+* adamw     — AdamW with dtype-configurable moment storage (bf16 moments
+              halve optimizer HBM for the 340B/1T configs; fp32 master
+              update math regardless of storage dtype).
+* adafactor — factored second moment (rank-1 row/col statistics) for the
+              largest configs; m optional.
+* sgdm      — momentum baseline.
+
+All are pure pytree functions: init(params) -> state; update(grads, state,
+params, step) -> (new_params, new_state).  Update math runs in fp32 and
+casts back to storage dtypes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["OptConfig", "make_optimizer", "global_norm", "clip_by_global_norm",
+           "cosine_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor | sgdm
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"   # bfloat16 halves optimizer HBM
+    min_lr_frac: float = 0.1
+
+
+def cosine_schedule(cfg: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(np.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    """Scale in each gradient's own dtype: upcasting the tree to f32 would
+    materialize a full-size f32 copy (16 GB/device at kimi-k2 scale)."""
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+_CHUNK_THRESHOLD = 1 << 28      # elements; ~0.5 GB bf16
+
+
+def _chunked_leafwise(fn, p, *rest):
+    """Apply a per-leaf update in slices along the leading (layer-stack)
+    axis when the leaf is huge.  The fp32 upcast temporaries inside
+    optimizer math otherwise materialize the WHOLE stacked tensor (a
+    single ~1T-param leaf for kimi-k2: ~16 GB/device per temporary —
+    see EXPERIMENTS.md §Perf)."""
+    aligned = all(r.ndim >= 1 and r.shape[0] == p.shape[0]
+                  for r in jax.tree.leaves(rest))
+    if p.size >= _CHUNK_THRESHOLD and p.ndim >= 2 and p.shape[0] > 1 \
+            and aligned:
+        return jax.lax.map(lambda args: fn(*args), (p, *rest))
+    return fn(p, *rest)
+
+
+class _Opt:
+    def __init__(self, cfg: OptConfig):
+        self.cfg = cfg
+
+    def init(self, params) -> Any:
+        raise NotImplementedError
+
+    def update(self, grads, state, params, step):
+        raise NotImplementedError
+
+
+class _AdamW(_Opt):
+    def init(self, params):
+        dt = np.dtype(self.cfg.state_dtype)
+        z = lambda p: jnp.zeros(p.shape, dt)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(self, grads, state, params, step):
+        c = self.cfg
+        lr = cosine_schedule(c, step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1.0 - c.b1 ** t
+        bc2 = 1.0 - c.b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            mf = c.b1 * m.astype(jnp.float32) + (1 - c.b1) * g
+            vf = c.b2 * v.astype(jnp.float32) + (1 - c.b2) * g * g
+            step_ = (mf / bc1) / (jnp.sqrt(vf / bc2) + c.eps)
+            decay = c.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * (step_ + decay)
+            dt = m.dtype
+            return new_p.astype(p.dtype), mf.astype(dt), vf.astype(dt)
+
+        out = jax.tree.map(
+            lambda p, g, m, v: _chunked_leafwise(upd, p, g, m, v),
+            params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda o: isinstance(o, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda o: isinstance(o, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda o: isinstance(o, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+
+class _Adafactor(_Opt):
+    """Factored second moment: for >=2D params store row/col mean-square
+    statistics instead of the full tensor (O(n+m) vs O(nm))."""
+
+    def init(self, params):
+        dt = np.dtype(self.cfg.state_dtype)
+
+        def one(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], dt),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt)}
+            return {"v": jnp.zeros(p.shape, dt)}
+        return {"f": jax.tree.map(one, params)}
+
+    def update(self, grads, state, params, step):
+        c = self.cfg
+        lr = cosine_schedule(c, step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** -0.8                       # Adafactor decay
+
+        def upd(p, g, f):
+            g = g.astype(jnp.float32)
+            g2 = g * g + 1e-30
+            if p.ndim >= 2:
+                vr = beta * f["vr"].astype(jnp.float32) + (1 - beta) * g2.mean(-1)
+                vc = beta * f["vc"].astype(jnp.float32) + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., :, None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30))
+                step_ = g / (jnp.sqrt(denom) + c.eps)
+                nf = {"vr": vr.astype(f["vr"].dtype),
+                      "vc": vc.astype(f["vc"].dtype)}
+            else:
+                v = beta * f["v"].astype(jnp.float32) + (1 - beta) * g2
+                step_ = g / (jnp.sqrt(v) + c.eps)
+                nf = {"v": v.astype(f["v"].dtype)}
+            # update clipping (Adafactor RMS-1 rule)
+            rms = jnp.sqrt(jnp.mean(step_ * step_) + 1e-30)
+            step_ = step_ / jnp.maximum(1.0, rms)
+            new_p = (p.astype(jnp.float32)
+                     - lr * (step_ + c.weight_decay * p.astype(jnp.float32)))
+            return new_p.astype(p.dtype), nf
+
+        flat, tdef = jax.tree_util.tree_flatten(params)
+        gflat = jax.tree_util.tree_flatten(grads)[0]
+        fflat = jax.tree_util.tree_flatten(
+            state["f"], is_leaf=lambda x: isinstance(x, dict) and
+            ("v" in x or "vr" in x))[0]
+        outs = [_chunked_leafwise(upd, p, g, f)
+                for p, g, f in zip(flat, gflat, fflat)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_f = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        return new_p, {"f": new_f}
+
+
+class _SGDM(_Opt):
+    def init(self, params):
+        dt = np.dtype(self.cfg.state_dtype)
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)}
+
+    def update(self, grads, state, params, step):
+        c = self.cfg
+        lr = cosine_schedule(c, step)
+
+        def upd(p, g, m):
+            mf = c.b1 * m.astype(jnp.float32) + g.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * mf
+            return new_p.astype(p.dtype), mf.astype(m.dtype)
+
+        out = jax.tree.map(upd, params, grads, state["m"])
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda o: isinstance(o, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda o: isinstance(o, tuple))
+        return new_p, {"m": new_m}
+
+
+def make_optimizer(cfg: OptConfig) -> _Opt:
+    return {"adamw": _AdamW, "adafactor": _Adafactor,
+            "sgdm": _SGDM}[cfg.kind](cfg)

@@ -1,0 +1,45 @@
+"""Tests for the AME baseline (paper §III-C)."""
+
+import numpy as np
+import pytest
+
+from repro.core import ame, dce
+
+
+@pytest.mark.parametrize("d", [4, 16, 100])
+def test_comparison_sign_exactness(d):
+    rng = np.random.default_rng(d)
+    key = ame.keygen(d, seed=d)
+    P = rng.standard_normal((24, d))
+    Q = rng.standard_normal((2, d))
+    U, V = ame.encrypt(P, key, dtype=np.float64)
+    W = ame.trapgen(Q, key, dtype=np.float64)
+    for qi in range(2):
+        dist = ((P - Q[qi]) ** 2).sum(-1)
+        Z = ame.compare(U[:, None], V[None, :], W[qi])
+        true = dist[:, None] - dist[None, :]
+        ok = (np.sign(Z) == np.sign(true)) | (np.abs(true) < 1e-8)
+        assert ok.all()
+
+
+def test_ciphertext_shapes_match_paper():
+    """32 vectors per DB vector, 16 matrices per query, all in R^(2d+6)."""
+    d = 10
+    m = 2 * d + 6
+    key = ame.keygen(d)
+    P = np.random.default_rng(0).standard_normal((3, d))
+    U, V = ame.encrypt(P, key)
+    W = ame.trapgen(P[:1], key)
+    assert U.shape == (3, 16, m) and V.shape == (3, 16, m)   # 32 vectors
+    assert W.shape == (1, 16, m, m)                          # 16 matrices
+    assert key.Ma.shape[0] + key.Mb.shape[0] == 32           # 32 key matrices
+
+
+def test_cost_model_vs_dce():
+    """AME per-comparison MACs = 64 d^2 + 416 d + 672 (paper: +676): O(d^2)
+    vs DCE's 4d+32 = O(d) — the asymmetry behind Fig. 6's >=100x speedup."""
+    for d in [96, 128, 960]:
+        c_ame = ame.mac_cost_per_comparison(d)
+        c_dce = dce.mac_cost_per_comparison(d)
+        assert c_ame == 64 * d * d + 416 * d + 672
+        assert c_ame / c_dce > 15 * d / 4       # superlinear separation

@@ -1,0 +1,129 @@
+"""Checkpointing (atomic commit, resume, elastic remesh) and fault
+tolerance (failure injection + straggler mitigation)."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (cleanup_old, latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.ft import ResilientRunner, RetryPolicy, StragglerWatchdog
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 8)),
+            "b": {"c": jnp.arange(5, dtype=jnp.int32),
+                  "d": jnp.float32(3.5)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    assert latest_step(str(tmp_path)) == 3
+    r, manifest = restore_checkpoint(str(tmp_path), t)
+    assert manifest["step"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_crash_mid_save_leaves_no_corrupt_checkpoint(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    # simulate a crash: a stale tmp dir with partial contents
+    tmp_dir = tmp_path / "step_00000002.tmp-9999"
+    tmp_dir.mkdir()
+    (tmp_dir / "arr_00000.npy").write_bytes(b"partial")
+    assert latest_step(str(tmp_path)) == 1          # tmp dirs are invisible
+    r, m = restore_checkpoint(str(tmp_path), t)
+    assert m["step"] == 1
+    cleanup_old(str(tmp_path), keep=3)
+    assert not tmp_dir.exists()
+
+
+def test_cleanup_keeps_newest(tmp_path):
+    t = _tree()
+    for s in [1, 2, 3, 4]:
+        save_checkpoint(str(tmp_path), s, t)
+    cleanup_old(str(tmp_path), keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_elastic_restore_onto_mesh(tmp_path):
+    """Restore device_puts with the restoring mesh's shardings — the same
+    path covers scale-up/down (elastic)."""
+    from jax.sharding import PartitionSpec as P
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_checkpoint(str(tmp_path), 1, t, mesh=None)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    r, _ = restore_checkpoint(str(tmp_path), t, mesh=mesh,
+                              pspecs={"w": P("data", None)})
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))
+    assert r["w"].sharding.spec == P("data", None)
+
+
+def test_resilient_runner_recovers_from_injected_failures(tmp_path):
+    """Steps fail at injected points; the runner restores the latest
+    checkpoint and replays to completion with identical final state."""
+    saves = {}
+
+    def save_fn(step, state):
+        saves[step] = state
+
+    def restore_fn():
+        step = max(saves)
+        return step, saves[step]
+
+    fail_at = {7, 13}
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if state + 1 in fail_at and calls["n"] not in getattr(
+                step_fn, "_recovered", set()):
+            fail_at.discard(state + 1)      # fail once per point
+            raise RuntimeError("injected chip failure")
+        return state + 1, {"loss": float(batch)}
+
+    runner = ResilientRunner(step_fn, save_fn, restore_fn,
+                             RetryPolicy(max_restarts=5),
+                             checkpoint_every=5)
+    save_fn(0, 0)
+    state, step, _ = runner.run(0, 0, 20, get_batch=lambda s: s)
+    assert state == 20 and step == 20
+    assert runner.failures_seen == 2
+
+
+def test_resilient_runner_gives_up_after_max_restarts():
+    def step_fn(state, batch):
+        raise RuntimeError("hard failure")
+
+    runner = ResilientRunner(step_fn, lambda s, st: None, lambda: (0, 0),
+                             RetryPolicy(max_restarts=2))
+    with pytest.raises(RuntimeError):
+        runner.run(0, 0, 5, get_batch=lambda s: s)
+    assert runner.failures_seen == 3
+
+
+def test_straggler_watchdog_redispatches():
+    wd = StragglerWatchdog(factor=3.0, min_deadline_s=0.02)
+    for _ in range(8):
+        wd.observe(0.01)                     # healthy baseline
+
+    def fast():
+        return "ok"
+
+    def slow():
+        time.sleep(0.12)
+        return "slow-result"
+
+    results = wd.run_sharded([fast, fast, slow, fast],
+                             fallback_fn=lambda i: f"backup-{i}")
+    assert results == ["ok", "ok", "backup-2", "ok"]
+    assert wd.redispatches == 1

@@ -1,0 +1,130 @@
+"""Property tests for DCE (paper §IV, Theorem 3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dce
+
+
+def _exact_sq_dists(P, q):
+    return ((P - q) ** 2).sum(-1)
+
+
+@pytest.mark.parametrize("d", [2, 3, 7, 16, 96, 100, 128, 960])
+def test_theorem3_sign_exactness(d):
+    """sign(Z) == sign(dist(o,q) - dist(p,q)) for all pairs (Theorem 3)."""
+    rng = np.random.default_rng(d)
+    key = dce.keygen(d, seed=d)
+    P = rng.standard_normal((40, d)) * rng.uniform(0.5, 5.0)
+    Q = rng.standard_normal((4, d))
+    C = dce.encrypt(P, key, seed=1, dtype=np.float64)
+    T = dce.trapgen(Q, key, seed=2, dtype=np.float64)
+    for qi in range(Q.shape[0]):
+        dist = _exact_sq_dists(P, Q[qi])
+        Z = dce.pairwise_z_matrix(C, T[qi])
+        true = dist[:, None] - dist[None, :]
+        ok = (np.sign(Z) == np.sign(true)) | (np.abs(true) < 1e-8)
+        assert ok.all()
+
+
+@pytest.mark.parametrize("d", [8, 128, 960])
+def test_float32_server_side_sign_fidelity(d):
+    """Server-side f32 comparisons keep the sign whenever the true distance
+    gap is non-negligible (orthogonal-key conditioning, see dce.py)."""
+    rng = np.random.default_rng(d + 1)
+    key = dce.keygen(d, seed=d)
+    P = rng.standard_normal((64, d))
+    Q = rng.standard_normal((2, d))
+    C = dce.encrypt(P, key, seed=1)           # float32
+    T = dce.trapgen(Q, key, seed=2)
+    for qi in range(2):
+        dist = _exact_sq_dists(P, Q[qi])
+        Z = dce.pairwise_z_matrix(C.astype(np.float32), T[qi])
+        true = dist[:, None] - dist[None, :]
+        gap = np.abs(true) / (np.abs(dist[:, None]) + np.abs(dist[None, :]) + 1e-9)
+        meaningful = gap > 1e-3
+        assert (np.sign(Z) == np.sign(true))[meaningful].all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(min_value=2, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.floats(min_value=0.01, max_value=100.0),
+)
+def test_property_random_dims_and_scales(d, seed, scale):
+    """Hypothesis sweep: arbitrary dims/scales/seeds preserve Theorem 3."""
+    rng = np.random.default_rng(seed)
+    key = dce.keygen(d, seed=seed)
+    P = rng.standard_normal((12, d)) * scale
+    q = rng.standard_normal((1, d)) * scale
+    C = dce.encrypt(P, key, seed=seed + 1, dtype=np.float64)
+    T = dce.trapgen(q, key, seed=seed + 2, dtype=np.float64)
+    dist = _exact_sq_dists(P, q[0])
+    Z = dce.pairwise_z_matrix(C, T[0])
+    true = dist[:, None] - dist[None, :]
+    rel = np.abs(true) / (np.abs(dist[:, None]) + np.abs(dist[None, :]) + 1e-30)
+    ok = (np.sign(Z) == np.sign(true)) | (rel < 1e-9)
+    assert ok.all()
+
+
+def test_z_scale_is_query_and_pair_dependent():
+    """Z = 2 r_o r_p r_q (d_oq - d_pq): the multiplier varies per (o,p) pair
+    — the scheme leaks the comparison *sign*, not the distance gap."""
+    d = 16
+    rng = np.random.default_rng(0)
+    key = dce.keygen(d, seed=0)
+    P = rng.standard_normal((20, d))
+    q = rng.standard_normal((1, d))
+    C = dce.encrypt(P, key, seed=1, dtype=np.float64)
+    T = dce.trapgen(q, key, seed=2, dtype=np.float64)
+    dist = _exact_sq_dists(P, q[0])
+    Z = dce.pairwise_z_matrix(C, T[0])
+    true = dist[:, None] - dist[None, :]
+    mask = np.abs(true) > 1e-6
+    ratio = Z[mask] / true[mask]
+    assert ratio.min() > 0                       # positive multiplier ...
+    assert ratio.max() / ratio.min() > 1.05      # ... but not a constant one
+
+
+def test_ciphertext_shapes_and_cost_model():
+    d = 100
+    key = dce.keygen(d)
+    P = np.random.default_rng(0).standard_normal((5, d))
+    C = dce.encrypt(P, key)
+    T = dce.trapgen(P[:2], key)
+    assert C.shape == (5, 4, dce.ciphertext_dim(d))
+    assert T.shape == (2, dce.ciphertext_dim(d))
+    # paper §IV-B: DB ciphertext 8d+64 floats, trapdoor 2d+16, 4d+32 MACs
+    assert 4 * dce.ciphertext_dim(d) == 8 * d + 64
+    assert dce.mac_cost_per_comparison(d) == 4 * d + 32
+
+
+def test_scores_vs_pivot_matches_distance_comp():
+    d = 32
+    rng = np.random.default_rng(7)
+    key = dce.keygen(d, seed=7)
+    P = rng.standard_normal((30, d))
+    q = rng.standard_normal((1, d))
+    C = dce.encrypt(P, key, seed=1, dtype=np.float64)
+    T = dce.trapgen(q, key, seed=2, dtype=np.float64)[0]
+    pivot = C[17]
+    want = np.array([dce.distance_comp(C[i], pivot, T) for i in range(30)])
+    got = dce.scores_vs_pivot(C[:, 0], C[:, 1], pivot[2], pivot[3], T)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def test_odd_dimension_padding():
+    d = 13
+    rng = np.random.default_rng(3)
+    key = dce.keygen(d, seed=3)
+    P = rng.standard_normal((10, d))
+    q = rng.standard_normal((1, d))
+    C = dce.encrypt(P, key, seed=1, dtype=np.float64)
+    T = dce.trapgen(q, key, seed=2, dtype=np.float64)
+    dist = _exact_sq_dists(P, q[0])
+    Z = dce.pairwise_z_matrix(C, T[0])
+    true = dist[:, None] - dist[None, :]
+    ok = (np.sign(Z) == np.sign(true)) | (np.abs(true) < 1e-9)
+    assert ok.all()

@@ -1,0 +1,75 @@
+"""Property tests for DCPE / Scale-and-Perturb (paper §III-B, Def. 3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dcpe
+
+
+@pytest.mark.parametrize("d", [8, 96, 128, 960])
+def test_perturbation_radius_bound(d):
+    """||C_p - s p|| <= s*beta/4 — Algorithm 1 draws lambda in that ball."""
+    rng = np.random.default_rng(d)
+    P = rng.standard_normal((200, d))
+    key = dcpe.keygen(s=1024.0, beta=2.0)
+    C = dcpe.encrypt(P, key, seed=0).astype(np.float64)
+    radius = np.linalg.norm(C - key.s * P, axis=1)
+    assert (radius <= key.s * key.beta / 4.0 + 1e-3).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=2, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    beta=st.floats(min_value=0.1, max_value=8.0),
+)
+def test_beta_dcp_property(d, seed, beta):
+    """Def. 3: dist(o,q) < dist(p,q) - beta  =>  encrypted comparison agrees
+    (metric distances; the +-s*beta/2 sandwich makes this deterministic)."""
+    rng = np.random.default_rng(seed)
+    key = dcpe.keygen(s=64.0, beta=beta)
+    O = rng.standard_normal((30, d)) * 3
+    P = rng.standard_normal((30, d)) * 3
+    q = rng.standard_normal((1, d)) * 3
+    C_O = dcpe.encrypt(O, key, seed=1).astype(np.float64)
+    C_P = dcpe.encrypt(P, key, seed=2).astype(np.float64)
+    C_q = dcpe.encrypt(q, key, seed=3).astype(np.float64)[0]
+    d_o = np.linalg.norm(O - q, axis=1)
+    d_p = np.linalg.norm(P - q, axis=1)
+    e_o = np.linalg.norm(C_O - C_q, axis=1)
+    e_p = np.linalg.norm(C_P - C_q, axis=1)
+    sep = d_o < d_p - beta                      # beta-separated pairs
+    assert (e_o[sep] < e_p[sep]).all()
+
+
+def test_distance_approximation_sandwich():
+    """s*dist - s*beta/2 <= enc_dist <= s*dist + s*beta/2."""
+    rng = np.random.default_rng(0)
+    d = 32
+    key = dcpe.keygen(s=128.0, beta=1.5)
+    P = rng.standard_normal((100, d))
+    q = rng.standard_normal((1, d))
+    C = dcpe.encrypt(P, key, seed=1).astype(np.float64)
+    Cq = dcpe.encrypt(q, key, seed=2).astype(np.float64)[0]
+    true = key.s * np.linalg.norm(P - q, axis=1)
+    enc = np.linalg.norm(C - Cq, axis=1)
+    slack = key.s * key.beta / 2.0 + 1e-3
+    assert (enc <= true + slack).all() and (enc >= true - slack).all()
+
+
+def test_beta_bounds_and_suggestion():
+    rng = np.random.default_rng(1)
+    P = rng.standard_normal((50, 16)) * 2
+    lo, hi = dcpe.beta_bounds(P)
+    assert 0 < lo < hi
+    b = dcpe.suggest_beta(P, fraction=0.05)
+    assert lo <= b <= hi
+
+
+def test_same_dim_and_cost_as_plaintext():
+    """DCPE ciphertexts keep dimension d — filter-phase distances cost the
+    same as plaintext distances (paper §III-B)."""
+    P = np.random.default_rng(2).standard_normal((7, 48))
+    C = dcpe.encrypt(P, dcpe.keygen(beta=1.0), seed=0)
+    assert C.shape == P.shape

@@ -1,0 +1,135 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracle.
+
+Shape/dtype sweeps per the repo conventions; hypothesis drives extra
+irregular shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dce
+from repro.kernels.dce_comp import ops as dce_ops
+from repro.kernels.dce_comp import ref as dce_ref
+from repro.kernels.l2_topk import ops as l2_ops
+from repro.kernels.l2_topk import ref as l2_ref
+
+
+# ---------------------------------------------------------------- l2_topk
+
+@pytest.mark.parametrize("nq,n,d", [
+    (1, 1, 2), (3, 17, 5), (8, 128, 64), (16, 300, 100),
+    (128, 256, 128), (5, 1000, 960), (130, 513, 96),
+])
+def test_l2_kernel_matches_ref_shapes(nq, n, d):
+    rng = np.random.default_rng(nq * 1000 + n + d)
+    Q = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    got = l2_ops.pairwise_sq_dists(Q, X, interpret=True)
+    want = l2_ref.pairwise_sq_dists(Q, X)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [
+    (jnp.float32, 1e-4), (jnp.bfloat16, 0.3),
+])
+def test_l2_kernel_dtype_sweep(dtype, tol):
+    rng = np.random.default_rng(0)
+    Q = jnp.asarray(rng.standard_normal((9, 40)), dtype)
+    X = jnp.asarray(rng.standard_normal((77, 40)), dtype)
+    got = l2_ops.pairwise_sq_dists(Q, X, interpret=True)
+    want = l2_ref.pairwise_sq_dists(Q.astype(jnp.float32),
+                                    X.astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nq=st.integers(1, 40), n=st.integers(1, 200), d=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_l2_kernel_property(nq, n, d, seed):
+    rng = np.random.default_rng(seed)
+    Q = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    got = l2_ops.pairwise_sq_dists(Q, X, interpret=True)
+    want = l2_ref.pairwise_sq_dists(Q, X)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,k,chunk", [(100, 5, 32), (1000, 10, 256),
+                                       (257, 20, 64)])
+def test_knn_streaming_matches_exact(n, k, chunk):
+    rng = np.random.default_rng(n)
+    Q = jnp.asarray(rng.standard_normal((7, 24)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((n, 24)), jnp.float32)
+    dk, ik = l2_ops.knn(Q, X, k, chunk=chunk, interpret=True)
+    dr, ir = l2_ref.knn(Q, X, k)
+    np.testing.assert_allclose(dk, dr, rtol=1e-4, atol=1e-4)
+    assert (ik == ir).mean() > 0.99     # ties may permute equal distances
+    # distances at returned indices must match exactly
+    np.testing.assert_allclose(
+        np.take_along_axis(np.asarray(l2_ref.pairwise_sq_dists(Q, X)),
+                           np.asarray(ik), axis=1),
+        dr, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- dce_comp
+
+def _make_cipher(n, d, seed):
+    rng = np.random.default_rng(seed)
+    key = dce.keygen(d, seed=seed)
+    P = rng.standard_normal((n, d))
+    q = rng.standard_normal((1, d))
+    C = dce.encrypt(P, key, seed=seed + 1)
+    T = dce.trapgen(q, key, seed=seed + 2)[0]
+    dists = ((P - q[0]) ** 2).sum(-1)
+    return jnp.asarray(C), jnp.asarray(T), dists
+
+
+@pytest.mark.parametrize("n,d", [(4, 4), (60, 17), (128, 96),
+                                 (200, 128), (50, 960)])
+def test_z_matrix_kernel_matches_ref(n, d):
+    C, T, _ = _make_cipher(n, d, seed=n + d)
+    got = dce_ops.z_matrix(C, T, interpret=True)
+    want = dce_ref.z_matrix(C, T)
+    # Z is a difference of two large matmul terms (catastrophic-cancellation
+    # by design: the randomness cancels); compare against the *gross* term
+    # scale, which bounds f32 accumulation-order noise.
+    gross = float(jnp.abs((C[:, 0, :] * T) @ C[:, 2, :].T).max())
+    atol = 3e-6 * gross * np.sqrt(C.shape[-1]) + 1e-4
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=atol)
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 32, 10), (150, 100, 7)])
+def test_tournament_topk_is_exact_knn(n, d, k):
+    """The kernel-ranked top-k equals the true distance ordering (up to f32
+    near-ties: any index swap must involve distances equal to ~1e-4 rel)."""
+    C, T, dists = _make_cipher(n, d, seed=n)
+    idx = np.asarray(dce_ops.top_k_by_wins(C, T, k, interpret=True))
+    true = np.argsort(dists)[:k]
+    got_d = np.sort(dists[idx])
+    want_d = np.sort(dists[true])
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 80), d=st.integers(2, 48),
+       seed=st.integers(0, 2**31 - 1))
+def test_z_matrix_property(n, d, seed):
+    C, T, _ = _make_cipher(n, d, seed=seed)
+    got = dce_ops.z_matrix(C, T, interpret=True)
+    want = dce_ref.z_matrix(C, T)
+    np.testing.assert_allclose(got, want, rtol=1e-4,
+                               atol=1e-3 * float(np.abs(want).max() + 1))
+
+
+def test_kernel_blockspec_alignment():
+    """Non-multiple-of-block shapes round-trip through padding unharmed."""
+    C, T, dists = _make_cipher(130, 33, seed=9)
+    Z = np.asarray(dce_ops.z_matrix(C, T, block=128, interpret=True))
+    true = dists[:, None] - dists[None, :]
+    ok = (np.sign(Z) == np.sign(true)) | (np.abs(true) < 1e-5)
+    assert ok.mean() > 0.999

@@ -1,0 +1,66 @@
+"""Secure-scan step correctness (the paper-technique dry-run cell) and the
+bf16-filter hillclimb's recall-safety property."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dce, dcpe, ppanns
+from repro.data import synth
+from repro.serving.secure_scan import (build_secure_scan_step,
+                                       build_secure_scan_step_gspmd)
+
+
+def _setup(n=1200, nq=8, seed=11):
+    ds = synth.make_dataset("deep1m", n=n, n_queries=nq, k_gt=20, seed=seed)
+    owner = ppanns.DataOwner(d=ds.d, sap_beta=0.5, seed=seed)
+    C_sap = dcpe.encrypt(ds.base, owner.keys.sap_key, seed=seed + 1)
+    C_dce = dce.encrypt(ds.base, owner.keys.dce_key, seed=seed + 2)
+    user = ppanns.User(owner.share_keys())
+    qs, ts = zip(*(user.encrypt_query(q) for q in ds.queries))
+    return ds, C_sap, C_dce, np.stack(qs), np.stack(ts)
+
+
+def test_shard_map_step_matches_gspmd_step():
+    """Both formulations compute the same exact answer; they differ only
+    in collective structure (EXPERIMENTS.md §Perf cell 3)."""
+    ds, C_sap, C_dce, Q, T = _setup()
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    a = build_secure_scan_step(mesh, k=10, k_prime=64)
+    b = build_secure_scan_step_gspmd(mesh, k=10, k_prime=64)
+    ids_a = np.asarray(jax.jit(a)(C_sap, C_dce, Q, T))
+    ids_b = np.asarray(jax.jit(b)(C_sap, C_dce, Q, T))
+    for ra, rb in zip(ids_a, ids_b):
+        assert set(ra.tolist()) == set(rb.tolist())
+
+
+def test_scan_step_recall():
+    ds, C_sap, C_dce, Q, T = _setup()
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    step = build_secure_scan_step(mesh, k=10, k_prime=64)
+    ids = np.asarray(jax.jit(step)(C_sap, C_dce, Q, T))
+    rec = synth.recall_at_k(ids, ds.gt, 10)
+    assert rec >= 0.9, rec
+
+
+def test_bf16_filter_preserves_recall():
+    """§Perf cell 3 it.2: bf16 quantization of DCPE ciphertexts is ~1e-3
+    of the SAP perturbation radius — candidate sets are unchanged."""
+    ds, C_sap, C_dce, Q, T = _setup(n=2000, nq=10)
+    kp = 64
+
+    def cands(Cm, Qm):
+        out = []
+        for qi in range(Qm.shape[0]):
+            d = ((Cm - Qm[qi]) ** 2).sum(1)
+            out.append(set(np.argsort(d)[:kp].tolist()))
+        return out
+
+    c32 = cands(C_sap.astype(np.float32), Q.astype(np.float32))
+    Cb = np.asarray(jnp.asarray(C_sap, jnp.bfloat16), np.float32)
+    Qb = np.asarray(jnp.asarray(Q, jnp.bfloat16), np.float32)
+    c16 = cands(Cb, Qb)
+    overlap = np.mean([len(a & b) / kp for a, b in zip(c32, c16)])
+    assert overlap >= 0.97, overlap

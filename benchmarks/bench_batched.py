@@ -1,0 +1,47 @@
+"""Batched-engine throughput: flat / IVF / HNSW filter backends at
+several batch sizes (EXPERIMENTS.md §Perf cell 2).
+
+Not a paper figure — the paper serves queries one at a time; this table
+is the systems extension showing what the unified batched engine
+(DESIGN.md §2) buys: one jitted refine per batch instead of a per-query
+loop, with identical ids to the per-query path."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import synth
+from repro.serving.search_engine import (HNSWGraphFilter, SecureSearchEngine)
+
+from .common import row, system, timeit
+
+
+def run(n: int = 6000, batches=(1, 8, 32), k: int = 10) -> list[str]:
+    nq = max(batches)
+    ds, owner, user, server = system("sift1m", n, nq, beta_fraction=0.03)
+    enc = [user.encrypt_query(q) for q in ds.queries]
+    Q = np.stack([c for c, _ in enc])
+    T = np.stack([t for _, t in enc])
+
+    engines = {
+        "flat": SecureSearchEngine(server.db.C_sap, server.db.C_dce,
+                                   backend="flat"),
+        "ivf": SecureSearchEngine(server.db.C_sap, server.db.C_dce,
+                                  backend="ivf", n_partitions=64, nprobe=8),
+        "hnsw": SecureSearchEngine(server.db.C_sap, server.db.C_dce,
+                                   backend=HNSWGraphFilter(server.db.index)),
+    }
+
+    rows = []
+    for name, eng in engines.items():
+        for B in batches:
+            t, (ids, stats) = timeit(
+                eng.search_batch, Q[:B], T[:B], k,
+                ratio_k=8, ef_search=128, repeats=2)
+            rec = synth.recall_at_k(ids, ds.gt[:B], k)
+            rows.append(row(
+                f"batched/{name}/B={B}", 1e6 * t / B,
+                f"qps={B / t:.1f} recall={rec:.3f} "
+                f"dist_evals={stats.filter_dist_evals} "
+                f"cmp={stats.refine_comparisons}"))
+    return rows

@@ -1,7 +1,9 @@
 """Fig. 10 — scalability: latency vs database size at fixed recall.
 
 The paper sweeps 25M..100M; CPU-scaled here to 5k..40k with the same
-sublinearity check (HNSW latency ~ O(log n))."""
+sublinearity check (HNSW latency ~ O(log n)).  Alongside the paper's
+per-query walk we time the unified engine's batched path (DESIGN.md §2):
+same HNSW filter, one jitted refine for the whole batch."""
 
 from __future__ import annotations
 
@@ -31,6 +33,14 @@ def run(sizes=(5000, 10000, 20000, 40000), nq: int = 15) -> list[str]:
         lat[n] = t / nq
         rows.append(row(f"fig10/n={n}", 1e6 * t / nq,
                         f"recall={rec:.3f} qps={nq / t:.1f}"))
+
+        Q = np.stack([c for c, _ in enc])
+        T = np.stack([tq for _, tq in enc])
+        tb, (found_b, _) = timeit(server.search_batch, Q, T, 10,
+                                  ratio_k=8, ef_search=128, repeats=1)
+        np.testing.assert_array_equal(found_b, found)   # engine parity
+        rows.append(row(f"fig10/batched/n={n}", 1e6 * tb / nq,
+                        f"qps={nq / tb:.1f} speedup_x{t / tb:.2f}"))
     # sublinearity: latency growth should be far below linear in n
     n0, n1 = sizes[0], sizes[-1]
     growth = lat[n1] / lat[n0]

@@ -19,8 +19,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
-    from . import (bench_attacks, bench_baselines, bench_beta,
-                   bench_encrypt, bench_kernels, bench_ratio_k,
+    from . import (bench_attacks, bench_baselines, bench_batched,
+                   bench_beta, bench_encrypt, bench_kernels, bench_ratio_k,
                    bench_refine, bench_roofline, bench_scalability)
 
     suites = {
@@ -36,6 +36,8 @@ def main() -> None:
         "fig10_scalability": lambda: bench_scalability.run(
             sizes=(10000, 20000, 40000, 80000) if args.full
             else (5000, 10000, 20000, 40000)),
+        "batched_engine": lambda: bench_batched.run(
+            n=20000 if args.full else 6000),
         "sec3_attacks": lambda: bench_attacks.run(),
         "kernels": lambda: bench_kernels.run(),
         "roofline": lambda: bench_roofline.run(),

@@ -1,10 +1,12 @@
 """RAG / kNN-LM bridge: the paper's PP-ANNS as a first-class serving
 feature of the LM stack.
 
-An LM server decodes while a privacy-preserving retrieval sidecar serves
-k-NN over an *encrypted* embedding datastore (kNN-LM style: the datastore
-maps context embeddings -> next tokens; retrieved neighbors' targets blend
-with the LM logits).  The cloud host of the datastore never sees
+An LM server decodes while a privacy-preserving retrieval sidecar — the
+unified batched search engine (DESIGN.md §2) — serves k-NN over an
+*encrypted* embedding datastore (kNN-LM style: the datastore maps
+context embeddings -> next tokens; retrieved neighbors' targets blend
+with the LM logits).  Each decode step issues the whole batch of queries
+as ONE engine call; the cloud host of the datastore never sees
 embeddings, queries, or distances — only DCE comparison signs.
 
   PYTHONPATH=src python examples/rag_serving.py
@@ -19,7 +21,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import dce, dcpe, ppanns
 from repro.models import Model
-from repro.serving import DistributedSecureANN, LMServer
+from repro.serving import LMServer, SecureSearchEngine
 
 
 def main():
@@ -39,7 +41,7 @@ def main():
     C_sap = dcpe.encrypt(store_emb, owner.keys.sap_key, seed=2)
     C_dce = dce.encrypt(store_emb, owner.keys.dce_key, seed=3)
     user = ppanns.User(owner.share_keys())
-    ann = DistributedSecureANN(C_sap, C_dce)
+    ann = SecureSearchEngine(C_sap, C_dce, backend="flat")
 
     # ---- decode with secure retrieval at each step
     B, k, lam = 2, 8, 0.3
@@ -56,8 +58,8 @@ def main():
             jnp.take(params["embed"]["tokens"],
                      jnp.argmax(logits, -1), axis=0), np.float32)
         qs, ts_ = zip(*(user.encrypt_query(p) for p in probe))
-        nbr = ann.query_batch(np.stack(qs), np.stack(ts_), k=k)   # (B, k)
-        knn_tokens = store_tok[nbr]                               # (B, k)
+        nbr, _ = ann.search_batch(np.stack(qs), np.stack(ts_), k=k)  # (B, k)
+        knn_tokens = store_tok[nbr]                                  # (B, k)
 
         # kNN-LM blend: boost retrieved tokens' logits
         knn_logits = np.full(logits.shape, -1e30, np.float32)

@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""Docs link check: every `DESIGN.md §N` / `EXPERIMENTS.md §Name`
+reference in the source tree must resolve to a real section heading, and
+every benchmark module must be mapped in EXPERIMENTS.md.
+
+Run from the repo root:  python scripts/check_docs.py
+Exit code 0 = all references resolve.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SOURCE_DIRS = ["src", "tests", "benchmarks", "examples"]
+
+DESIGN_REF = re.compile(r"DESIGN\.md\s+§(\d+)")
+EXP_REF = re.compile(r"EXPERIMENTS\.md\s+§([\w-]+)")
+HEADING = re.compile(r"^#{2,}\s+§([\w-]+)", re.M)
+
+
+def _source_files():
+    for d in SOURCE_DIRS:
+        yield from (ROOT / d).rglob("*.py")
+
+
+def _headings(md: pathlib.Path) -> set[str]:
+    if not md.exists():
+        return set()
+    return set(HEADING.findall(md.read_text()))
+
+
+def main() -> int:
+    errors: list[str] = []
+
+    design_secs = _headings(ROOT / "DESIGN.md")
+    exp_secs = _headings(ROOT / "EXPERIMENTS.md")
+    for must in ("DESIGN.md", "EXPERIMENTS.md", "README.md"):
+        if not (ROOT / must).exists():
+            errors.append(f"missing {must}")
+
+    for f in _source_files():
+        text = f.read_text()
+        rel = f.relative_to(ROOT)
+        for n in DESIGN_REF.findall(text):
+            if n not in design_secs:
+                errors.append(f"{rel}: cites DESIGN.md §{n} "
+                              f"(have: {sorted(design_secs)})")
+        for name in EXP_REF.findall(text):
+            if name not in exp_secs:
+                errors.append(f"{rel}: cites EXPERIMENTS.md §{name} "
+                              f"(have: {sorted(exp_secs)})")
+
+    exp_text = (ROOT / "EXPERIMENTS.md").read_text() \
+        if (ROOT / "EXPERIMENTS.md").exists() else ""
+    for bench in sorted((ROOT / "benchmarks").glob("bench_*.py")):
+        if bench.name not in exp_text:
+            errors.append(f"EXPERIMENTS.md does not map {bench.name}")
+
+    if errors:
+        print("docs check FAILED:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n_refs = sum(len(DESIGN_REF.findall(f.read_text())) +
+                 len(EXP_REF.findall(f.read_text()))
+                 for f in _source_files())
+    print(f"docs check OK: {n_refs} section references resolve; "
+          f"DESIGN sections {sorted(design_secs)}; "
+          f"EXPERIMENTS sections {sorted(exp_secs)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

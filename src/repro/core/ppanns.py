@@ -7,25 +7,39 @@ Three roles:
   * User — receives the keys from the owner; per query computes the DCPE
     ciphertext C_SAP_q and the DCE trapdoor T_q (O(d^2) work, §V-C) and
     sends (C_SAP_q, T_q, k).
-  * Server — honest-but-curious; runs Algorithm 2: k'-ANN filter on the
-    DCPE-HNSW, then the exact DCE refine.  Never sees plaintexts or
-    distance values; only comparison signs (the proven leakage L).
+  * Server — honest-but-curious; runs Algorithm 2 (k'-ANN filter on the
+    DCPE-HNSW, then the exact DCE refine) as a thin wrapper over the
+    unified `serving.search_engine.SecureSearchEngine` (DESIGN.md §2):
+    `search` is the batch-of-one view of `search_batch`, so per-query and
+    batched results are identical by construction.  The server never sees
+    plaintexts or distance values; only comparison signs (the proven
+    leakage L).
 
 Communication (paper §V-C): user -> server is (36 d + O(1)) bytes/query,
-server -> user is 4k bytes of ids.  Both are measured in `Server.search`.
+server -> user is 4k bytes of ids.  Both are measured in `SearchStats`,
+which is shared with — and reported uniformly across — every engine
+backend (flat / IVF / HNSW).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
-from . import dce, dcpe, hnsw as hnsw_mod, secure_knn
+from . import dce, dcpe, hnsw as hnsw_mod
 
 __all__ = ["Keys", "EncryptedDatabase", "DataOwner", "User", "Server",
            "SearchStats", "build_system"]
+
+
+def __getattr__(name):
+    # Lazy re-export: SearchStats lives with the engine (serving layer);
+    # importing it eagerly here would make core <-> serving circular.
+    if name == "SearchStats":
+        from ..serving.search_engine import SearchStats
+        return SearchStats
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -45,15 +59,6 @@ class EncryptedDatabase:
     @property
     def n(self) -> int:
         return self.C_sap.shape[0]
-
-
-@dataclasses.dataclass
-class SearchStats:
-    latency_s: float
-    filter_dist_evals: int
-    refine_comparisons: int
-    bytes_up: int
-    bytes_down: int
 
 
 class DataOwner:
@@ -103,10 +108,22 @@ class User:
 
 
 class Server:
-    """Runs Algorithm 2 on ciphertexts only."""
+    """Runs Algorithm 2 on ciphertexts only.
 
-    def __init__(self, db: EncryptedDatabase):
+    A thin facade over the unified `SecureSearchEngine` with the paper's
+    HNSW filter backend: `search` wraps the engine's batch-of-one path
+    (so looped `search` and `search_batch` return identical ids), and
+    `refine="heap"` keeps the paper's sequential max-heap refine with its
+    comparison instrumentation.
+    """
+
+    def __init__(self, db: EncryptedDatabase, use_kernel: bool = True):
+        from ..serving.search_engine import (HNSWGraphFilter,
+                                             SecureSearchEngine)
         self.db = db
+        self.engine = SecureSearchEngine(
+            db.C_sap, db.C_dce, backend=HNSWGraphFilter(db.index),
+            use_kernel=use_kernel)
 
     def search(
         self,
@@ -115,32 +132,24 @@ class Server:
         k: int,
         ratio_k: float = 8.0,
         ef_search: int = 96,
-        refine: str = "heap",          # "heap" (paper) | "tournament" (TPU)
+        refine: str = "tournament",    # | "heap" (paper) | "none" (Fig. 6)
     ) -> tuple[np.ndarray, SearchStats]:
-        t0 = time.perf_counter()
-        k_prime = max(k, int(round(ratio_k * k)))
-        evals0 = self.db.index.n_dist_evals
-        # ---- filter phase: k'-ANN on HNSW over DCPE ciphertexts
-        cand_ids, _ = self.db.index.search(
-            C_sap_q, k_prime, ef=max(ef_search, k_prime))
-        # ---- refine phase: exact DCE comparisons among the candidates
-        C_cands = self.db.C_dce[cand_ids]
-        if refine == "heap":
-            ids, ncmp = secure_knn.refine_heap(C_cands, cand_ids, T_q, k)
-        elif refine == "tournament":
-            ids, ncmp = secure_knn.refine_tournament(C_cands, cand_ids, T_q, k)
-        elif refine == "none":        # HNSW(filter)-only baseline (Fig. 6)
-            ids, ncmp = cand_ids[:k], 0
-        else:
-            raise ValueError(refine)
-        stats = SearchStats(
-            latency_s=time.perf_counter() - t0,
-            filter_dist_evals=self.db.index.n_dist_evals - evals0,
-            refine_comparisons=ncmp,
-            bytes_up=C_sap_q.nbytes + T_q.nbytes + 4,
-            bytes_down=4 * len(ids),
-        )
-        return ids, stats
+        return self.engine.search(
+            np.asarray(C_sap_q), np.asarray(T_q), k, ratio_k=ratio_k,
+            ef_search=ef_search, refine=refine)
+
+    def search_batch(
+        self,
+        Q_sap: np.ndarray,
+        T_q: np.ndarray,
+        k: int,
+        ratio_k: float = 8.0,
+        ef_search: int = 96,
+    ) -> tuple[np.ndarray, SearchStats]:
+        """Batched Algorithm 2: HNSW filter per query (host graph walk),
+        one batched DCE tournament refine on the accelerator."""
+        return self.engine.search_batch(
+            Q_sap, T_q, k, ratio_k=ratio_k, ef_search=ef_search)
 
     # ------------------------------------------------- maintenance (§V-D)
 
@@ -148,12 +157,14 @@ class Server:
         node = self.db.index.insert(C_sap)
         self.db.C_sap = np.concatenate([self.db.C_sap, C_sap[None]], 0)
         self.db.C_dce = np.concatenate([self.db.C_dce, C_dce_vec[None]], 0)
+        self.engine.update_database(self.db.C_sap, self.db.C_dce)
         return node
 
     def delete(self, node: int):
         """Deletion needs no data-owner participation (paper §V-D)."""
         self.db.index.delete(node)
         self.db.C_dce[node] = 0.0     # scrub ciphertext
+        self.engine.update_database(self.db.C_sap, self.db.C_dce)
 
 
 def build_system(P: np.ndarray, beta_fraction: float = 0.05,

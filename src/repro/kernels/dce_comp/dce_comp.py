@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..common import LANE, interpret_default, pad_to
+from ..common import LANE, interpret_default, pad_to, padded_size
 
 DEFAULT_BLOCK = 128
 
@@ -79,3 +79,67 @@ def z_matrix(
         interpret=interpret,
     )(comps[0], comps[1], comps[2], comps[3], tp)
     return out[:n, :n]
+
+
+def _z_tile_kernel_batched(c1_ref, c2_ref, c3_ref, c4_ref, t_ref, out_ref):
+    """One (1, block_i, block_j) tile of the batched Z tensor.
+
+    Identical math to `_z_tile_kernel`, with a leading batch grid dim
+    selecting which query's candidate set and trapdoor are resident.
+    """
+    t = t_ref[...]                       # (1, D)
+    left1 = c1_ref[0] * t                # fused trapdoor scaling
+    left2 = c2_ref[0] * t
+    term1 = jax.lax.dot_general(
+        left1, c3_ref[0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    term2 = jax.lax.dot_general(
+        left2, c4_ref[0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[0] = term1 - term2
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def batched_z_matrix(
+    C: jnp.ndarray,
+    T: jnp.ndarray,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-query all-pairs Z tensors for a batch of candidate sets.
+
+    C: (B, n, 4, D) candidate ciphertexts, T: (B, D) trapdoors
+    -> (B, n, n) float32.  One pallas_call with grid (B, n/block, n/block);
+    each grid step touches one query's tiles, so VMEM per step matches the
+    unbatched kernel (refine candidate sets are small: n = k' ~ O(100)).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    B, n, four, D = C.shape
+    assert four == 4
+    Cf = C.astype(jnp.float32)
+    Tf = T.astype(jnp.float32)
+
+    blk = min(block, max(LANE, padded_size(n, LANE)))
+    Cp = pad_to(pad_to(Cf, 1, blk), 3, LANE)
+    Tp = pad_to(Tf, 1, LANE)
+    _, n_p, _, D_p = Cp.shape
+    comps = [Cp[:, :, i, :] for i in range(4)]   # (B, n_p, D_p) each
+
+    grid = (B, n_p // blk, n_p // blk)
+    out = pl.pallas_call(
+        _z_tile_kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk, D_p), lambda b, i, j: (b, i, 0)),  # C1 rows
+            pl.BlockSpec((1, blk, D_p), lambda b, i, j: (b, i, 0)),  # C2 rows
+            pl.BlockSpec((1, blk, D_p), lambda b, i, j: (b, j, 0)),  # C3 cols
+            pl.BlockSpec((1, blk, D_p), lambda b, i, j: (b, j, 0)),  # C4 cols
+            pl.BlockSpec((1, D_p), lambda b, i, j: (b, 0)),          # trapdoor
+        ],
+        out_specs=pl.BlockSpec((1, blk, blk), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, n_p, n_p), jnp.float32),
+        interpret=interpret,
+    )(comps[0], comps[1], comps[2], comps[3], Tp)
+    return out[:, :n, :n]

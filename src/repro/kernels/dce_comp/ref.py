@@ -32,3 +32,17 @@ def top_k_by_wins(C: jnp.ndarray, t: jnp.ndarray, k: int) -> jnp.ndarray:
     """Indices of the k closest candidates (descending win count)."""
     wins = win_counts(C, t)
     return jnp.argsort(-wins)[:k]
+
+
+def batched_z_matrix(C: jnp.ndarray, T: jnp.ndarray) -> jnp.ndarray:
+    """Per-query all-pairs Z tensors.  C: (B, n, 4, D), T: (B, D) ->
+    (B, n, n).  Pure-einsum formulation — also the GSPMD-friendly refine
+    used under mesh sharding (DESIGN.md §3), where a Pallas call over
+    gathered candidates would fight the partitioner."""
+    C = C.astype(jnp.float32)
+    T = T.astype(jnp.float32)
+    left1 = C[:, :, 0, :] * T[:, None, :]
+    left2 = C[:, :, 1, :] * T[:, None, :]
+    z1 = jnp.einsum("bkd,bjd->bkj", left1, C[:, :, 2, :])
+    z2 = jnp.einsum("bkd,bjd->bkj", left2, C[:, :, 3, :])
+    return z1 - z2

@@ -110,6 +110,15 @@ _COLL_RE = re.compile(
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() as a flat dict — newer jax returns the
+    dict directly, 0.4.x returns a one-element list of dicts."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def parse_collectives(hlo_text: str) -> dict:
     """Sum per-device bytes moved per collective kind.
 
@@ -282,7 +291,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0)),
             }
             print("memory_analysis:", ma)          # proves it fits
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         rec["cost"] = {"flops": float(ca.get("flops", -1)),
                        "bytes_accessed": float(ca.get("bytes accessed", -1))}
         print("cost_analysis:", {k: ca.get(k) for k in

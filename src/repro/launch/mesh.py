@@ -9,6 +9,17 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where this jax version
+    supports them (jax.sharding.AxisType is newer than 0.4.x; Auto is the
+    default behavior either way)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading 'pod'
     axis.  Batch shards over ('pod','data'): only DP gradient all-reduce
@@ -16,12 +27,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     TP stays intra-pod on 'model'."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever devices exist locally (tests / examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((n,), ("data",))

@@ -1,2 +1,27 @@
-from .engine import LMServer  # noqa: F401
-from .ann_server import DistributedSecureANN  # noqa: F401
+"""Serving layer: the unified secure-search engine, its mesh-sharded
+deployment, and the LM server.
+
+Exports resolve lazily so that light-weight users (e.g. core.ppanns
+importing the search engine) do not pull in the LM model stack.
+"""
+
+import importlib
+
+_EXPORTS = {
+    "LMServer": ".engine",
+    "DistributedSecureANN": ".ann_server",
+    "SecureSearchEngine": ".search_engine",
+    "SearchStats": ".search_engine",
+    "FlatScanFilter": ".search_engine",
+    "IVFScanFilter": ".search_engine",
+    "HNSWGraphFilter": ".search_engine",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        mod = importlib.import_module(_EXPORTS[name], __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

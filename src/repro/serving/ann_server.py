@@ -1,41 +1,41 @@
-"""Distributed privacy-preserving ANN serving — the paper's server role
-mapped onto a TPU mesh (DESIGN.md §3).
+"""Distributed privacy-preserving ANN serving — the unified search
+engine's filter-and-refine pipeline mapped onto a TPU mesh (DESIGN.md §3).
 
-Graph traversal doesn't shard; partition-pruned scans do.  Layout:
+Graph traversal doesn't shard; scans do.  Layout:
   * the DCPE ciphertexts and DCE ciphertexts are sharded row-wise across
     every mesh device (jax.device_put with a NamedSharding);
-  * an IVF coarse quantizer (built over DCPE ciphertexts — same privacy
-    envelope as the HNSW index) prunes partitions;
   * `query_batch` runs under jit on the mesh: each device computes local
-    filter distances (l2_topk kernel math), local top-k', then a global
-    merge; the refine phase runs the exact DCE tournament on the merged
-    candidate set.
+    filter distances (the l2_topk kernel's ||q||^2 - 2 q.x + ||x||^2
+    restructuring), a global top-k' merge prunes to the candidate sets;
+  * the refine phase is the engine's shared batched DCE tournament
+    (`serving.search_engine.refine_candidates`) — the einsum formulation
+    under a mesh (GSPMD partitions the gather + matmuls), the dce_comp
+    Pallas kernel on a single device.  There is no per-query Python loop
+    anywhere in the batched path.
 
-This gives the single-server PP-ANNS of the paper a data-parallel scan
-path whose distance evaluations ride the MXU — the 1000x-at-scale story.
+Single-host partition pruning (IVF) lives in the engine's IVFScanFilter
+backend; this module is the mesh-sharded deployment of the same pipeline
+— the 1000x-at-scale story of the single-server PP-ANNS design.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import dce
-from ..core.ivf import IVFIndex
+from .search_engine import refine_candidates
 
 __all__ = ["DistributedSecureANN"]
 
 
 class DistributedSecureANN:
-    """Sharded filter (DCPE distances) + exact refine (DCE tournament)."""
+    """Sharded filter (DCPE distances) + exact batched refine (DCE
+    tournament) — the mesh deployment of the unified search engine."""
 
     def __init__(self, C_sap: np.ndarray, C_dce: np.ndarray,
-                 mesh: Mesh | None = None, n_partitions: int = 0,
-                 axis: str | None = None):
+                 mesh: Mesh | None = None, axis: str | None = None):
         self.mesh = mesh
         self.n = C_sap.shape[0]
         if mesh is not None:
@@ -61,13 +61,10 @@ class DistributedSecureANN:
             self.C_sap = jnp.asarray(C_sap)
             self.C_dce = jnp.asarray(C_dce)
 
-        self.ivf = None
-        if n_partitions:
-            self.ivf = IVFIndex(n_clusters=n_partitions).build(
-                np.asarray(C_sap[: self.n]))
-
+        # Pallas refine on a single device; einsum refine under GSPMD
+        # (a pallas_call over mesh-sharded gathers fights the partitioner).
+        self._use_kernel = mesh is None
         self._filter = jax.jit(self._filter_impl, static_argnames=("kp",))
-        self._refine = jax.jit(self._refine_impl, static_argnames=("k",))
 
     # ---- filter phase: sharded DCPE distance scan + global top-k'
     def _filter_impl(self, Q_sap, kp: int):
@@ -77,26 +74,19 @@ class DistributedSecureANN:
         neg, idx = jax.lax.top_k(-d, kp)
         return -neg, idx
 
-    # ---- refine phase: exact DCE tournament on the candidate set
-    def _refine_impl(self, cand_C, T_q, k: int):
-        term1 = (cand_C[:, 0, :] * T_q) @ cand_C[:, 2, :].T
-        term2 = (cand_C[:, 1, :] * T_q) @ cand_C[:, 3, :].T
-        Z = term1 - term2
-        offdiag = ~jnp.eye(Z.shape[0], dtype=bool)
-        wins = ((Z < 0) & offdiag).sum(axis=1)
-        _, top = jax.lax.top_k(wins, k)
-        return top
-
     def query_batch(self, Q_sap: np.ndarray, T_q: np.ndarray, k: int,
                     ratio_k: float = 8.0):
         """Q_sap: (nq, d) DCPE-encrypted queries; T_q: (nq, 2d+16) DCE
-        trapdoors.  Returns ids (nq, k)."""
-        kp = int(max(k, round(ratio_k * k)))
+        trapdoors.  Returns ids (nq, k); -1 fills slots where fewer than
+        k real rows exist.  Filter and refine both run batched under jit
+        — no per-query host loop."""
+        kp = min(int(max(k, round(ratio_k * k))), self.n_padded)
         _, cand = self._filter(jnp.asarray(Q_sap), kp)   # (nq, kp)
-        cand = np.asarray(cand)
-        out = np.empty((cand.shape[0], k), np.int64)
-        for qi in range(cand.shape[0]):
-            ids = cand[qi]
-            local = self._refine(self.C_dce[ids], jnp.asarray(T_q[qi]), k)
-            out[qi] = ids[np.asarray(local)]
-        return out
+        valid = cand < self.n          # mask the +inf sentinel pad rows
+        ids = refine_candidates(self.C_dce, cand, jnp.asarray(T_q), valid,
+                                min(k, kp), self._use_kernel)
+        ids = np.asarray(ids, np.int64)
+        if ids.shape[1] < k:           # uniform (nq, k) contract: -1 fill
+            ids = np.pad(ids, ((0, 0), (0, k - ids.shape[1])),
+                         constant_values=-1)
+        return ids

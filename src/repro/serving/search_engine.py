@@ -1,0 +1,348 @@
+"""Unified batched secure filter-and-refine engine (DESIGN.md §2).
+
+This is the single search path behind every entry point in the repo:
+
+  filter:  a pluggable backend produces k' candidate ids per query —
+             * FlatScanFilter  — exhaustive scan via the l2_topk Pallas
+               kernel (chunked MXU tiles, no (nq, n) matrix in HBM);
+             * IVFScanFilter   — partition-pruned scan: host-side coarse
+               probe over DCPE ciphertext centroids, then one jitted
+               masked gather+scan over the probed rows;
+             * HNSWGraphFilter — host-side graph traversal (pointer
+               chasing stays on CPU, DESIGN.md §3).
+  refine:  one jitted batched DCE tournament over the candidate sets,
+           routed through the dce_comp Pallas kernel
+           (`batched_top_k_by_wins`) — no per-query Python loop.
+
+`SecureSearchEngine.search` is a thin batch-of-one wrapper over
+`search_batch`, so the per-query path (`core.ppanns.Server.search`) and
+the batched path provably return identical ids for every backend.  All
+backends report the same `SearchStats` (latency, distance evaluations,
+DCE comparisons, bytes up/down).
+
+Privacy envelope: every backend sees only DCPE filter ciphertexts and
+DCE refine ciphertexts / trapdoors — the engine never touches plaintexts
+or true distances, only ciphertext distances and comparison signs (the
+leakage proven in the paper, §VI).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import secure_knn
+from ..core.hnsw import HNSW
+from ..core.ivf import IVFIndex
+from ..kernels.dce_comp import ops as dce_ops
+from ..kernels.l2_topk import ops as l2_ops
+
+__all__ = ["SearchStats", "SecureSearchEngine", "FlatScanFilter",
+           "IVFScanFilter", "HNSWGraphFilter", "refine_candidates"]
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """Uniform per-call search accounting (single query or batch).
+
+    Communication model (paper §V-C): user -> server is the DCPE query
+    ciphertext + DCE trapdoor + k (4 bytes); server -> user is 4 bytes
+    per returned id.
+    """
+    latency_s: float
+    filter_dist_evals: int      # ciphertext distance evaluations (filter)
+    refine_comparisons: int     # DCE DistanceComp sign evaluations (refine)
+    bytes_up: int
+    bytes_down: int
+    n_queries: int = 1
+    backend: str = ""
+
+
+# ---------------------------------------------------------------------------
+# Batched refine — the one refine path every entry point routes through.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
+def refine_candidates(C_dce, cand, T, valid, k: int, use_kernel: bool = True):
+    """Exact DCE tournament refine of per-query candidate sets, batched.
+
+    C_dce: (n, 4, D) refine ciphertexts; cand: (nq, kp) candidate ids;
+    T: (nq, D) trapdoors; valid: (nq, kp) bool or None (padded-slot mask)
+    -> (nq, k) ids, ascending true distance; -1 marks slots where a query
+    had fewer than k real candidates (never a fabricated id).
+    use_kernel=False swaps the Pallas Z-matrix for the einsum oracle (the
+    GSPMD-safe formulation for mesh-sharded C_dce, see serving.ann_server).
+    """
+    Cc = jnp.take(C_dce, cand, axis=0)                  # (nq, kp, 4, D)
+    local = dce_ops.batched_top_k_by_wins(
+        Cc, T, k, valid=valid, use_kernel=use_kernel)   # (nq, k)
+    local = local.astype(cand.dtype)
+    ids = jnp.take_along_axis(cand, local, axis=1)
+    if valid is None:
+        return ids
+    vsel = jnp.take_along_axis(valid, local, axis=1)
+    return jnp.where(vsel, ids, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("kp",))
+def _masked_pruned_scan(C_sap, Q, cand, valid, kp: int):
+    """IVF filter inner loop: ciphertext distances over probed rows only.
+
+    Same ||q||^2 - 2 q.x + ||x||^2 restructuring as the l2_topk kernel,
+    with a per-query gather (each query probes different partitions) and
+    an invalid-slot mask.  Returns (ids, valid) of the per-query top-kp.
+    """
+    rows = jnp.take(C_sap, cand, axis=0)                # (nq, L, d)
+    qn = (Q * Q).sum(-1)[:, None]
+    xn = (rows * rows).sum(-1)
+    cross = jnp.einsum("qld,qd->ql", rows, Q)
+    d = jnp.where(valid, qn - 2.0 * cross + xn, jnp.inf)
+    kp = min(kp, d.shape[1])
+    _, pos = jax.lax.top_k(-d, kp)
+    return (jnp.take_along_axis(cand, pos, axis=1),
+            jnp.take_along_axis(valid, pos, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Filter backends.  Each returns (cand (nq, kp') int32, valid (nq, kp') bool,
+# n_dist_evals) given a batch of DCPE-encrypted queries.
+# ---------------------------------------------------------------------------
+
+class FlatScanFilter:
+    """Exhaustive Pallas l2_topk scan over all DCPE ciphertexts."""
+
+    name = "flat"
+
+    def __init__(self, use_kernel: bool = True, chunk: int = 4096):
+        self.use_kernel = use_kernel
+        self.chunk = chunk
+        self._C = None
+
+    def attach(self, C_sap: np.ndarray, engine: "SecureSearchEngine"):
+        self._C = jnp.asarray(C_sap)
+
+    def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
+        n = self._C.shape[0]
+        _, idx = l2_ops.knn(jnp.asarray(Q_sap, jnp.float32), self._C,
+                            min(kp, n), chunk=min(self.chunk, n),
+                            use_kernel=self.use_kernel)
+        cand = np.asarray(idx, np.int32)
+        valid = np.ones(cand.shape, bool)
+        return cand, valid, Q_sap.shape[0] * n
+
+
+class IVFScanFilter:
+    """Partition-pruned scan: coarse k-means probe + jitted masked scan.
+
+    The coarse quantizer is built over DCPE ciphertexts — the same privacy
+    envelope as the HNSW graph (centroids are functions of ciphertexts
+    only).  Probing is host-side (`IVFIndex.probe`, tiny: nq x
+    n_clusters); the per-row distance work rides the MXU path in
+    `_masked_pruned_scan`.
+    """
+
+    name = "ivf"
+
+    def __init__(self, n_partitions: int = 64, nprobe: int = 8,
+                 seed: int = 0):
+        self.n_partitions = n_partitions
+        self.nprobe = nprobe
+        self.seed = seed
+        self.ivf: IVFIndex | None = None
+        self._C = None
+
+    def attach(self, C_sap: np.ndarray, engine: "SecureSearchEngine"):
+        self._C = jnp.asarray(C_sap)
+        self.ivf = IVFIndex(n_clusters=min(self.n_partitions,
+                                           C_sap.shape[0]),
+                            seed=self.seed).build(C_sap)
+
+    def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
+        Q = np.asarray(Q_sap, np.float32)
+        nq = Q.shape[0]
+        cent = self.ivf.centroids
+        pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        # round the padded pool width up to a bucket so the jitted scan
+        # compiles once, not per distinct partition-combination width
+        L = max(kp, max(p.size for p in pools))
+        L = -(-L // 128) * 128
+        cand = np.zeros((nq, L), np.int32)
+        valid = np.zeros((nq, L), bool)
+        for qi, p in enumerate(pools):                      # id layout only
+            cand[qi, :p.size] = p
+            valid[qi, :p.size] = True
+        ids, vout = _masked_pruned_scan(
+            self._C, jnp.asarray(Q), jnp.asarray(cand), jnp.asarray(valid),
+            kp)
+        evals = sum(p.size for p in pools) + nq * cent.shape[0]
+        return np.asarray(ids), np.asarray(vout), evals
+
+
+class HNSWGraphFilter:
+    """Host-side HNSW traversal over DCPE ciphertexts (DESIGN.md §3).
+
+    Graph walks are sequential pointer chasing and stay on CPU even in
+    the TPU deployment; only the filter phase loops over queries — the
+    refine phase is batched regardless of backend.
+    """
+
+    name = "hnsw"
+
+    def __init__(self, index: HNSW):
+        self.index = index
+
+    def attach(self, C_sap: np.ndarray, engine: "SecureSearchEngine"):
+        pass                      # the graph already stores its ciphertexts
+
+    def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
+        nq = Q_sap.shape[0]
+        evals0 = self.index.n_dist_evals
+        cand = np.zeros((nq, kp), np.int32)
+        valid = np.zeros((nq, kp), bool)
+        for qi in range(nq):                    # graph traversal: host-side
+            ids, _ = self.index.search(np.asarray(Q_sap[qi]), kp,
+                                       ef=max(ef_search, kp))
+            cand[qi, :ids.size] = ids
+            valid[qi, :ids.size] = True
+        return cand, valid, self.index.n_dist_evals - evals0
+
+
+_BACKENDS = {"flat": FlatScanFilter, "ivf": IVFScanFilter}
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+
+class SecureSearchEngine:
+    """Batched filter-and-refine over an encrypted database.
+
+    backend: "flat" | "ivf" | a filter-backend instance (e.g.
+    `HNSWGraphFilter(index)` — pass the HNSW built by the data owner).
+    use_kernel=False drops to the einsum refine (GSPMD-safe / debugging).
+    """
+
+    def __init__(self, C_sap: np.ndarray, C_dce: np.ndarray, *,
+                 backend="flat", use_kernel: bool = True, **backend_kw):
+        if isinstance(backend, str):
+            if backend == "hnsw":
+                raise ValueError(
+                    "pass HNSWGraphFilter(index) explicitly: the graph is "
+                    "built by the data owner, not the engine")
+            backend = _BACKENDS[backend](**backend_kw)
+        self.backend = backend
+        self.use_kernel = use_kernel
+        self.update_database(C_sap, C_dce)
+
+    # -------------------------------------------------------------- state
+
+    @property
+    def n(self) -> int:
+        return self._C_sap.shape[0]
+
+    def update_database(self, C_sap: np.ndarray, C_dce: np.ndarray):
+        """(Re)load ciphertexts, e.g. after owner-side insert (§V-D).
+
+        Cheap: only marks backend acceleration state (device copies, IVF
+        centroids) dirty; the rebuild happens lazily on the next search,
+        so a burst of maintenance ops pays one refresh, not one per op."""
+        self._C_sap = np.asarray(C_sap)
+        self._C_dce = np.asarray(C_dce)
+        self._dirty = True
+
+    def _ensure_attached(self):
+        if self._dirty:
+            self._C_dce_dev = jnp.asarray(self._C_dce)
+            self.backend.attach(self._C_sap, self)
+            self._dirty = False
+
+    # ------------------------------------------------------------- search
+
+    def search_batch(self, Q_sap: np.ndarray, T_q: np.ndarray, k: int,
+                     ratio_k: float = 8.0, ef_search: int = 96,
+                     refine: str = "tournament"):
+        """Algorithm 2, batched: k'-ANN filter then exact DCE refine.
+
+        Q_sap: (nq, d) DCPE query ciphertexts; T_q: (nq, 2d+16) trapdoors.
+        Returns (ids (nq, k) int64, SearchStats); id -1 fills slots where
+        a query had fewer than k real candidates (tiny database, sparse
+        IVF probe).  refine: "tournament" (batched MXU tournament,
+        default) | "none" (filter-only baseline, Fig. 6).  The paper's
+        sequential heap refine is per-query only — use
+        `search(..., refine="heap")`.
+        """
+        t0 = time.perf_counter()
+        self._ensure_attached()
+        Q_sap = np.atleast_2d(np.asarray(Q_sap))
+        T_q = np.atleast_2d(np.asarray(T_q))
+        nq = Q_sap.shape[0]
+        kp = int(max(k, round(ratio_k * k)))
+        cand, valid, dist_evals = self.backend.candidates(
+            Q_sap, kp, ef_search)
+        if cand.shape[1] < k:       # uniform (nq, k) contract: -1 fill
+            pad = ((0, 0), (0, k - cand.shape[1]))
+            cand = np.pad(cand, pad)
+            valid = np.pad(valid, pad)
+
+        if refine == "tournament":
+            ids = np.asarray(refine_candidates(
+                self._C_dce_dev, jnp.asarray(cand), jnp.asarray(T_q),
+                jnp.asarray(valid), k, self.use_kernel), np.int64)
+            nv = valid.sum(axis=1)
+            ncmp = int((nv * (nv - 1)).sum())
+        elif refine == "none":          # filter-only baseline
+            ids = np.where(valid[:, :k], cand[:, :k], -1).astype(np.int64)
+            ncmp = 0
+        else:
+            raise ValueError(f"batched refine must be 'tournament' or "
+                             f"'none', got {refine!r}")
+
+        stats = SearchStats(
+            latency_s=time.perf_counter() - t0,
+            filter_dist_evals=int(dist_evals),
+            refine_comparisons=ncmp,
+            bytes_up=Q_sap.nbytes + T_q.nbytes + 4 * nq,
+            bytes_down=4 * ids.size,
+            n_queries=nq,
+            backend=self.backend.name,
+        )
+        return ids, stats
+
+    def search(self, C_sap_q: np.ndarray, T_q: np.ndarray, k: int,
+               ratio_k: float = 8.0, ef_search: int = 96,
+               refine: str = "tournament"):
+        """Single-query search: a batch-of-one view of `search_batch`
+        (identical ids by construction), plus the paper-faithful
+        sequential refine modes ("heap")."""
+        if refine in ("tournament", "none"):
+            ids, stats = self.search_batch(
+                C_sap_q[None], np.asarray(T_q)[None], k, ratio_k=ratio_k,
+                ef_search=ef_search, refine=refine)
+            return ids[0], stats
+
+        if refine != "heap":
+            raise ValueError(refine)
+        # paper Algorithm 2: max-heap keyed by DCE comparison signs
+        t0 = time.perf_counter()
+        self._ensure_attached()
+        kp = int(max(k, round(ratio_k * k)))
+        cand, valid, dist_evals = self.backend.candidates(
+            np.asarray(C_sap_q)[None], kp, ef_search)
+        cids = cand[0][valid[0]].astype(np.int64)
+        ids, ncmp = secure_knn.refine_heap(
+            self._C_dce[cids], cids, np.asarray(T_q), k)
+        stats = SearchStats(
+            latency_s=time.perf_counter() - t0,
+            filter_dist_evals=int(dist_evals),
+            refine_comparisons=int(ncmp),
+            bytes_up=np.asarray(C_sap_q).nbytes + np.asarray(T_q).nbytes + 4,
+            bytes_down=4 * len(ids),
+            n_queries=1,
+            backend=self.backend.name,
+        )
+        return ids, stats

@@ -1,4 +1,5 @@
-"""The paper's search, distribution-native: sharded secure scan step.
+"""The unified engine's search, distribution-native: the sharded
+secure-scan dry-run cell (DESIGN.md §3, §4).
 
 This is the dry-run cell that represents the paper's technique at
 production scale: the encrypted database (DCPE filter ciphertexts + DCE
@@ -7,14 +8,17 @@ encrypted queries runs
 
   filter:  per-shard L2 distance tiles (MXU) -> per-shard top-k'
            -> all-gather(k' candidates/shard) -> global top-k'   [shard_map]
-  refine:  gather candidates' DCE ciphertexts -> pairwise Z tournament
-           -> exact top-k                                        [GSPMD]
+  refine:  gather candidates' DCE ciphertexts -> the engine's shared
+           batched tournament (kernels.dce_comp.batched_top_k_by_wins,
+           einsum formulation) -> exact top-k                    [GSPMD]
 
-The shard_map filter is the explicit-collective formulation: per-device
-work is O(n/devices) and the only communication is k' rows per shard —
-this is what makes the paper's single-server design scale linearly in
-devices (§Perf discusses the alternative GSPMD-auto formulation, which
-all-gathers the (B, n) distance matrix).
+The refine math is the same code path the live engine
+(serving.search_engine) and the mesh server (serving.ann_server) run —
+this module only adds the explicit-collective filter formulation:
+per-device work is O(n/devices) and the only communication is k' rows
+per shard, which is what makes the paper's single-server design scale
+linearly in devices (EXPERIMENTS.md §Perf discusses the alternative
+GSPMD-auto formulation, which all-gathers the (B, n) distance matrix).
 """
 
 from __future__ import annotations
@@ -26,6 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+
+from ..kernels.dce_comp import ops as dce_ops
 
 __all__ = ["build_secure_scan_step", "secure_scan_input_specs"]
 
@@ -63,14 +69,7 @@ def build_secure_scan_step_gspmd(mesh: Mesh, *, k: int, k_prime: int):
         dist = qn - 2.0 * Q_sap @ C_sap.T + xn            # (B, n) global
         _, cand = jax.lax.top_k(-dist, k_prime)
         Cc = jnp.take(C_dce, cand, axis=0)
-        left1 = Cc[:, :, 0, :] * T_q[:, None, :]
-        left2 = Cc[:, :, 1, :] * T_q[:, None, :]
-        z1 = jnp.einsum("bkd,bjd->bkj", left1, Cc[:, :, 2, :])
-        z2 = jnp.einsum("bkd,bjd->bkj", left2, Cc[:, :, 3, :])
-        Z = z1 - z2
-        offdiag = ~jnp.eye(Z.shape[1], dtype=bool)[None]
-        wins = ((Z < 0) & offdiag).sum(-1)
-        _, top = jax.lax.top_k(wins, k)
+        top = dce_ops.batched_top_k_by_wins(Cc, T_q, k, use_kernel=False)
         return jnp.take_along_axis(cand, top, axis=1)
 
     return step
@@ -109,17 +108,9 @@ def build_secure_scan_step(mesh: Mesh, *, k: int, k_prime: int):
 
     def step(C_sap, C_dce, Q_sap, T_q):
         _, cand = filter_local(C_sap, Q_sap)              # (B, k')
-        # refine: exact DCE tournament over the candidate set (GSPMD gather)
+        # refine: the engine's shared batched tournament (GSPMD gather)
         Cc = jnp.take(C_dce, cand, axis=0)                # (B, k', 4, Dd)
-        left1 = Cc[:, :, 0, :] * T_q[:, None, :]
-        left2 = Cc[:, :, 1, :] * T_q[:, None, :]
-        z1 = jnp.einsum("bkd,bjd->bkj", left1, Cc[:, :, 2, :])
-        z2 = jnp.einsum("bkd,bjd->bkj", left2, Cc[:, :, 3, :])
-        Z = z1 - z2
-        kp = Z.shape[1]
-        offdiag = ~jnp.eye(kp, dtype=bool)[None]
-        wins = ((Z < 0) & offdiag).sum(-1)                # (B, k')
-        _, top = jax.lax.top_k(wins, k)
+        top = dce_ops.batched_top_k_by_wins(Cc, T_q, k, use_kernel=False)
         return jnp.take_along_axis(cand, top, axis=1)     # (B, k)
 
     return step

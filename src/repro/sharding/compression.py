@@ -27,6 +27,15 @@ __all__ = ["quantize_int8", "dequantize_int8", "int8_ring_allreduce",
            "make_int8_allreduce"]
 
 
+def _axis_size(axis_name: str) -> int:
+    """Static mapped-axis size; jax.lax.axis_size is newer than 0.4.x
+    (older jax exposes it via core.axis_frame)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)   # an int on 0.4.x
+    return frame if isinstance(frame, int) else frame.size
+
+
 def quantize_int8(x):
     """Symmetric per-tensor int8; returns (q int8, scale f32)."""
     amax = jnp.max(jnp.abs(x)) + 1e-12
@@ -47,7 +56,7 @@ def int8_ring_allreduce(x, axis_name: str):
     circulating the reduced int8 chunks.  Payload per hop = bytes/4 of the
     f32 equivalent.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if n == 1:
         return x
     idx = jax.lax.axis_index(axis_name)

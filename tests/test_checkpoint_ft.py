@@ -60,8 +60,8 @@ def test_elastic_restore_onto_mesh(tmp_path):
     from jax.sharding import PartitionSpec as P
     t = {"w": jnp.arange(16.0).reshape(4, 4)}
     save_checkpoint(str(tmp_path), 1, t, mesh=None)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     r, _ = restore_checkpoint(str(tmp_path), t, mesh=mesh,
                               pspecs={"w": P("data", None)})
     np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))

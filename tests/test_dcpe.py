@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import dcpe
 
@@ -16,31 +15,6 @@ def test_perturbation_radius_bound(d):
     C = dcpe.encrypt(P, key, seed=0).astype(np.float64)
     radius = np.linalg.norm(C - key.s * P, axis=1)
     assert (radius <= key.s * key.beta / 4.0 + 1e-3).all()
-
-
-@settings(max_examples=25, deadline=None)
-@given(
-    d=st.integers(min_value=2, max_value=64),
-    seed=st.integers(min_value=0, max_value=2**31 - 1),
-    beta=st.floats(min_value=0.1, max_value=8.0),
-)
-def test_beta_dcp_property(d, seed, beta):
-    """Def. 3: dist(o,q) < dist(p,q) - beta  =>  encrypted comparison agrees
-    (metric distances; the +-s*beta/2 sandwich makes this deterministic)."""
-    rng = np.random.default_rng(seed)
-    key = dcpe.keygen(s=64.0, beta=beta)
-    O = rng.standard_normal((30, d)) * 3
-    P = rng.standard_normal((30, d)) * 3
-    q = rng.standard_normal((1, d)) * 3
-    C_O = dcpe.encrypt(O, key, seed=1).astype(np.float64)
-    C_P = dcpe.encrypt(P, key, seed=2).astype(np.float64)
-    C_q = dcpe.encrypt(q, key, seed=3).astype(np.float64)[0]
-    d_o = np.linalg.norm(O - q, axis=1)
-    d_p = np.linalg.norm(P - q, axis=1)
-    e_o = np.linalg.norm(C_O - C_q, axis=1)
-    e_p = np.linalg.norm(C_P - C_q, axis=1)
-    sep = d_o < d_p - beta                      # beta-separated pairs
-    assert (e_o[sep] < e_p[sep]).all()
 
 
 def test_distance_approximation_sandwich():

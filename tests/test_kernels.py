@@ -1,14 +1,13 @@
 """Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracle.
 
-Shape/dtype sweeps per the repo conventions; hypothesis drives extra
-irregular shapes.
+Shape/dtype sweeps per the repo conventions; hypothesis-driven irregular
+shape sweeps live in test_properties.py (dev-only dependency).
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import dce
 from repro.kernels.dce_comp import ops as dce_ops
@@ -43,20 +42,6 @@ def test_l2_kernel_dtype_sweep(dtype, tol):
     want = l2_ref.pairwise_sq_dists(Q.astype(jnp.float32),
                                     X.astype(jnp.float32))
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
-
-
-@settings(max_examples=15, deadline=None)
-@given(
-    nq=st.integers(1, 40), n=st.integers(1, 200), d=st.integers(1, 80),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_l2_kernel_property(nq, n, d, seed):
-    rng = np.random.default_rng(seed)
-    Q = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
-    X = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
-    got = l2_ops.pairwise_sq_dists(Q, X, interpret=True)
-    want = l2_ref.pairwise_sq_dists(Q, X)
-    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
 
 
 @pytest.mark.parametrize("n,k,chunk", [(100, 5, 32), (1000, 10, 256),
@@ -113,17 +98,6 @@ def test_tournament_topk_is_exact_knn(n, d, k):
     got_d = np.sort(dists[idx])
     want_d = np.sort(dists[true])
     np.testing.assert_allclose(got_d, want_d, rtol=1e-4)
-
-
-@settings(max_examples=10, deadline=None)
-@given(n=st.integers(2, 80), d=st.integers(2, 48),
-       seed=st.integers(0, 2**31 - 1))
-def test_z_matrix_property(n, d, seed):
-    C, T, _ = _make_cipher(n, d, seed=seed)
-    got = dce_ops.z_matrix(C, T, interpret=True)
-    want = dce_ref.z_matrix(C, T)
-    np.testing.assert_allclose(got, want, rtol=1e-4,
-                               atol=1e-3 * float(np.abs(want).max() + 1))
 
 
 def test_kernel_blockspec_alignment():

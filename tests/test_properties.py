@@ -1,0 +1,107 @@
+"""Hypothesis property tests (DCE Theorem 3, DCPE Def. 3, Pallas kernels).
+
+All hypothesis-driven sweeps live in this one module, guarded by
+`pytest.importorskip`, so the deterministic tests in test_dce.py /
+test_dcpe.py / test_kernels.py still run when `hypothesis` is absent
+(it is a dev-only dependency; see requirements-dev.txt).
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import dce, dcpe  # noqa: E402
+from repro.kernels.dce_comp import ops as dce_ops  # noqa: E402
+from repro.kernels.dce_comp import ref as dce_ref  # noqa: E402
+from repro.kernels.l2_topk import ops as l2_ops  # noqa: E402
+from repro.kernels.l2_topk import ref as l2_ref  # noqa: E402
+
+
+def _exact_sq_dists(P, q):
+    return ((P - q) ** 2).sum(-1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(min_value=2, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.floats(min_value=0.01, max_value=100.0),
+)
+def test_dce_property_random_dims_and_scales(d, seed, scale):
+    """Hypothesis sweep: arbitrary dims/scales/seeds preserve Theorem 3."""
+    rng = np.random.default_rng(seed)
+    key = dce.keygen(d, seed=seed)
+    P = rng.standard_normal((12, d)) * scale
+    q = rng.standard_normal((1, d)) * scale
+    C = dce.encrypt(P, key, seed=seed + 1, dtype=np.float64)
+    T = dce.trapgen(q, key, seed=seed + 2, dtype=np.float64)
+    dist = _exact_sq_dists(P, q[0])
+    Z = dce.pairwise_z_matrix(C, T[0])
+    true = dist[:, None] - dist[None, :]
+    rel = np.abs(true) / (np.abs(dist[:, None]) + np.abs(dist[None, :]) + 1e-30)
+    ok = (np.sign(Z) == np.sign(true)) | (rel < 1e-9)
+    assert ok.all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=2, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    beta=st.floats(min_value=0.1, max_value=8.0),
+)
+def test_dcpe_beta_dcp_property(d, seed, beta):
+    """Def. 3: dist(o,q) < dist(p,q) - beta  =>  encrypted comparison agrees
+    (metric distances; the +-s*beta/2 sandwich makes this deterministic)."""
+    rng = np.random.default_rng(seed)
+    key = dcpe.keygen(s=64.0, beta=beta)
+    O = rng.standard_normal((30, d)) * 3
+    P = rng.standard_normal((30, d)) * 3
+    q = rng.standard_normal((1, d)) * 3
+    C_O = dcpe.encrypt(O, key, seed=1).astype(np.float64)
+    C_P = dcpe.encrypt(P, key, seed=2).astype(np.float64)
+    C_q = dcpe.encrypt(q, key, seed=3).astype(np.float64)[0]
+    d_o = np.linalg.norm(O - q, axis=1)
+    d_p = np.linalg.norm(P - q, axis=1)
+    e_o = np.linalg.norm(C_O - C_q, axis=1)
+    e_p = np.linalg.norm(C_P - C_q, axis=1)
+    sep = d_o < d_p - beta                      # beta-separated pairs
+    assert (e_o[sep] < e_p[sep]).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nq=st.integers(1, 40), n=st.integers(1, 200), d=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_l2_kernel_property(nq, n, d, seed):
+    rng = np.random.default_rng(seed)
+    Q = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    got = l2_ops.pairwise_sq_dists(Q, X, interpret=True)
+    want = l2_ref.pairwise_sq_dists(Q, X)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def _make_cipher(n, d, seed):
+    rng = np.random.default_rng(seed)
+    key = dce.keygen(d, seed=seed)
+    P = rng.standard_normal((n, d))
+    q = rng.standard_normal((1, d))
+    C = dce.encrypt(P, key, seed=seed + 1)
+    T = dce.trapgen(q, key, seed=seed + 2)[0]
+    return jnp.asarray(C), jnp.asarray(T)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 80), d=st.integers(2, 48),
+       seed=st.integers(0, 2**31 - 1))
+def test_z_matrix_property(n, d, seed):
+    C, T = _make_cipher(n, d, seed=seed)
+    got = dce_ops.z_matrix(C, T, interpret=True)
+    want = dce_ref.z_matrix(C, T)
+    np.testing.assert_allclose(got, want, rtol=1e-4,
+                               atol=1e-3 * float(np.abs(want).max() + 1))

@@ -36,8 +36,8 @@ _SUBPROC = textwrap.dedent("""
         get_config("qwen3-1.7b"), n_layers=1, remat=False, dtype="float32")
     sc = ShapeConfig("t", "train", 512, 8)
     model = Model(cfg)
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2), ("data", "model"))
     opt = OptConfig(kind="sgdm")
     step = build_train_step(model, opt, mesh, TRAIN_RULES, n_microbatches=1)
     st = abstract_train_state(model, opt)
@@ -48,7 +48,8 @@ _SUBPROC = textwrap.dedent("""
                                 is_leaf=lambda s: isinstance(s, P))
     lowered = jax.jit(step, in_shardings=(ns(sspec), ns(bspec))).lower(st, b)
     c = lowered.compile()
-    flops = c.cost_analysis().get("flops", -1) * 4     # per-device -> global
+    from repro.launch.dryrun import cost_analysis_dict
+    flops = cost_analysis_dict(c).get("flops", -1) * 4  # per-device -> global
     print("RESULT:" + json.dumps({"hlo_flops": flops}))
 """)
 

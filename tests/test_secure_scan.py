@@ -7,6 +7,7 @@ import numpy as np
 
 from repro.core import dce, dcpe, ppanns
 from repro.data import synth
+from repro.launch.mesh import make_mesh
 from repro.serving.secure_scan import (build_secure_scan_step,
                                        build_secure_scan_step_gspmd)
 
@@ -25,8 +26,7 @@ def test_shard_map_step_matches_gspmd_step():
     """Both formulations compute the same exact answer; they differ only
     in collective structure (EXPERIMENTS.md §Perf cell 3)."""
     ds, C_sap, C_dce, Q, T = _setup()
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     a = build_secure_scan_step(mesh, k=10, k_prime=64)
     b = build_secure_scan_step_gspmd(mesh, k=10, k_prime=64)
     ids_a = np.asarray(jax.jit(a)(C_sap, C_dce, Q, T))
@@ -37,8 +37,7 @@ def test_shard_map_step_matches_gspmd_step():
 
 def test_scan_step_recall():
     ds, C_sap, C_dce, Q, T = _setup()
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     step = build_secure_scan_step(mesh, k=10, k_prime=64)
     ids = np.asarray(jax.jit(step)(C_sap, C_dce, Q, T))
     rec = synth.recall_at_k(ids, ds.gt, 10)

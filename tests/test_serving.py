@@ -64,8 +64,8 @@ def test_distributed_secure_ann_on_mesh():
     C_sap = dcpe.encrypt(ds.base, owner.keys.sap_key, seed=7)
     C_dce = dce.encrypt(ds.base, owner.keys.dce_key, seed=8)
     user = ppanns.User(owner.share_keys())
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     eng = DistributedSecureANN(C_sap, C_dce, mesh=mesh)
     assert eng.n_padded % 1 == 0
     cs, tq = user.encrypt_query(ds.queries[0])

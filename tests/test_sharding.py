@@ -60,16 +60,17 @@ _SUBPROC = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import json, sys
     import jax
-    from repro.launch.dryrun import lower_cell, parse_collectives
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.dryrun import (cost_analysis_dict, lower_cell,
+                                     parse_collectives)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2), ("data", "model"))
     lowered, aux = lower_cell(sys.argv[1], sys.argv[2], mesh)
     compiled = lowered.compile()
     colls = parse_collectives(compiled.as_text())
     print("RESULT:" + json.dumps({
         "ok": True,
         "kinds": sorted(colls),
-        "flops": compiled.cost_analysis().get("flops", -1),
+        "flops": cost_analysis_dict(compiled).get("flops", -1),
     }))
 """)
 
@@ -105,8 +106,8 @@ def test_int8_ring_allreduce_subprocess():
         from jax.experimental.shard_map import shard_map
         from repro.sharding.compression import int8_ring_allreduce
         import functools
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("data",))
         x = jnp.arange(4 * 103, dtype=jnp.float32).reshape(4, 103) / 7.0
 
         ring = shard_map(functools.partial(

@@ -1,27 +1,66 @@
 """Benchmark harness — one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig6] [--full]
+      [--out-dir results/bench]
 
-Prints `name,us_per_call,derived` CSV rows (scaffold convention).
+Prints `name,us_per_call,derived` CSV rows (scaffold convention) and
+writes one machine-readable `BENCH_<suite>.json` per completed suite to
+`--out-dir` — the perf-trajectory record that later sessions diff
+against (EXPERIMENTS.md §Perf).
 Default sizes are CPU-feasible; --full enlarges toward paper scale.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
+
+
+def _parse_row(r: str) -> dict:
+    """'name,us,derived...' -> dict (derived may itself contain commas)."""
+    name, us, derived = r.split(",", 2)
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    return {"name": name, "us_per_call": us_val, "derived": derived}
+
+
+def write_suite_json(out_dir: pathlib.Path, suite: str, rows: list[str],
+                     wall_s: float, full: bool) -> pathlib.Path:
+    """BENCH_<suite>.json holds the latest run; history.jsonl accumulates
+    every run (one JSON object per line) — that append-only log is the
+    perf trajectory later sessions diff against."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"BENCH_{suite}.json"
+    payload = {
+        "suite": suite,
+        "unix_time": time.time(),
+        "wall_s": round(wall_s, 3),
+        "full": full,
+        "rows": [_parse_row(r) for r in rows],
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    with (out_dir / "history.jsonl").open("a") as fh:
+        fh.write(json.dumps(payload) + "\n")
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out-dir", default="results/bench",
+                    help="directory for BENCH_<suite>.json records")
     args = ap.parse_args()
 
     from . import (bench_attacks, bench_baselines, bench_batched,
                    bench_beta, bench_encrypt, bench_kernels, bench_ratio_k,
-                   bench_refine, bench_roofline, bench_scalability)
+                   bench_refine, bench_roofline, bench_runtime,
+                   bench_scalability)
 
     suites = {
         "fig4_beta": lambda: bench_beta.run(
@@ -38,11 +77,16 @@ def main() -> None:
             else (5000, 10000, 20000, 40000)),
         "batched_engine": lambda: bench_batched.run(
             n=20000 if args.full else 6000),
+        # measurement only — the hard smoke gate (occupancy/recompiles)
+        # lives in `python -m benchmarks.bench_runtime --smoke` (CI)
+        "runtime": lambda: bench_runtime.run(
+            n=20000 if args.full else 6000, smoke=False),
         "sec3_attacks": lambda: bench_attacks.run(),
         "kernels": lambda: bench_kernels.run(),
         "roofline": lambda: bench_roofline.run(),
     }
 
+    out_dir = pathlib.Path(args.out_dir)
     print("name,us_per_call,derived")
     failed = []
     for name, fn in suites.items():
@@ -50,9 +94,12 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            for r in fn():
+            rows = list(fn())
+            for r in rows:
                 print(r, flush=True)
-            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+            wall = time.time() - t0
+            path = write_suite_json(out_dir, name, rows, wall, args.full)
+            print(f"# {name} done in {wall:.1f}s -> {path}", flush=True)
         except Exception as e:                      # noqa: BLE001
             failed.append(name)
             print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)

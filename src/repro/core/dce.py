@@ -26,13 +26,17 @@ even at d≈1000.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
     "DCEKey",
     "keygen",
     "encrypt",
+    "encrypt_jax",
     "trapgen",
     "distance_comp",
     "scores_vs_pivot",
@@ -210,6 +214,98 @@ def encrypt(
         axis=1,
     )
     return C.astype(dtype)
+
+
+@functools.partial(jax.jit)
+def _encrypt_jax_core(X, perm1, perm2, M1, M2, M3, r, kv, rng_key):
+    """Enc(p, SK) batched under jit — X already zero-padded to (n, d_pad).
+
+    The same Eq. 1–4 / Eq. 13 pipeline as `encrypt`, restructured so the
+    heavy steps are two (n, h) x (h, h) matmuls and one
+    (n, d_pad+8) x (d_pad+8, 2d_pad+16) matmul — the owner-side analogue
+    of the MXU-shaped server math (DESIGN.md §8).  float32 end to end:
+    the orthogonal key matrices keep the pipeline conditioned, the same
+    argument that lets the server compare in float32.
+    """
+    n, d = X.shape
+    half = d // 2
+    k_alpha, k_rp, k_scale = jax.random.split(rng_key, 3)
+
+    # Step 1 (Eq. 1): pair split [p1+p2, p1-p2, ...].
+    pairs = X.reshape(n, half, 2)
+    checked = jnp.stack(
+        [pairs[..., 0] + pairs[..., 1], pairs[..., 0] - pairs[..., 1]],
+        axis=-1).reshape(n, d)
+    hat = jnp.take(checked, perm1, axis=1)              # Step 2: pi1
+    scale = jnp.sqrt(jnp.mean(hat * hat) + 1e-9)
+
+    # Step 3 (Eq. 2): per-vector alpha / r' randomness and gamma_p.
+    alpha = scale * jax.random.normal(k_alpha, (n, 2))
+    rp = scale * jax.random.normal(k_rp, (n, 3))
+    norm2 = jnp.sum(X * X, axis=1, keepdims=True)
+    gamma = (norm2 - rp[:, :1] * r[0] - rp[:, 1:2] * r[1]
+             - rp[:, 2:3] * r[2]) / r[3]
+    h1 = jnp.concatenate(
+        [hat[:, :half], alpha[:, :1], -alpha[:, :1], rp[:, :1], rp[:, 1:2]],
+        axis=1)
+    h2 = jnp.concatenate(
+        [hat[:, half:], alpha[:, 1:], alpha[:, 1:], rp[:, 2:3], gamma],
+        axis=1)
+    # Step 4 (Eq. 4): p̄ = pi2([p̂1ᵀ M1 ; p̂2ᵀ M2]).
+    t = jnp.concatenate([h1 @ M1, h2 @ M2], axis=1)
+    bar = jnp.take(t, perm2, axis=1)
+
+    # Component split (Eq. 10 / Eq. 13).
+    up = bar @ M3[: d + 8]
+    down = bar @ M3[d + 8:]
+    r_p = jax.random.uniform(k_scale, (n, 1), minval=0.5, maxval=2.0)
+    C = jnp.stack(
+        [
+            r_p * (up + 1.0) / kv[0],
+            r_p * (up - 1.0) / kv[1],
+            r_p * (down + 1.0) / kv[2],
+            r_p * (down - 1.0) / kv[3],
+        ],
+        axis=1,
+    )
+    return C.astype(jnp.float32)
+
+
+def _key_jax_arrays(key: DCEKey) -> tuple:
+    """Device copies of the key material, cached on the key object."""
+    cached = getattr(key, "_jax_arrays", None)
+    if cached is None:
+        cached = (
+            jnp.asarray(key.perm1, jnp.int32),
+            jnp.asarray(key.perm2, jnp.int32),
+            jnp.asarray(key.M1, jnp.float32),
+            jnp.asarray(key.M2, jnp.float32),
+            jnp.asarray(key.M3, jnp.float32),
+            jnp.asarray(key.r, jnp.float32),
+            jnp.asarray(key.kv, jnp.float32),
+        )
+        object.__setattr__(key, "_jax_arrays", cached)
+    return cached
+
+
+def encrypt_jax(P: np.ndarray, key: DCEKey, seed: int = 1):
+    """Batched Enc on the accelerator — the owner-side ingestion path.
+
+    Produces ciphertexts under the *same* key as `encrypt` (fresh
+    randomness from a JAX stream instead of numpy), so jax-encrypted and
+    numpy-encrypted rows interoperate inside one database: DistanceComp
+    between them stays sign-correct (asserted in
+    tests/test_batched_encrypt.py).  The executable is cached per
+    (n, d_pad); callers bucket n.  Returns a (n, 4, 2d+16) jax array.
+    """
+    P = np.atleast_2d(np.asarray(P, np.float32))
+    n, d = P.shape
+    if d != key.d:
+        raise ValueError(f"vector dim {d} != key dim {key.d}")
+    if key.d_pad != d:                                  # odd d: zero-pad
+        P = np.concatenate([P, np.zeros((n, 1), P.dtype)], axis=1)
+    return _encrypt_jax_core(jnp.asarray(P), *_key_jax_arrays(key),
+                             jax.random.PRNGKey(seed))
 
 
 def trapgen(

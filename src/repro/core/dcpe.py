@@ -17,10 +17,14 @@ decryption helper.  IND-KPA security is inherited from [10].
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["SAPKey", "keygen", "encrypt", "suggest_beta", "beta_bounds"]
+__all__ = ["SAPKey", "keygen", "encrypt", "encrypt_jax", "suggest_beta",
+           "beta_bounds"]
 
 
 @dataclasses.dataclass
@@ -61,3 +65,27 @@ def encrypt(X: np.ndarray, key: SAPKey, seed: int = 0) -> np.ndarray:
     x = (key.s * key.beta / 4.0) * rng.uniform(0.0, 1.0, (n, 1)) ** (1.0 / d)
     lam = x * u                                           # Lines 2-4
     return (key.s * X + lam).astype(np.float32)           # Line 5
+
+
+@functools.partial(jax.jit)
+def _encrypt_jax(X, s, beta, rng_key):
+    n, d = X.shape
+    ku, kx = jax.random.split(rng_key)
+    u = jax.random.normal(ku, (n, d))
+    u = u / (jnp.linalg.norm(u, axis=1, keepdims=True) + 1e-30)
+    x = (s * beta / 4.0) * jax.random.uniform(kx, (n, 1)) ** (1.0 / d)
+    return (s * X + x * u).astype(jnp.float32)
+
+
+def encrypt_jax(X: np.ndarray, key: SAPKey, seed: int = 0):
+    """Enc_SAP for a batch on the accelerator — the owner-side ingestion
+    path (DESIGN.md §8).
+
+    Same ball-noise construction as `encrypt` with a JAX RNG stream; the
+    jitted executable is cached per (n, d), so callers bucket n (see
+    `kernels.common.next_bucket`).  s and beta ride as traced scalars, so
+    one executable serves every tenant key.  Returns a jax array.
+    """
+    X = jnp.atleast_2d(jnp.asarray(X, jnp.float32))
+    return _encrypt_jax(X, jnp.float32(key.s), jnp.float32(key.beta),
+                        jax.random.PRNGKey(seed))

@@ -24,6 +24,7 @@ backend (flat / IVF / HNSW).
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -69,6 +70,8 @@ class DataOwner:
             sap_key=dcpe.keygen(s=sap_s, beta=sap_beta),
         )
         self._seed = seed
+        self._enc_ctr = 10_000 + seed    # fresh-randomness counter (ingest)
+        self._enc_lock = threading.Lock()
 
     def encrypt_database(
         self, P: np.ndarray, M: int = 16, ef_construction: int = 200,
@@ -87,6 +90,49 @@ class DataOwner:
         """For incremental insert (paper §V-D): owner encrypts, server links."""
         C_sap = dcpe.encrypt(p[None], self.keys.sap_key, seed=seed)[0]
         C_dce = dce.encrypt(p[None], self.keys.dce_key, seed=seed + 1)[0]
+        return C_sap, C_dce
+
+    def encrypt_vectors(self, P: np.ndarray, seed: int | None = None):
+        """Batched owner-side encryption for live ingestion (DESIGN.md §8).
+
+        Routes through the jitted DCPE + DCE paths (`dcpe.encrypt_jax`,
+        `dce.encrypt_jax` — encryption is matmul-shaped) with the batch
+        padded to a power-of-two bucket capped at 4096 (larger batches
+        chunk), so a burst of inserts reuses a handful of executables
+        instead of recompiling per batch size, and bulk ingest never
+        pads more than one chunk's worth of waste.
+        Returns (C_sap (m, d), C_dce (m, 4, 2d+16)) numpy float32.
+        """
+        from ..kernels.common import next_bucket
+
+        P = np.atleast_2d(np.asarray(P, np.float32))
+        m = P.shape[0]
+        chunk = 4096
+        if m > chunk:
+            parts = [self.encrypt_vectors(
+                P[i: i + chunk],
+                None if seed is None else seed + 7919 * (i // chunk))
+                for i in range(0, m, chunk)]
+            return (np.concatenate([a for a, _ in parts]),
+                    np.concatenate([b for _, b in parts]))
+        if seed is None:
+            # atomic: concurrent ingestion threads must never share a
+            # seed (identical noise across two batches would let the
+            # server difference the ciphertexts)
+            with self._enc_lock:
+                self._enc_ctr += 2
+                seed = self._enc_ctr
+        bucket = next_bucket(m, minimum=8)
+        # pad by replicating real rows, never zeros: DCE's randomization
+        # scale is sqrt(mean(hat^2)) over the whole batch, so zero rows
+        # would shrink the Eq. 2 blinding noise below the spec strength
+        Pp = np.concatenate(
+            [P, P[np.arange(bucket - m) % m]], axis=0) \
+            if bucket != m else P
+        C_sap = np.asarray(dcpe.encrypt_jax(Pp, self.keys.sap_key,
+                                            seed=seed))[:m]
+        C_dce = np.asarray(dce.encrypt_jax(Pp, self.keys.dce_key,
+                                           seed=seed + 1))[:m]
         return C_sap, C_dce
 
     def share_keys(self) -> Keys:

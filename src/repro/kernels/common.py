@@ -19,6 +19,26 @@ def interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def next_bucket(n: int, minimum: int = 1, maximum: int | None = None) -> int:
+    """Smallest power-of-two bucket >= max(n, minimum), optionally capped.
+
+    Jitted executables are cached per input shape, so callers that see
+    ragged sizes (micro-batched query counts, ingestion delta buffers,
+    owner-side encryption batches — DESIGN.md §8) pad to bucketed shapes
+    and reuse a handful of executables instead of recompiling per size.
+    """
+    if n < 0:
+        raise ValueError(f"negative size {n}")
+    b = max(minimum, 1)
+    while b < n:
+        b <<= 1
+    if maximum is not None and b > maximum:
+        if n > maximum:
+            raise ValueError(f"size {n} exceeds bucket cap {maximum}")
+        b = maximum
+    return b
+
+
 def pad_to(x: jnp.ndarray, axis: int, multiple: int,
            value: float = 0.0) -> jnp.ndarray:
     """Right-pad `axis` of x up to a multiple (hardware-aligned shapes)."""

@@ -15,6 +15,11 @@ _EXPORTS = {
     "FlatScanFilter": ".search_engine",
     "IVFScanFilter": ".search_engine",
     "HNSWGraphFilter": ".search_engine",
+    "CollectionManager": ".runtime",
+    "Collection": ".runtime",
+    "MicroBatcher": ".runtime",
+    "QueueFullError": ".runtime",
+    "TenantIsolationError": ".runtime",
 }
 
 __all__ = list(_EXPORTS)

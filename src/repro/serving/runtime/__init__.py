@@ -1,0 +1,25 @@
+"""Online serving runtime over the unified secure-search engine
+(DESIGN.md §8).
+
+  batcher      dynamic micro-batching: request queue -> bucketed padded
+               batches -> per-request futures; deadline/size flush,
+               bounded-queue admission control
+  collections  multi-tenant `CollectionManager`: per-tenant keys,
+               ciphertext stores, index, engine; strict routing
+  ingest       live encrypted ingestion: mutable tombstoned store,
+               delta buffer + compaction, delta-aware filter backend
+  telemetry    per-collection QPS / occupancy / p50-p99 / queue depth,
+               jit-recompile tracking
+"""
+
+from .batcher import MicroBatcher, QueueFullError, batch_buckets
+from .collections import Collection, CollectionManager, TenantIsolationError
+from .ingest import DeltaAwareBackend, MutableEncryptedStore
+from .telemetry import CollectionTelemetry, jit_cache_size
+
+__all__ = [
+    "MicroBatcher", "QueueFullError", "batch_buckets",
+    "Collection", "CollectionManager", "TenantIsolationError",
+    "DeltaAwareBackend", "MutableEncryptedStore",
+    "CollectionTelemetry", "jit_cache_size",
+]

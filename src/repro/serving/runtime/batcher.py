@@ -1,0 +1,242 @@
+"""Dynamic micro-batcher: coalesce concurrent requests into bucketed
+batches (DESIGN.md §8).
+
+Concurrently submitted single-query requests land in a bounded queue; a
+scheduler thread drains them into one `search_batch` call per flush.  A
+flush fires when `max_batch` compatible requests are waiting or when the
+oldest request has waited `max_wait_ms` — the classic
+throughput/latency dial.  Requests batch together only when their search
+parameters `(k, ratio_k, ef_search)` agree (the jitted executables are
+specialized on them); mixed traffic is served FIFO by the head request's
+parameter group.
+
+Shape bucketing: the real batch is padded (by replicating the first
+request's query) up to the next power of two, capped at `max_batch`, so
+every arrival pattern maps onto a handful of compiled executables —
+zero recompiles after `warmup()` has touched each bucket.  Padded-row
+results are discarded; real results scatter back to per-request futures.
+
+Admission control: when `max_queue` requests are already waiting the
+submit raises `QueueFullError` instead of growing an unbounded backlog
+(callers shed load or retry; the reject is counted in telemetry).
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+
+import numpy as np
+
+from ...kernels.common import next_bucket
+
+__all__ = ["MicroBatcher", "QueueFullError", "batch_buckets"]
+
+
+class QueueFullError(RuntimeError):
+    """Raised by submit() when the collection's queue is at max_queue."""
+
+
+def batch_buckets(max_batch: int) -> list[int]:
+    """The bucketed batch shapes: powers of two up to max_batch (plus
+    max_batch itself when it is not a power of two)."""
+    sizes, b = [], 1
+    while b < max_batch:
+        sizes.append(b)
+        b <<= 1
+    sizes.append(max_batch)
+    return sizes
+
+
+@dataclasses.dataclass
+class _Request:
+    Q: np.ndarray                 # (d,) DCPE query ciphertext
+    T: np.ndarray                 # (2d+16,) DCE trapdoor
+    group: tuple                  # (k, ratio_k, ef_search)
+    future: Future
+    t_enq: float
+
+
+class MicroBatcher:
+    """Request queue + scheduler around one `run_batch` callable.
+
+    run_batch(Q (B, d), T (B, D), k, ratio_k=..., ef_search=...) must
+    return (ids (B, k), stats) — in the runtime this is the collection's
+    locked `SecureSearchEngine.search_batch`.
+    """
+
+    def __init__(self, run_batch, *, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, max_queue: int = 256,
+                 telemetry=None, verify_parity: bool = False,
+                 verify_lock=None, name: str = "collection"):
+        if max_batch < 1 or max_queue < 1:
+            raise ValueError("max_batch and max_queue must be >= 1")
+        self._run_batch = run_batch
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        self.max_queue = int(max_queue)
+        self.telemetry = telemetry
+        self.verify_parity = verify_parity
+        # held across the batched call AND the parity re-runs, so a
+        # concurrent mutation cannot change the database between the two
+        # and fail the assert spuriously (pass the collection's RLock)
+        self.verify_lock = verify_lock
+        self._pending: collections.deque[_Request] = collections.deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._worker = threading.Thread(
+            target=self._loop, daemon=True, name=f"microbatcher-{name}")
+        self._worker.start()
+
+    # ------------------------------------------------------------- client
+
+    def submit(self, C_sap_q: np.ndarray, T_q: np.ndarray, k: int, *,
+               ratio_k: float = 8.0, ef_search: int = 96) -> Future:
+        """Enqueue one query; resolves to its (k,) id vector."""
+        req = _Request(
+            Q=np.asarray(C_sap_q), T=np.asarray(T_q),
+            group=(int(k), float(ratio_k), int(ef_search)),
+            future=Future(), t_enq=time.monotonic())
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            if len(self._pending) >= self.max_queue:
+                if self.telemetry is not None:
+                    self.telemetry.record_reject()
+                raise QueueFullError(
+                    f"queue at max_queue={self.max_queue}; shed load")
+            self._pending.append(req)
+            if self.telemetry is not None:
+                self.telemetry.record_submit(len(self._pending))
+            self._cv.notify()
+        return req.future
+
+    def search(self, C_sap_q, T_q, k, *, ratio_k: float = 8.0,
+               ef_search: int = 96, timeout: float | None = 30.0):
+        """Synchronous single query through the batching path."""
+        return self.submit(C_sap_q, T_q, k, ratio_k=ratio_k,
+                           ef_search=ef_search).result(timeout=timeout)
+
+    def warmup(self, example_q: np.ndarray, example_t: np.ndarray,
+               k: int = 10, *, ratio_k: float = 8.0, ef_search: int = 96):
+        """Compile every bucketed batch shape once, bypassing the queue.
+        Call after (re)ingesting, before steady-state traffic."""
+        for b in batch_buckets(self.max_batch):
+            Q = np.broadcast_to(np.asarray(example_q), (b,) +
+                                np.asarray(example_q).shape).copy()
+            T = np.broadcast_to(np.asarray(example_t), (b,) +
+                                np.asarray(example_t).shape).copy()
+            self._run_batch(Q, T, k, ratio_k=ratio_k, ef_search=ef_search)
+
+    def close(self, wait: bool = True):
+        """Stop accepting requests; drain what is queued, then exit.  If
+        the drain outlives the join timeout, still-queued requests get a
+        RuntimeError instead of leaving their clients hung forever."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if wait:
+            self._worker.join(timeout=60.0)
+            if self._worker.is_alive():
+                with self._cv:
+                    stranded = list(self._pending)
+                    self._pending = collections.deque()
+                for r in stranded:
+                    self._resolve(r.future, exc=RuntimeError(
+                        "batcher closed before this request was served"))
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ---------------------------------------------------------- scheduler
+
+    def _n_matching_locked(self, group: tuple) -> int:
+        return sum(r.group == group for r in self._pending)
+
+    def _take_group_locked(self, group: tuple) -> list[_Request]:
+        took, rest = [], collections.deque()
+        for r in self._pending:
+            if r.group == group and len(took) < self.max_batch:
+                took.append(r)
+            else:
+                rest.append(r)
+        self._pending = rest
+        return took
+
+    def _loop(self):
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if not self._pending:
+                    return                       # closed and drained
+                head = self._pending[0]
+                deadline = head.t_enq + self.max_wait_s
+                while (not self._closed
+                       and self._n_matching_locked(head.group)
+                       < self.max_batch):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cv.wait(timeout=remaining)
+                batch = self._take_group_locked(head.group)
+                depth = len(self._pending)
+            self._flush(batch, depth)
+
+    def _flush(self, batch: list[_Request], queue_depth: int):
+        """Any failure lands on the batch's futures, never on the
+        scheduler thread — one bad request must not wedge the queue."""
+        k, ratio_k, ef_search = batch[0].group
+        B = len(batch)
+        try:
+            bucket = next_bucket(B, minimum=1, maximum=self.max_batch)
+            Q = np.stack([r.Q for r in batch]
+                         + [batch[0].Q] * (bucket - B))  # pad = replicate
+            T = np.stack([r.T for r in batch] + [batch[0].T] * (bucket - B))
+            lock = (self.verify_lock if self.verify_parity
+                    and self.verify_lock is not None
+                    else contextlib.nullcontext())
+            with lock:
+                ids, stats = self._run_batch(Q, T, k, ratio_k=ratio_k,
+                                             ef_search=ef_search)
+                # sojourn latency ends when results are computed — before
+                # the (debug-only) parity sweep, which would inflate p99
+                now = time.monotonic()
+                if self.verify_parity:           # engine parity, per request
+                    for i, r in enumerate(batch):
+                        single, _ = self._run_batch(
+                            r.Q[None], r.T[None], k, ratio_k=ratio_k,
+                            ef_search=ef_search)
+                        np.testing.assert_array_equal(ids[i], single[0])
+        except Exception as exc:                 # noqa: BLE001 — to futures
+            for r in batch:
+                self._resolve(r.future, exc=exc)
+            return
+        for i, r in enumerate(batch):
+            self._resolve(r.future, result=np.asarray(ids[i]))
+        if self.telemetry is not None:
+            self.telemetry.record_flush(
+                B, [now - r.t_enq for r in batch], stats.backend,
+                queue_depth)
+
+    @staticmethod
+    def _resolve(future: Future, result=None, exc=None):
+        """Deliver a result/exception, tolerating a client cancel() that
+        lands between our check and the set_* call — an InvalidStateError
+        here must never escape into (and kill) the scheduler thread."""
+        try:
+            if future.cancelled():
+                return
+            if exc is not None:
+                future.set_exception(exc)
+            else:
+                future.set_result(result)
+        except InvalidStateError:
+            pass

@@ -1,0 +1,279 @@
+"""Multi-tenant collections: per-tenant keys, ciphertext stores, index,
+engine, and batcher — with strict routing (DESIGN.md §8).
+
+Tenancy model: one key pair per tenant collection (the paper's
+single-owner scheme, applied per collection).  The server routes a
+request to exactly the collection named by `(tenant, collection)`; a
+tenant id that does not own the named collection raises
+`TenantIsolationError` before any ciphertext is touched, so one tenant's
+trapdoors never meet another tenant's ciphertexts.  (Even if routing
+were bypassed, cross-tenant results are cryptographic garbage — keys
+differ — but the runtime's guarantee is structural, not accidental.)
+
+Role colocation note: `Collection.insert(P)` runs the *owner-side*
+batched encryption in-process — this runtime plays both the data-owner
+ingestion endpoint and the honest-but-curious search server, as in the
+paper's evaluation harness.  The search/storage path only ever sees
+ciphertexts; `insert_encrypted` is the wire-format entry point for a
+remote owner.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from ...core import dce, ppanns
+from ..search_engine import SearchStats, SecureSearchEngine
+from .batcher import MicroBatcher
+from .ingest import DeltaAwareBackend, MutableEncryptedStore
+from .telemetry import CollectionTelemetry
+
+__all__ = ["Collection", "CollectionManager", "TenantIsolationError"]
+
+
+class TenantIsolationError(KeyError):
+    """A tenant addressed a collection it does not own (or that does not
+    exist — the two cases are deliberately indistinguishable, so a
+    tenant cannot enumerate other tenants' collection names)."""
+
+
+class Collection:
+    """One tenant's encrypted corpus: keys + store + index + engine +
+    micro-batcher + telemetry."""
+
+    def __init__(self, tenant: str, name: str, d: int, *,
+                 backend: str = "flat", sap_beta: float = 1.0,
+                 sap_s: float = 1024.0, seed: int | None = None,
+                 use_kernel: bool = True, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, max_queue: int = 256,
+                 compact_every: int = 4096, verify_parity: bool = False,
+                 **backend_kw):
+        self.tenant = tenant
+        self.name = name
+        self.d = d
+        if seed is None:
+            # fresh entropy per collection: two tenants must never derive
+            # the same key pair just because neither passed a seed
+            seed = int(np.random.SeedSequence().entropy % (2 ** 31))
+        self.owner = ppanns.DataOwner(d=d, sap_beta=sap_beta, sap_s=sap_s,
+                                      seed=seed)
+        self.store = MutableEncryptedStore(d, dce.ciphertext_dim(d))
+        self._backend = DeltaAwareBackend(self.store, backend,
+                                          use_kernel=use_kernel,
+                                          seed=seed, **backend_kw)
+        self._engine: SecureSearchEngine | None = None
+        self._lock = threading.RLock()
+        self.compact_every = int(compact_every)
+        self.telemetry = CollectionTelemetry()
+        self.batcher = MicroBatcher(
+            self._run_batch, max_batch=max_batch, max_wait_ms=max_wait_ms,
+            max_queue=max_queue, telemetry=self.telemetry,
+            verify_parity=verify_parity, verify_lock=self._lock,
+            name=f"{tenant}/{name}")
+
+    # ------------------------------------------------------------ keys
+
+    def new_user(self) -> ppanns.User:
+        """Owner -> trusted user key handoff for this collection."""
+        return ppanns.User(self.owner.share_keys())
+
+    # ------------------------------------------------------- ingestion
+
+    def insert(self, P: np.ndarray) -> np.ndarray:
+        """Owner-side API: batch-encrypt plaintext vectors (jitted DCPE +
+        DCE paths) and append.  Returns the stable row ids."""
+        C_sap, C_dce = self.owner.encrypt_vectors(P)
+        return self.insert_encrypted(C_sap, C_dce)
+
+    def insert_encrypted(self, C_sap: np.ndarray,
+                         C_dce: np.ndarray) -> np.ndarray:
+        """Server-side API: append pre-encrypted rows (wire format)."""
+        with self._lock:
+            rows = self.store.append(C_sap, C_dce)
+            self._backend.on_insert(rows, C_sap)
+            compacted = False
+            if self.store.delta_size >= self.compact_every:
+                self.store.compact()
+                compacted = True
+            self._refresh_engine()
+        self.telemetry.record_ingest(n_inserted=len(rows),
+                                     compacted=compacted)
+        return rows
+
+    def delete(self, ids) -> int:
+        """Tombstone rows; searches issued after this never return them.
+        All-or-nothing: every id is validated before the first mutation,
+        so a bad id cannot leave the batch half-applied (and the engine
+        is re-marked dirty even if a backend hook fails mid-way)."""
+        rows = [int(r) for r in np.atleast_1d(np.asarray(ids, np.int64))]
+        with self._lock:
+            seen: set[int] = set()
+            for row in rows:
+                if row in seen or not (0 <= row < self.store.n_total) \
+                        or not self.store.alive_view[row]:
+                    raise KeyError(
+                        f"unknown, duplicate, or already-deleted id {row}")
+                seen.add(row)
+            try:
+                for row in rows:
+                    self.store.delete(row)
+                    self._backend.on_delete(row)
+            finally:
+                self._refresh_engine()
+        self.telemetry.record_ingest(n_deleted=len(rows))
+        return len(rows)
+
+    def compact(self):
+        with self._lock:
+            self.store.compact()
+            self._refresh_engine()
+        self.telemetry.record_ingest(compacted=True)
+
+    def _refresh_engine(self):
+        """Mark engine state dirty; the rebuild happens lazily on the next
+        search, so a burst of mutations pays one refresh (DESIGN.md §8)."""
+        if self._engine is None:
+            if self.store.n_total:
+                self._engine = SecureSearchEngine(
+                    self.store.sap_view, self.store.dce_padded_view,
+                    backend=self._backend,
+                    use_kernel=self._backend.use_kernel)
+        else:
+            self._engine.update_database(self.store.sap_view,
+                                         self.store.dce_padded_view)
+
+    # ---------------------------------------------------------- search
+
+    def _run_batch(self, Q, T, k, ratio_k=8.0, ef_search=96):
+        """The batcher's flush target: one locked engine call."""
+        with self._lock:
+            if self._engine is None:            # empty collection
+                nq = np.atleast_2d(Q).shape[0]
+                return (np.full((nq, k), -1, np.int64),
+                        SearchStats(latency_s=0.0, filter_dist_evals=0,
+                                    refine_comparisons=0, bytes_up=0,
+                                    bytes_down=0, n_queries=nq,
+                                    backend=self._backend.name))
+            return self._engine.search_batch(Q, T, k, ratio_k=ratio_k,
+                                             ef_search=ef_search)
+
+    def submit(self, C_sap_q, T_q, k, *, ratio_k: float = 8.0,
+               ef_search: int = 96):
+        """Async single query through the micro-batcher -> Future[(k,) ids]."""
+        C_sap_q = np.asarray(C_sap_q)
+        T_q = np.asarray(T_q)
+        if C_sap_q.shape != (self.d,) or \
+                T_q.shape != (dce.ciphertext_dim(self.d),):
+            raise ValueError(
+                f"query shapes {C_sap_q.shape}/{T_q.shape} do not match "
+                f"collection (d={self.d}, cdim={dce.ciphertext_dim(self.d)})")
+        return self.batcher.submit(C_sap_q, T_q, k, ratio_k=ratio_k,
+                                   ef_search=ef_search)
+
+    def search(self, C_sap_q, T_q, k, *, ratio_k: float = 8.0,
+               ef_search: int = 96, timeout: float | None = 30.0):
+        """Sync single query through the micro-batcher."""
+        return self.submit(C_sap_q, T_q, k, ratio_k=ratio_k,
+                           ef_search=ef_search).result(timeout=timeout)
+
+    def search_batch(self, Q, T, k, **kw):
+        """Bulk client path: straight to the engine (still locked)."""
+        return self._run_batch(Q, T, k, **kw)
+
+    def warmup(self, k: int = 10, *, ratio_k: float = 8.0,
+               ef_search: int = 96):
+        """Compile every bucketed batch shape against the current store."""
+        zq = np.zeros(self.d, np.float32)
+        zt = np.zeros(dce.ciphertext_dim(self.d), np.float32)
+        self.batcher.warmup(zq, zt, k, ratio_k=ratio_k, ef_search=ef_search)
+
+    # ------------------------------------------------------------- misc
+
+    def stats(self) -> dict:
+        snap = self.telemetry.snapshot()
+        snap.update(tenant=self.tenant, collection=self.name,
+                    n_total=self.store.n_total, n_alive=self.store.n_alive,
+                    n_delta=self.store.delta_size)
+        return snap
+
+    def close(self):
+        self.batcher.close()
+
+
+class CollectionManager:
+    """Routing front door: (tenant, collection) -> Collection, strictly."""
+
+    def __init__(self, **default_kw):
+        self._default_kw = default_kw
+        self._collections: dict[tuple[str, str], Collection] = {}
+        self._creating: set[tuple[str, str]] = set()
+        self._lock = threading.Lock()
+
+    def create_collection(self, tenant: str, name: str, d: int,
+                          **kw) -> Collection:
+        """Construction (keygen QR at O((2d+16)^2), index state, batcher
+        thread) runs *outside* the routing lock — one tenant creating a
+        big collection must not stall every other tenant's requests."""
+        merged = {**self._default_kw, **kw}
+        key = (tenant, name)
+        with self._lock:
+            if key in self._collections or key in self._creating:
+                raise ValueError(f"collection {tenant}/{name} exists")
+            self._creating.add(key)
+        try:
+            col = Collection(tenant, name, d, **merged)
+            with self._lock:
+                self._collections[key] = col
+            return col
+        finally:
+            with self._lock:
+                self._creating.discard(key)
+
+    def collection(self, tenant: str, name: str) -> Collection:
+        with self._lock:
+            col = self._collections.get((tenant, name))
+            if col is None:
+                # one error for "owned by someone else" and "nonexistent":
+                # anything else is a name-enumeration oracle across tenants
+                raise TenantIsolationError(
+                    f"no collection {name!r} for tenant {tenant!r}")
+            return col
+
+    # thin routed delegates -------------------------------------------------
+
+    def insert(self, tenant, name, P):
+        return self.collection(tenant, name).insert(P)
+
+    def delete(self, tenant, name, ids):
+        return self.collection(tenant, name).delete(ids)
+
+    def submit(self, tenant, name, C_sap_q, T_q, k, **kw):
+        return self.collection(tenant, name).submit(C_sap_q, T_q, k, **kw)
+
+    def search(self, tenant, name, C_sap_q, T_q, k, **kw):
+        return self.collection(tenant, name).search(C_sap_q, T_q, k, **kw)
+
+    def stats(self, tenant, name):
+        return self.collection(tenant, name).stats()
+
+    def drop_collection(self, tenant, name):
+        with self._lock:
+            col = self._collections.pop((tenant, name), None)
+        if col is None:
+            raise KeyError(f"no collection {tenant}/{name}")
+        col.close()
+
+    def close(self):
+        with self._lock:
+            cols = list(self._collections.values())
+            self._collections.clear()
+        for col in cols:
+            col.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

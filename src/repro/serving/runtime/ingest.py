@@ -1,0 +1,388 @@
+"""Live encrypted ingestion: mutable ciphertext store + delta-aware
+filter backend (DESIGN.md §8).
+
+Storage model — append-only rows with tombstones:
+
+  rows:   [0 ............ n_main) [n_main ........ n_total)
+           "main" region           "delta" region
+           served by the base      served by a bucketed flat
+           filter backend          scan (flat/IVF kinds)
+
+  * ids are stable: a row id handed out by `append` never moves or gets
+    reused.  `delete` tombstones the row (alive=False), scrubs its DCE
+    ciphertext and sentinels its DCPE ciphertext; the filter masks dead
+    rows out of every candidate set before refine, so a deleted id is
+    never returned.
+  * `compact` promotes the delta into the main region (n_main := n_total
+    and a generation bump) — the expensive per-backend state (flat device
+    array, IVF centroids) is rebuilt once per compaction, not per insert.
+  * searches see inserts immediately: every mutation marks the engine
+    dirty, and the next search's attach refreshes the (cheap) delta
+    state.  A burst of mutations pays one refresh, not one per op.
+
+`DeltaAwareBackend` implements the engine's filter-backend protocol
+(`attach` / `candidates`), so `SecureSearchEngine.search_batch` — and
+with it the batch-of-one parity guarantee — works unchanged over a
+mutating database.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.hnsw import HNSW
+from ...core.ivf import IVFIndex
+from ...kernels.common import next_bucket
+from ...kernels.l2_topk import ops as l2_ops
+from .. import search_engine as se
+
+__all__ = ["MutableEncryptedStore", "DeltaAwareBackend", "SENTINEL"]
+
+# Far-away sentinel for dead / padded DCPE rows (same convention as the
+# mesh server's pad rows): never enters a top-k' unless nothing else can.
+SENTINEL = 1e9
+
+
+class MutableEncryptedStore:
+    """Growable per-collection ciphertext arrays with tombstones."""
+
+    def __init__(self, d: int, cdim: int):
+        self.d = d
+        self.cdim = cdim
+        self._C_sap = np.zeros((0, d), np.float32)
+        self._C_dce = np.zeros((0, 4, cdim), np.float32)
+        self._alive = np.zeros(0, bool)
+        self.n_main = 0
+        self.n_total = 0
+        self.main_gen = 0          # bumped by compact()
+
+    # ------------------------------------------------------------- storage
+
+    def _grow(self, extra: int):
+        need = self.n_total + extra
+        if need <= self._C_sap.shape[0]:
+            return
+        cap = next_bucket(need, minimum=256)   # power-of-two capacity
+        for name in ("_C_sap", "_C_dce", "_alive"):
+            old = getattr(self, name)
+            grown = np.zeros((cap,) + old.shape[1:], old.dtype)
+            grown[: self.n_total] = old[: self.n_total]
+            setattr(self, name, grown)
+
+    @property
+    def sap_view(self) -> np.ndarray:
+        return self._C_sap[: self.n_total]
+
+    @property
+    def dce_view(self) -> np.ndarray:
+        return self._C_dce[: self.n_total]
+
+    @property
+    def dce_padded_view(self) -> np.ndarray:
+        """DCE rows padded (with scrubbed zeros) to the power-of-two
+        capacity bucket.  The engine's refine executable is specialized
+        on this array's row count, so handing it bucketed shapes means a
+        growing delta recompiles once per capacity doubling, not once
+        per insert burst.  Rows >= n_total are never valid candidates."""
+        if self.n_total == 0:
+            return self._C_dce[:0]
+        return self._C_dce[: next_bucket(self.n_total, minimum=256)]
+
+    @property
+    def alive_view(self) -> np.ndarray:
+        return self._alive[: self.n_total]
+
+    @property
+    def delta_size(self) -> int:
+        return self.n_total - self.n_main
+
+    @property
+    def n_alive(self) -> int:
+        return int(self.alive_view.sum())
+
+    # ----------------------------------------------------------- mutation
+
+    def append(self, C_sap: np.ndarray, C_dce: np.ndarray) -> np.ndarray:
+        C_sap = np.atleast_2d(np.asarray(C_sap, np.float32))
+        C_dce = np.asarray(C_dce, np.float32)
+        m = C_sap.shape[0]
+        if C_sap.shape[1] != self.d or C_dce.shape != (m, 4, self.cdim):
+            raise ValueError(
+                f"ciphertext shapes {C_sap.shape}/{C_dce.shape} do not "
+                f"match collection dims (n={m}, d={self.d}, "
+                f"cdim={self.cdim})")
+        self._grow(m)
+        rows = np.arange(self.n_total, self.n_total + m)
+        self._C_sap[rows] = C_sap
+        self._C_dce[rows] = C_dce
+        self._alive[rows] = True
+        self.n_total += m
+        return rows
+
+    def delete(self, row: int):
+        row = int(row)
+        if not (0 <= row < self.n_total) or not self._alive[row]:
+            raise KeyError(f"unknown or already-deleted id {row}")
+        self._alive[row] = False
+        self._C_dce[row] = 0.0          # scrub refine ciphertext
+        self._C_sap[row] = SENTINEL     # fall out of future filter top-k'
+
+    def compact(self):
+        """Promote delta -> main.  Ids are stable (tombstones persist);
+        only per-backend acceleration state is rebuilt, on next attach."""
+        self.n_main = self.n_total
+        self.main_gen += 1
+
+
+class DeltaAwareBackend:
+    """Engine filter backend over a `MutableEncryptedStore`.
+
+    kind="flat":  main region scanned via a cached device array + the
+                  l2_topk kernel; delta region scanned via a
+                  power-of-two-bucketed device buffer (sentinel-padded),
+                  so jitted executables are reused as the delta grows.
+    kind="ivf":   coarse centroids built over the main region at
+                  compaction; delta rows are incrementally *assigned* to
+                  their nearest centroid at the next attach (no kmeans
+                  rerun), so probes see inserts immediately.
+    kind="hnsw":  one graph over all rows, updated eagerly by
+                  `on_insert` / `on_delete` (graph node id == row id).
+
+    All kinds mask tombstoned rows out of the candidate validity mask, so
+    the refine never returns a deleted id.
+    """
+
+    def __init__(self, store: MutableEncryptedStore, kind: str = "flat", *,
+                 use_kernel: bool = True, n_partitions: int = 64,
+                 nprobe: int = 8, hnsw_M: int = 16,
+                 hnsw_ef_construction: int = 200,
+                 delta_bucket_min: int = 128, seed: int = 0):
+        if kind not in ("flat", "ivf", "hnsw"):
+            raise ValueError(f"unknown backend kind {kind!r}")
+        self.store = store
+        self.kind = kind
+        self.name = kind
+        self.use_kernel = use_kernel
+        self.n_partitions = n_partitions
+        self.nprobe = nprobe
+        self.delta_bucket_min = delta_bucket_min
+        self.seed = seed
+        self.graph = (HNSW(dim=store.d, M=hnsw_M,
+                           ef_construction=hnsw_ef_construction, seed=seed)
+                      if kind == "hnsw" else None)
+        self.ivf: IVFIndex | None = None
+        self._assign: dict[int, int] = {}       # row -> ivf cluster
+        self._ivf_built_upto = 0
+        self._attached_gen = -1
+        self._C_main = None       # flat: device array of the main region
+        self._C_all = None        # ivf: bucketed device array of all rows
+        self._scan_snapshot = (-1, -1)          # (main_gen, n_total) of it
+        self._C_delta = None      # flat: bucketed delta device buffer
+        self._delta_base = 0
+        self._delta_n = 0
+        self._C_dce_dev = None    # refine array device residency (all
+        self._dce_snapshot = (-1, -1)    # kinds); (padded_len, n_total)
+
+    # ------------------------------------------------- mutation hooks
+    # Called by the Collection under its lock, *before* the engine is
+    # marked dirty — eager for graph structure, lazy for device arrays.
+
+    def on_insert(self, rows: np.ndarray, C_sap: np.ndarray):
+        if self.graph is not None:
+            for row, vec in zip(rows, np.atleast_2d(C_sap)):
+                node = self.graph.insert(vec)
+                if node != row:     # every downstream lookup (candidates,
+                    # alive mask, refine gather) depends on this equality
+                    raise RuntimeError(
+                        f"graph node id {node} != store row id {row}: "
+                        f"graph and store are desynchronized")
+
+    def on_delete(self, row: int):
+        if self.graph is not None:
+            self.graph.delete(row)
+        if self.kind == "ivf":
+            c = self._assign.pop(row, None)
+            if c is not None and self.ivf is not None:
+                lst = self.ivf.lists[c]
+                self.ivf.lists[c] = lst[lst != row]
+        if self.kind == "flat" and row < self.store.n_main:
+            # re-sentinel the main device array; delta-region deletes need
+            # no rebuild (the delta buffer is refreshed every attach)
+            self._C_main = None
+
+    # ----------------------------------------------------------- attach
+
+    def dce_device(self, C_dce_padded: np.ndarray):
+        """Device residency for the refine array (engine hook): inside an
+        unchanged capacity bucket, ship only the rows appended since the
+        last refresh instead of the whole database.  Tombstoned rows keep
+        their stale device copy — they are never valid candidates, so
+        the refine cannot observe them (the host copy stays scrubbed)."""
+        n_total = self.store.n_total
+        plen = C_dce_padded.shape[0]
+        old_plen, old_n = self._dce_snapshot
+        if self._C_dce_dev is not None and plen == old_plen:
+            if n_total > old_n:
+                self._C_dce_dev = self._C_dce_dev.at[old_n: n_total].set(
+                    jnp.asarray(C_dce_padded[old_n: n_total]))
+        else:
+            self._C_dce_dev = jnp.asarray(C_dce_padded)
+        self._dce_snapshot = (plen, n_total)
+        return self._C_dce_dev
+
+    def attach(self, C_sap: np.ndarray, engine):
+        """One refresh per mutation burst (the engine attaches lazily)."""
+        st = self.store
+        if self.kind == "flat":
+            if self._attached_gen != st.main_gen or self._C_main is None:
+                self._C_main = (jnp.asarray(C_sap[: st.n_main])
+                                if st.n_main else None)
+                self._attached_gen = st.main_gen
+            dn = st.delta_size
+            self._delta_base, self._delta_n = st.n_main, dn
+            if dn:
+                bucket = next_bucket(dn, minimum=self.delta_bucket_min)
+                buf = np.full((bucket, st.d), SENTINEL, np.float32)
+                buf[:dn] = C_sap[st.n_main: st.n_total]
+                self._C_delta = jnp.asarray(buf)
+            else:
+                self._C_delta = None
+        elif self.kind == "ivf":
+            self._attach_ivf(C_sap)
+        # hnsw: the graph already holds its ciphertexts, nothing to refresh
+
+    def _attach_ivf(self, C_sap: np.ndarray):
+        st = self.store
+        if self.ivf is None or self._attached_gen != st.main_gen:
+            base_n = st.n_main if st.n_main else st.n_total
+            rows = np.flatnonzero(st.alive_view[:base_n])
+            if rows.size == 0:          # base region fully tombstoned:
+                base_n = st.n_total     # recover by building over the delta
+                rows = np.flatnonzero(st.alive_view[:base_n])
+            if rows.size:
+                ivf = IVFIndex(n_clusters=min(self.n_partitions, rows.size),
+                               seed=self.seed).build(C_sap[rows])
+                ivf.lists = [rows[l] for l in ivf.lists]   # local -> row ids
+                self._assign = {int(r): c
+                                for c, l in enumerate(ivf.lists) for r in l}
+                self.ivf = ivf
+                self._ivf_built_upto = base_n
+                self._attached_gen = st.main_gen
+            else:                       # nothing alive anywhere; ivf stays
+                self.ivf = None         # None, so the next attach retries
+                self._assign = {}
+                self._ivf_built_upto = 0
+        # incremental assignment: new rows join their nearest centroid —
+        # no kmeans rerun, probes see inserts immediately
+        if self.ivf is not None and self._ivf_built_upto < st.n_total:
+            new = np.arange(self._ivf_built_upto, st.n_total)
+            new = new[st.alive_view[new]]
+            if new.size:
+                X = C_sap[new]
+                d2 = (((X[:, None, :] - self.ivf.centroids[None]) ** 2)
+                      .sum(-1))
+                cl = d2.argmin(1)
+                for c in np.unique(cl):       # one concat per cluster
+                    sel = new[cl == c]
+                    self.ivf.lists[c] = np.concatenate(
+                        [self.ivf.lists[c], sel])
+                    for row in sel:
+                        self._assign[int(row)] = int(c)
+            self._ivf_built_upto = st.n_total
+        self._refresh_scan_array(C_sap)
+
+    def _refresh_scan_array(self, C_sap: np.ndarray):
+        """Sentinel-padded capacity-bucketed device copy of all rows for
+        the jitted masked scan.  Cached on (main_gen, n_total): pure
+        delete bursts skip the rebuild entirely (tombstoned rows leave
+        the probe lists eagerly, so the stale scan row is unreachable),
+        and insert bursts inside an unchanged bucket ship only the new
+        rows instead of the whole database."""
+        st = self.store
+        snapshot = (st.main_gen, st.n_total)
+        if self._C_all is not None and self._scan_snapshot == snapshot:
+            return
+        bucket = next_bucket(st.n_total, minimum=256)
+        old_gen, old_n = self._scan_snapshot
+        if (self._C_all is not None and old_gen == st.main_gen
+                and self._C_all.shape[0] == bucket):
+            self._C_all = self._C_all.at[old_n: st.n_total].set(
+                jnp.asarray(C_sap[old_n: st.n_total]))
+        else:
+            buf = np.full((bucket, st.d), SENTINEL, np.float32)
+            buf[: st.n_total] = C_sap
+            self._C_all = jnp.asarray(buf)
+        self._scan_snapshot = snapshot
+
+    # ------------------------------------------------------- candidates
+
+    def _mask_alive(self, cand: np.ndarray, valid: np.ndarray):
+        """valid &= alive, with out-of-range ids (sentinel pad slots)
+        invalidated and clamped so the host-side alive lookup is safe."""
+        st = self.store
+        in_range = cand < st.n_total
+        safe = np.where(in_range, cand, 0)
+        return safe, valid & in_range & st.alive_view[safe]
+
+    def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
+        if self.kind == "flat":
+            return self._candidates_flat(Q_sap, kp)
+        if self.kind == "ivf":
+            return self._candidates_ivf(Q_sap, kp)
+        return self._candidates_hnsw(Q_sap, kp, ef_search)
+
+    def _candidates_flat(self, Q_sap: np.ndarray, kp: int):
+        st = self.store
+        nq = Q_sap.shape[0]
+        Qd = jnp.asarray(Q_sap, jnp.float32)
+        parts, evals = [], 0
+        if self._C_main is not None:
+            n_main = int(self._C_main.shape[0])
+            dist, idx = l2_ops.knn(Qd, self._C_main, min(kp, n_main),
+                                   chunk=min(4096, n_main),
+                                   use_kernel=self.use_kernel)
+            cand = np.asarray(idx, np.int32)
+            safe, valid = self._mask_alive(cand,
+                                           np.ones(cand.shape, bool))
+            parts.append((np.asarray(dist), safe, valid))
+            evals += nq * n_main
+        if self._C_delta is not None:
+            bucket = int(self._C_delta.shape[0])
+            dist, idx = l2_ops.knn(Qd, self._C_delta, min(kp, bucket),
+                                   chunk=bucket, use_kernel=self.use_kernel)
+            raw = np.asarray(idx, np.int32)
+            in_delta = raw < self._delta_n
+            cand = raw + np.int32(self._delta_base)
+            safe, valid = self._mask_alive(cand, in_delta)
+            parts.append((np.asarray(dist), safe, valid))
+            evals += nq * self._delta_n
+        dists = np.concatenate([d for d, _, _ in parts], axis=1)
+        cand = np.concatenate([c for _, c, _ in parts], axis=1)
+        valid = np.concatenate([v for _, _, v in parts], axis=1)
+        # merge main and delta blocks into one globally distance-sorted
+        # list — the engine contract (refine="none" takes cand[:, :k])
+        order = np.argsort(np.where(valid, dists, np.inf), axis=1,
+                           kind="stable")
+        return (np.take_along_axis(cand, order, axis=1),
+                np.take_along_axis(valid, order, axis=1), evals)
+
+    def _candidates_ivf(self, Q_sap: np.ndarray, kp: int):
+        st = self.store
+        nq = Q_sap.shape[0]
+        if self.ivf is None:                      # nothing alive to probe
+            return (np.zeros((nq, kp), np.int32),
+                    np.zeros((nq, kp), bool), 0)
+        Q = np.asarray(Q_sap, np.float32)
+        pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        ids, vout = se.scan_ivf_pools(
+            self._C_all, Q, pools, kp,
+            pool_mask=lambda p: st.alive_view[p])
+        evals = sum(p.size for p in pools) + nq * self.ivf.centroids.shape[0]
+        return ids, vout, evals
+
+    def _candidates_hnsw(self, Q_sap: np.ndarray, kp: int, ef_search: int):
+        cand, valid, evals = se.traverse_graph_candidates(
+            self.graph, Q_sap, kp, ef_search)
+        safe, valid = self._mask_alive(cand, valid)
+        return safe, valid, evals

@@ -1,0 +1,136 @@
+"""Per-collection serving telemetry (DESIGN.md §8).
+
+Every number the runtime reports is derived from the engine's uniform
+`SearchStats` plus batcher-side timestamps — there is no second
+accounting path to drift from the engine's.
+
+Counters and gauges per collection:
+  * request / reject / batch counts, insert / delete / compaction counts;
+  * QPS over a sliding window;
+  * batch occupancy (real requests per flushed batch — the coalescing
+    win; > 1 means the micro-batcher is actually batching);
+  * p50 / p99 request sojourn latency (enqueue -> result) from a bounded
+    reservoir of recent requests;
+  * queue depth gauge (set by the batcher on every transition);
+  * jit recompile tracking: `jit_cache_size()` sums the executable-cache
+    sizes of the jitted search/encrypt entry points, so a bench or test
+    can assert "zero recompiles after warmup across bucketed shapes".
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+__all__ = ["CollectionTelemetry", "jit_cache_size"]
+
+
+def jit_cache_size() -> int:
+    """Total cached-executable count across the runtime's jitted entry
+    points.  A steady value across a traffic phase == zero recompiles."""
+    from ...core import dce, dcpe
+    from ...kernels.dce_comp import ops as dce_ops
+    from ...kernels.l2_topk import ops as l2_ops
+    from .. import search_engine as se
+
+    fns = (
+        se.refine_candidates,
+        se._masked_pruned_scan,
+        l2_ops.knn,
+        dce_ops.batched_top_k_by_wins,
+        dce._encrypt_jax_core,
+        dcpe._encrypt_jax,
+    )
+    return sum(f._cache_size() for f in fns)
+
+
+class CollectionTelemetry:
+    """Thread-safe rolling metrics for one collection."""
+
+    def __init__(self, window_s: float = 60.0, reservoir: int = 1024):
+        self.window_s = float(window_s)
+        self._t0 = time.monotonic()
+        self._lock = threading.Lock()
+        self._latencies = collections.deque(maxlen=reservoir)
+        self._flushes = collections.deque()        # (t, n_real_requests)
+        self.n_requests = 0
+        self.n_rejected = 0
+        self.n_batches = 0
+        self.n_batched_requests = 0
+        self.n_inserts = 0
+        self.n_deletes = 0
+        self.n_compactions = 0
+        self.queue_depth = 0
+        self.last_backend = ""
+
+    # ------------------------------------------------------------ recording
+
+    def record_submit(self, queue_depth: int):
+        with self._lock:
+            self.n_requests += 1
+            self.queue_depth = queue_depth
+
+    def record_reject(self):
+        with self._lock:
+            self.n_rejected += 1
+
+    def record_flush(self, n_real: int, latencies_s, backend: str,
+                     queue_depth: int):
+        now = time.monotonic()
+        with self._lock:
+            self.n_batches += 1
+            self.n_batched_requests += n_real
+            self.queue_depth = queue_depth
+            self.last_backend = backend
+            self._flushes.append((now, n_real))
+            self._latencies.extend(float(x) for x in latencies_s)
+            horizon = now - self.window_s
+            while self._flushes and self._flushes[0][0] < horizon:
+                self._flushes.popleft()
+
+    def record_ingest(self, n_inserted: int = 0, n_deleted: int = 0,
+                      compacted: bool = False):
+        with self._lock:
+            self.n_inserts += n_inserted
+            self.n_deletes += n_deleted
+            self.n_compactions += int(compacted)
+
+    # ------------------------------------------------------------- reading
+
+    @staticmethod
+    def _percentile(sorted_xs: list[float], p: float) -> float:
+        if not sorted_xs:
+            return 0.0
+        i = min(len(sorted_xs) - 1, int(round(p * (len(sorted_xs) - 1))))
+        return sorted_xs[i]
+
+    def snapshot(self) -> dict:
+        now = time.monotonic()
+        with self._lock:
+            horizon = now - self.window_s
+            # prune here too: record_flush-only pruning would leave span
+            # stretching past the window after a quiet gap, deflating qps
+            while self._flushes and self._flushes[0][0] < horizon:
+                self._flushes.popleft()
+            served = sum(n for _, n in self._flushes)
+            # rate over the observed lifetime, capped at the window — a
+            # single fresh flush must not read as thousands of QPS
+            span = min(self.window_s, now - self._t0)
+            lat = sorted(self._latencies)
+            occupancy = (self.n_batched_requests / self.n_batches
+                         if self.n_batches else 0.0)
+            return {
+                "backend": self.last_backend,
+                "n_requests": self.n_requests,
+                "n_rejected": self.n_rejected,
+                "n_batches": self.n_batches,
+                "n_inserts": self.n_inserts,
+                "n_deletes": self.n_deletes,
+                "n_compactions": self.n_compactions,
+                "queue_depth": self.queue_depth,
+                "qps": served / span if span > 0 else 0.0,
+                "batch_occupancy": occupancy,
+                "p50_latency_s": self._percentile(lat, 0.50),
+                "p99_latency_s": self._percentile(lat, 0.99),
+            }

@@ -39,11 +39,13 @@ import numpy as np
 from ..core import secure_knn
 from ..core.hnsw import HNSW
 from ..core.ivf import IVFIndex
+from ..kernels.common import next_bucket
 from ..kernels.dce_comp import ops as dce_ops
 from ..kernels.l2_topk import ops as l2_ops
 
 __all__ = ["SearchStats", "SecureSearchEngine", "FlatScanFilter",
-           "IVFScanFilter", "HNSWGraphFilter", "refine_candidates"]
+           "IVFScanFilter", "HNSWGraphFilter", "refine_candidates",
+           "scan_ivf_pools", "traverse_graph_candidates"]
 
 
 @dataclasses.dataclass
@@ -111,7 +113,53 @@ def _masked_pruned_scan(C_sap, Q, cand, valid, kp: int):
 # ---------------------------------------------------------------------------
 # Filter backends.  Each returns (cand (nq, kp') int32, valid (nq, kp') bool,
 # n_dist_evals) given a batch of DCPE-encrypted queries.
+#
+# The two shared scan/traversal bodies below are used both by the static
+# backends here and by the runtime's mutable DeltaAwareBackend
+# (serving/runtime/ingest.py) — one copy, so bucketing rules and eval
+# accounting cannot diverge between the frozen and the mutating paths.
 # ---------------------------------------------------------------------------
+
+
+def scan_ivf_pools(C_dev, Q_sap: np.ndarray, pools, kp: int,
+                   pool_mask=None):
+    """Pad ragged probe pools to a 128-bucketed rectangle and run the
+    jitted masked scan over C_dev.  pool_mask(p) -> bool mask lets a
+    caller pre-invalidate pool entries (e.g. tombstoned rows).
+    Returns (ids (nq, kp), valid (nq, kp))."""
+    nq = Q_sap.shape[0]
+    # power-of-two-bucket the padded pool width: probe-pool sizes vary
+    # per batch and grow with ingestion, so a finer rounding (e.g. to
+    # 128-multiples) would recompile the jitted scan at every boundary
+    # crossing — pow2 bounds the distinct widths to O(log n)
+    L = next_bucket(max(kp, max((p.size for p in pools), default=1), 1),
+                    minimum=128)
+    cand = np.zeros((nq, L), np.int32)
+    valid = np.zeros((nq, L), bool)
+    for qi, p in enumerate(pools):                      # id layout only
+        cand[qi, : p.size] = p
+        valid[qi, : p.size] = True if pool_mask is None else pool_mask(p)
+    ids, vout = _masked_pruned_scan(
+        C_dev, jnp.asarray(np.asarray(Q_sap, np.float32)),
+        jnp.asarray(cand), jnp.asarray(valid), kp)
+    return np.asarray(ids), np.asarray(vout)
+
+
+def traverse_graph_candidates(index: HNSW, Q_sap: np.ndarray, kp: int,
+                              ef_search: int):
+    """Per-query host-side HNSW traversal (pointer chasing stays on CPU,
+    DESIGN.md §3), padded to an (nq, kp) rectangle.
+    Returns (cand, valid, n_dist_evals)."""
+    nq = Q_sap.shape[0]
+    evals0 = index.n_dist_evals
+    cand = np.zeros((nq, kp), np.int32)
+    valid = np.zeros((nq, kp), bool)
+    for qi in range(nq):
+        ids, _ = index.search(np.asarray(Q_sap[qi]), kp,
+                              ef=max(ef_search, kp))
+        cand[qi, : ids.size] = ids
+        valid[qi, : ids.size] = True
+    return cand, valid, index.n_dist_evals - evals0
 
 class FlatScanFilter:
     """Exhaustive Pallas l2_topk scan over all DCPE ciphertexts."""
@@ -165,22 +213,11 @@ class IVFScanFilter:
     def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
         Q = np.asarray(Q_sap, np.float32)
         nq = Q.shape[0]
-        cent = self.ivf.centroids
         pools = [self.ivf.probe(q, self.nprobe) for q in Q]
-        # round the padded pool width up to a bucket so the jitted scan
-        # compiles once, not per distinct partition-combination width
-        L = max(kp, max(p.size for p in pools))
-        L = -(-L // 128) * 128
-        cand = np.zeros((nq, L), np.int32)
-        valid = np.zeros((nq, L), bool)
-        for qi, p in enumerate(pools):                      # id layout only
-            cand[qi, :p.size] = p
-            valid[qi, :p.size] = True
-        ids, vout = _masked_pruned_scan(
-            self._C, jnp.asarray(Q), jnp.asarray(cand), jnp.asarray(valid),
-            kp)
-        evals = sum(p.size for p in pools) + nq * cent.shape[0]
-        return np.asarray(ids), np.asarray(vout), evals
+        ids, vout = scan_ivf_pools(self._C, Q, pools, kp)
+        evals = sum(p.size for p in pools) \
+            + nq * self.ivf.centroids.shape[0]
+        return ids, vout, evals
 
 
 class HNSWGraphFilter:
@@ -200,16 +237,7 @@ class HNSWGraphFilter:
         pass                      # the graph already stores its ciphertexts
 
     def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
-        nq = Q_sap.shape[0]
-        evals0 = self.index.n_dist_evals
-        cand = np.zeros((nq, kp), np.int32)
-        valid = np.zeros((nq, kp), bool)
-        for qi in range(nq):                    # graph traversal: host-side
-            ids, _ = self.index.search(np.asarray(Q_sap[qi]), kp,
-                                       ef=max(ef_search, kp))
-            cand[qi, :ids.size] = ids
-            valid[qi, :ids.size] = True
-        return cand, valid, self.index.n_dist_evals - evals0
+        return traverse_graph_candidates(self.index, Q_sap, kp, ef_search)
 
 
 _BACKENDS = {"flat": FlatScanFilter, "ivf": IVFScanFilter}
@@ -257,7 +285,12 @@ class SecureSearchEngine:
 
     def _ensure_attached(self):
         if self._dirty:
-            self._C_dce_dev = jnp.asarray(self._C_dce)
+            # a backend may manage the refine array's device residency
+            # itself (the runtime's mutable store ships only appended
+            # rows, DESIGN.md §8); default is a full upload
+            provider = getattr(self.backend, "dce_device", None)
+            self._C_dce_dev = (jnp.asarray(self._C_dce) if provider is None
+                               else provider(self._C_dce))
             self.backend.attach(self._C_sap, self)
             self._dirty = False
 

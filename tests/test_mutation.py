@@ -1,0 +1,228 @@
+"""Index-mutation semantics (ISSUE 2 satellite): HNSW insert/delete after
+build preserves recall and never returns deleted ids, and the engine
+parity guarantee (looped == batched) survives a mutation sequence on
+every filter backend, through the runtime's delta-aware store
+(DESIGN.md §8).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import dcpe
+from repro.core.hnsw import HNSW
+from repro.data import synth
+from repro.serving.runtime import Collection
+
+K = 10
+BACKENDS = ["flat", "ivf", "hnsw"]
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return synth.make_dataset("deep1m", n=700, n_queries=10, k_gt=30,
+                              seed=11, d=32)
+
+
+def _collection(ds, backend, **kw):
+    beta = dcpe.suggest_beta(ds.base, fraction=0.03)
+    kw.setdefault("compact_every", 10_000)     # explicit compaction only
+    if backend == "ivf":
+        kw.setdefault("n_partitions", 16)
+        kw.setdefault("nprobe", 8)
+    if backend == "hnsw":
+        kw.setdefault("hnsw_M", 12)
+        kw.setdefault("hnsw_ef_construction", 100)
+    return Collection("t0", "c0", ds.d, backend=backend, sap_beta=beta,
+                      seed=11, **kw)
+
+
+def _enc_queries(col, queries):
+    user = col.new_user()
+    qs, ts = zip(*(user.encrypt_query(q) for q in queries))
+    return np.stack(qs), np.stack(ts)
+
+
+# ---------------------------------------------------------------- core HNSW
+
+
+def test_hnsw_mutation_sequence_preserves_recall(ds):
+    """build -> insert burst -> delete burst: recall against the exact
+    ground truth of the surviving set stays high, deleted ids never
+    surface (plaintext graph level, paper §V-D)."""
+    idx = HNSW(dim=ds.d, M=12, ef_construction=100, seed=2)
+    idx.build(ds.base[:500])
+    for x in ds.base[500:600]:
+        idx.insert(x)
+    deleted = list(range(0, 60, 2)) + list(range(500, 530))
+    for node in deleted:
+        idx.delete(node)
+    alive = np.setdiff1d(np.arange(600), deleted)
+    gt = synth.ground_truth(ds.base[alive], ds.queries, K)
+    found = np.stack([idx.search(q, K, ef=96)[0] for q in ds.queries])
+    assert not np.isin(found, deleted).any()
+    mapped_gt = alive[gt]
+    rec = np.mean([len(set(f) & set(g)) / K
+                   for f, g in zip(found.tolist(), mapped_gt.tolist())])
+    assert rec >= 0.8, rec
+
+
+def test_hnsw_delete_then_reinsert_region(ds):
+    """Deleting a whole neighborhood and inserting replacements keeps the
+    graph navigable (repair + incremental insert compose)."""
+    idx = HNSW(dim=ds.d, M=12, ef_construction=100, seed=3)
+    idx.build(ds.base[:300])
+    victims = synth.ground_truth(ds.base[:300], ds.queries[:1], 5)[0]
+    for v in victims:
+        idx.delete(int(v))
+    new_nodes = [idx.insert(ds.queries[0] + 1e-3 * ds.base[i, 0])
+                 for i in range(3)]
+    ids, _ = idx.search(ds.queries[0], 5, ef=96)
+    assert not np.isin(ids, victims).any()
+    assert set(new_nodes) <= set(ids.tolist())
+
+
+# ------------------------------------------------- engine-level, per backend
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mutation_semantics_per_backend(ds, backend):
+    """Searches issued after insert/delete see inserts immediately and
+    never return deleted ids — across all three filter backends."""
+    col = _collection(ds, backend)
+    try:
+        col.insert(ds.base[:600])
+        Q, T = _enc_queries(col, ds.queries)
+        # a planted duplicate of query 0 must be returned as a neighbor
+        new = col.insert(ds.queries[0][None])
+        ids, _ = col.search_batch(Q[:1], T[:1], K, ratio_k=8, ef_search=128)
+        assert new[0] in ids[0], (backend, new, ids)
+        # delete it (plus a true neighbor): neither may ever come back
+        victim = int(ds.gt[1, 0])
+        col.delete([int(new[0]), victim])
+        ids2, _ = col.search_batch(Q[:4], T[:4], K, ratio_k=8,
+                                   ef_search=128)
+        assert not np.isin(ids2, [int(new[0]), victim]).any(), backend
+        # surviving results still have high recall
+        rec = synth.recall_at_k(ids2, ds.gt[:4], K)
+        assert rec >= 0.7, (backend, rec)
+    finally:
+        col.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parity_after_mutation_sequence(ds, backend):
+    """Looped batch-of-one == batched, exactly, after a mutation sequence
+    (insert burst, deletes, second insert burst, compaction)."""
+    col = _collection(ds, backend)
+    try:
+        col.insert(ds.base[:500])
+        col.delete(np.arange(0, 40, 4))
+        col.insert(ds.base[500:640])
+        col.delete(np.arange(520, 540, 3))
+        col.compact()
+        col.insert(ds.base[640:700])          # fresh delta after compact
+        Q, T = _enc_queries(col, ds.queries)
+        batched, stats = col.search_batch(Q, T, K, ratio_k=6)
+        assert stats.backend == backend
+        for qi in range(Q.shape[0]):
+            single, _ = col.search_batch(Q[qi: qi + 1], T[qi: qi + 1], K,
+                                         ratio_k=6)
+            np.testing.assert_array_equal(batched[qi], single[0],
+                                          err_msg=f"{backend} q{qi}")
+    finally:
+        col.close()
+
+
+@pytest.mark.parametrize("backend", ["flat", "ivf"])
+def test_compaction_preserves_results(ds, backend):
+    """Promoting delta -> main changes acceleration state, not answers
+    (flat exactly; IVF up to probe-set drift, bounded by recall)."""
+    col = _collection(ds, backend)
+    try:
+        col.insert(ds.base[:400])
+        col.compact()
+        col.insert(ds.base[400:650])          # large live delta
+        col.delete([5, 405])
+        Q, T = _enc_queries(col, ds.queries)
+        before, _ = col.search_batch(Q, T, K, ratio_k=8, ef_search=128)
+        col.compact()
+        after, _ = col.search_batch(Q, T, K, ratio_k=8, ef_search=128)
+        if backend == "flat":
+            for b, a in zip(before.tolist(), after.tolist()):
+                assert set(b) == set(a)
+        else:
+            rec = synth.recall_at_k(after, ds.gt, K)
+            assert rec >= 0.7, rec
+        assert not np.isin(after, [5, 405]).any()
+    finally:
+        col.close()
+
+
+def test_delete_unknown_id_raises(ds):
+    col = _collection(ds, "flat")
+    try:
+        col.insert(ds.base[:20])
+        with pytest.raises(KeyError):
+            col.delete([100])
+        col.delete([3])
+        with pytest.raises(KeyError):          # double delete
+            col.delete([3])
+    finally:
+        col.close()
+
+
+def test_delete_batch_with_bad_id_is_atomic(ds):
+    """A batch containing one invalid id mutates nothing, and the
+    collection keeps serving correct results afterwards."""
+    col = _collection(ds, "flat")
+    try:
+        col.insert(ds.base[:200])
+        col.compact()
+        Q, T = _enc_queries(col, ds.queries[:2])
+        victim = int(ds.gt[0, 0])
+        with pytest.raises(KeyError):
+            col.delete([victim, 999_999])       # second id is bogus
+        assert col.store.n_alive == 200         # nothing was tombstoned
+        ids, _ = col.search_batch(Q, T, K, ratio_k=8, ef_search=128)
+        assert victim in ids[0]                 # victim survived intact
+        with pytest.raises(KeyError):
+            col.delete([victim, victim])        # duplicate in one batch
+        assert col.store.alive_view[victim]
+    finally:
+        col.close()
+
+
+def test_flat_delta_candidates_are_globally_distance_sorted(ds):
+    """The engine's refine="none" baseline takes cand[:, :k] directly,
+    so the flat backend must merge its main and delta scan blocks by
+    distance — a delta row nearer than the k-th main row has to appear
+    in the first k columns (regression: blocks were concatenated)."""
+    col = _collection(ds, "flat")
+    try:
+        col.insert(ds.base[:300])
+        col.compact()
+        planted = col.insert(ds.queries[0][None])   # delta: exact match
+        user = col.new_user()
+        cq, tq = user.encrypt_query(ds.queries[0])
+        ids, _ = col._engine.search(cq, tq, K, ratio_k=8, refine="none")
+        assert planted[0] in ids, ids
+    finally:
+        col.close()
+
+
+def test_ivf_recovers_after_base_region_fully_deleted(ds):
+    """Tombstoning every row in the built region must not blind the IVF
+    backend to later inserts (regression: ivf stayed None forever)."""
+    col = _collection(ds, "ivf")
+    try:
+        first = col.insert(ds.base[:64])
+        col.compact()
+        Q, T = _enc_queries(col, ds.queries[:1])
+        col.search_batch(Q, T, K)               # builds ivf over main
+        col.delete(first)                       # kill the whole base
+        planted = col.insert(ds.queries[0][None])
+        ids, _ = col.search_batch(Q, T, K, ratio_k=8)
+        assert planted[0] in ids[0]
+        assert not np.isin(ids, first).any()
+    finally:
+        col.close()

@@ -1,0 +1,354 @@
+"""Online serving runtime: micro-batcher scheduling, bucketed shapes,
+multi-tenant routing, telemetry, and admission control (DESIGN.md §8)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import dcpe
+from repro.data import synth
+from repro.serving.runtime import (CollectionManager, MicroBatcher,
+                                   QueueFullError, TenantIsolationError,
+                                   batch_buckets, jit_cache_size)
+from repro.serving.search_engine import SearchStats
+
+K = 10
+D = 24
+
+
+def _fake_stats(nq):
+    return SearchStats(latency_s=0.0, filter_dist_evals=0,
+                       refine_comparisons=0, bytes_up=0, bytes_down=0,
+                       n_queries=nq, backend="fake")
+
+
+class FakeEngine:
+    """Deterministic run_batch: ids[i] = round(Q[i, 0]) .. +k, recorded."""
+
+    def __init__(self, delay_s: float = 0.0):
+        self.calls = []            # (batch_shape, k)
+        self.delay_s = delay_s
+        self.gate = threading.Event()
+        self.gate.set()
+
+    def __call__(self, Q, T, k, ratio_k=8.0, ef_search=96):
+        self.gate.wait(timeout=10.0)
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        Q = np.atleast_2d(Q)
+        self.calls.append((Q.shape, k))
+        base = np.round(Q[:, 0]).astype(np.int64)
+        ids = base[:, None] + np.arange(k)[None, :]
+        return ids, _fake_stats(Q.shape[0])
+
+
+def _req(i):
+    return np.full(D, float(i), np.float32), np.zeros(2 * D + 16, np.float32)
+
+
+# ------------------------------------------------------------- batcher unit
+
+
+def test_batch_buckets_shapes():
+    assert batch_buckets(32) == [1, 2, 4, 8, 16, 32]
+    assert batch_buckets(24) == [1, 2, 4, 8, 16, 24]
+    assert batch_buckets(1) == [1]
+
+
+def test_coalesces_concurrent_requests_and_pads_to_bucket():
+    eng = FakeEngine()
+    eng.gate.clear()                       # hold the worker at the gate
+    with MicroBatcher(eng, max_batch=8, max_wait_ms=40.0) as mb:
+        futs = [mb.submit(*_req(i), K) for i in range(5)]
+        eng.gate.set()
+        res = [f.result(timeout=10) for f in futs]
+    for i, ids in enumerate(res):          # results scatter to the right
+        np.testing.assert_array_equal(ids, i + np.arange(K))
+    # 5 real requests ride one flush, padded to the 8-bucket
+    flush_shapes = [s for s, _ in eng.calls]
+    assert (8, D) in flush_shapes and len(flush_shapes) == 1
+
+
+def test_full_batch_flushes_without_waiting_deadline():
+    eng = FakeEngine()
+    eng.gate.clear()
+    with MicroBatcher(eng, max_batch=4, max_wait_ms=10_000.0) as mb:
+        futs = [mb.submit(*_req(i), K) for i in range(4)]
+        eng.gate.set()
+        t0 = time.monotonic()
+        for f in futs:
+            f.result(timeout=10)
+        assert time.monotonic() - t0 < 5.0     # did not sit out 10 s
+    assert eng.calls[0][0] == (4, D)
+
+
+def test_deadline_flush_for_lone_request():
+    eng = FakeEngine()
+    with MicroBatcher(eng, max_batch=32, max_wait_ms=30.0) as mb:
+        ids = mb.search(*_req(3), K, timeout=10)
+    np.testing.assert_array_equal(ids, 3 + np.arange(K))
+    assert eng.calls[0][0] == (1, D)           # bucket 1, no padding waste
+
+
+def test_mixed_k_requests_flush_as_separate_groups():
+    eng = FakeEngine()
+    eng.gate.clear()
+    with MicroBatcher(eng, max_batch=8, max_wait_ms=30.0) as mb:
+        f1 = [mb.submit(*_req(i), 5) for i in range(3)]
+        f2 = [mb.submit(*_req(10 + i), 7) for i in range(3)]
+        eng.gate.set()
+        r1 = [f.result(timeout=10) for f in f1]
+        r2 = [f.result(timeout=10) for f in f2]
+    assert all(r.shape == (5,) for r in r1)
+    assert all(r.shape == (7,) for r in r2)
+    assert sorted(k for _, k in eng.calls) == [5, 7]
+
+
+def test_backpressure_rejects_when_queue_full():
+    eng = FakeEngine()
+    eng.gate.clear()                       # wedge the worker
+    mb = MicroBatcher(eng, max_batch=2, max_wait_ms=5.0, max_queue=3)
+    try:
+        accepted = []
+        with pytest.raises(QueueFullError):
+            for i in range(20):
+                accepted.append(mb.submit(*_req(i), K))
+        assert len(accepted) >= 3          # queue capacity was usable
+        eng.gate.set()
+        for f in accepted:
+            f.result(timeout=10)           # backlog drains after release
+    finally:
+        mb.close()
+
+
+def test_malformed_request_fails_its_flush_not_the_scheduler():
+    """A bad request's flush errors onto its futures; the worker thread
+    survives and keeps serving later requests (liveness regression)."""
+    eng = FakeEngine()
+    eng.gate.clear()
+    with MicroBatcher(eng, max_batch=8, max_wait_ms=20.0) as mb:
+        good1 = mb.submit(*_req(1), K)
+        bad = mb.submit(np.zeros(D + 3, np.float32),
+                        np.zeros(2 * D + 16, np.float32), K)  # ragged Q
+        eng.gate.set()
+        with pytest.raises(ValueError):          # np.stack shape mismatch
+            bad.result(timeout=10)
+        with pytest.raises(ValueError):
+            good1.result(timeout=10)             # same doomed flush
+        good2 = mb.submit(*_req(2), K)           # scheduler still alive
+        np.testing.assert_array_equal(good2.result(timeout=10),
+                                      2 + np.arange(K))
+
+
+def test_cancelled_future_does_not_kill_scheduler():
+    """A client cancelling its pending future must not crash the flush
+    or the scheduler thread (InvalidStateError race regression)."""
+    eng = FakeEngine()
+    eng.gate.clear()
+    with MicroBatcher(eng, max_batch=4, max_wait_ms=10.0) as mb:
+        f1 = mb.submit(*_req(1), K)
+        f2 = mb.submit(*_req(2), K)
+        assert f1.cancel()                     # still pending: cancellable
+        eng.gate.set()
+        np.testing.assert_array_equal(f2.result(timeout=10),
+                                      2 + np.arange(K))
+        f3 = mb.submit(*_req(3), K)            # scheduler still alive
+        np.testing.assert_array_equal(f3.result(timeout=10),
+                                      3 + np.arange(K))
+
+
+def test_engine_exception_propagates_to_futures():
+    def boom(Q, T, k, **kw):
+        raise RuntimeError("engine down")
+
+    with MicroBatcher(boom, max_batch=4, max_wait_ms=5.0) as mb:
+        fut = mb.submit(*_req(0), K)
+        with pytest.raises(RuntimeError, match="engine down"):
+            fut.result(timeout=10)
+
+
+def test_close_drains_pending_then_rejects():
+    eng = FakeEngine(delay_s=0.01)
+    mb = MicroBatcher(eng, max_batch=4, max_wait_ms=2.0)
+    futs = [mb.submit(*_req(i), K) for i in range(6)]
+    mb.close()
+    for f in futs:
+        assert f.result(timeout=10) is not None
+    with pytest.raises(RuntimeError):
+        mb.submit(*_req(0), K)
+
+
+# --------------------------------------------------------- tenancy routing
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return synth.make_dataset("deep1m", n=400, n_queries=6, k_gt=20,
+                              seed=7, d=D)
+
+
+@pytest.fixture()
+def mgr(ds):
+    beta = dcpe.suggest_beta(ds.base, fraction=0.03)
+    with CollectionManager(sap_beta=beta, max_wait_ms=3.0) as m:
+        yield m
+
+
+def test_strict_tenant_routing(mgr, ds):
+    mgr.create_collection("acme", "docs", D, seed=1)
+    mgr.create_collection("globex", "docs", D, seed=2)
+    mgr.insert("acme", "docs", ds.base[:100])
+    mgr.insert("globex", "docs", ds.base[100:200])
+    # wrong tenant for an existing collection name -> isolation error
+    with pytest.raises(TenantIsolationError):
+        mgr.collection("initech", "docs")
+    # unknown name raises the *same* error: "owned by someone else" and
+    # "nonexistent" must be indistinguishable (no enumeration oracle)
+    with pytest.raises(TenantIsolationError) as e_other:
+        mgr.collection("initech", "docs")
+    with pytest.raises(TenantIsolationError) as e_none:
+        mgr.collection("initech", "no-such-thing")
+    assert type(e_other.value) is type(e_none.value)
+    assert isinstance(e_none.value, KeyError)      # still a lookup error
+    # per-tenant keys differ: same name, independent crypto
+    ka = mgr.collection("acme", "docs").owner.keys.dce_key.M3
+    kg = mgr.collection("globex", "docs").owner.keys.dce_key.M3
+    assert not np.allclose(ka, kg)
+    # duplicate create rejected
+    with pytest.raises(ValueError):
+        mgr.create_collection("acme", "docs", D)
+
+
+def test_default_seeds_yield_distinct_tenant_keys(mgr):
+    """Two tenants that never pass a seed must still get different key
+    material (regression: a shared default seed made keys collide)."""
+    a = mgr.create_collection("t-a", "c", D)
+    b = mgr.create_collection("t-b", "c", D)
+    assert not np.allclose(a.owner.keys.dce_key.M3, b.owner.keys.dce_key.M3)
+
+
+def test_submit_rejects_wrong_dimension_query(mgr, ds):
+    col = mgr.create_collection("acme", "dims", D)
+    col.insert(ds.base[:50])
+    with pytest.raises(ValueError, match="query shapes"):
+        col.submit(np.zeros(D + 1, np.float32),
+                   np.zeros(2 * D + 16, np.float32), K)
+    with pytest.raises(ValueError, match="query shapes"):
+        col.submit(np.zeros(D, np.float32), np.zeros(7, np.float32), K)
+
+
+def test_store_append_rejects_row_count_mismatch(mgr, ds):
+    col = mgr.create_collection("acme", "wire", D)
+    C_sap, C_dce = col.owner.encrypt_vectors(ds.base[:3])
+    with pytest.raises(ValueError, match="ciphertext shapes"):
+        col.insert_encrypted(C_sap, C_dce[:1])   # truncated wire payload
+    col.insert_encrypted(C_sap, C_dce)           # matched payload is fine
+    assert col.store.n_total == 3
+
+
+def test_cross_tenant_trapdoors_never_touch_other_store(mgr, ds):
+    """Routing is by (tenant, collection): tenant B's search runs only on
+    B's ciphertexts even when A's collection shares the name."""
+    a = mgr.create_collection("acme", "docs", D, seed=1)
+    b = mgr.create_collection("globex", "docs", D, seed=2)
+    a.insert(ds.base[:200])
+    b.insert(ds.base[200:250])
+    qa = a.new_user().encrypt_query(ds.queries[0])
+    ids = mgr.search("acme", "docs", *qa, K, ef_search=96)
+    assert (ids[ids >= 0] < 200).all()          # rows of A's store only
+    ids_b = mgr.search("globex", "docs", *qa, K)   # wrong keys: garbage,
+    assert ids_b.shape == (K,)                     # but never A's data
+
+
+def test_empty_collection_returns_sentinels(mgr):
+    mgr.create_collection("acme", "fresh", D)
+    q, t = _req(0)
+    ids = mgr.search("acme", "fresh", q, t, K)
+    assert (ids == -1).all()
+
+
+def test_drop_collection(mgr, ds):
+    mgr.create_collection("acme", "tmp", D)
+    mgr.drop_collection("acme", "tmp")
+    with pytest.raises(KeyError):
+        mgr.collection("acme", "tmp")
+
+
+# ------------------------------------------------- end-to-end + telemetry
+
+
+def test_concurrent_clients_results_match_direct_engine(mgr, ds):
+    col = mgr.create_collection("acme", "main", D, seed=3,
+                                max_wait_ms=20.0, verify_parity=True)
+    col.insert(ds.base)
+    user = col.new_user()
+    enc = [user.encrypt_query(q) for q in ds.queries]
+    futs = [col.submit(c, t, K, ef_search=96) for c, t in enc]
+    via_batcher = np.stack([f.result(timeout=30) for f in futs])
+    Q = np.stack([c for c, _ in enc])
+    T = np.stack([t for _, t in enc])
+    direct, _ = col.search_batch(Q, T, K, ef_search=96)
+    np.testing.assert_array_equal(via_batcher, direct)
+    snap = col.stats()
+    assert snap["n_requests"] == len(enc)
+    assert snap["batch_occupancy"] > 1.0        # coalescing happened
+    assert snap["p99_latency_s"] >= snap["p50_latency_s"] > 0
+    assert snap["n_alive"] == ds.n
+    assert synth.recall_at_k(via_batcher, ds.gt, K) >= 0.8
+
+
+def test_zero_recompiles_across_bucketed_batch_sizes(mgr, ds):
+    """After warmup over the bucketed shapes, traffic at every batch size
+    hits only cached executables (the acceptance criterion)."""
+    col = mgr.create_collection("acme", "warm", D, seed=4, max_batch=8,
+                                max_wait_ms=1.0)
+    col.insert(ds.base)
+    col.compact()
+    col.warmup(K, ratio_k=8.0, ef_search=96)
+    user = col.new_user()
+    enc = [user.encrypt_query(q) for q in ds.queries]
+    before = jit_cache_size()
+    for B in (1, 2, 3, 5, 6, 4, 1):            # ragged arrival patterns
+        Q = np.stack([enc[i % len(enc)][0] for i in range(B)])
+        T = np.stack([enc[i % len(enc)][1] for i in range(B)])
+        from repro.kernels.common import next_bucket
+        b = next_bucket(B, maximum=8)
+        Qp = np.concatenate([Q, np.repeat(Q[:1], b - B, 0)])
+        Tp = np.concatenate([T, np.repeat(T[:1], b - B, 0)])
+        col.search_batch(Qp, Tp, K, ratio_k=8.0, ef_search=96)
+    assert jit_cache_size() == before
+    # live ingestion: the first delta compiles its bucketed shapes once;
+    # further insert bursts inside the same capacity bucket must not —
+    # the refine sees the padded-capacity C_dce view, not raw n_total
+    col.insert(ds.base[:4])
+    q0, t0 = enc[0]
+    col.search_batch(q0[None], t0[None], K, ratio_k=8.0, ef_search=96)
+    settled = jit_cache_size()
+    for _ in range(3):
+        col.insert(ds.base[:4])
+        col.search_batch(q0[None], t0[None], K, ratio_k=8.0, ef_search=96)
+    assert jit_cache_size() == settled
+
+
+def test_telemetry_counts_rejects(ds):
+    beta = dcpe.suggest_beta(ds.base, fraction=0.03)
+    col = None
+    try:
+        from repro.serving.runtime import Collection
+        col = Collection("t", "c", D, sap_beta=beta, max_queue=1,
+                         max_wait_ms=200.0)
+        col.insert(ds.base[:50])
+        user = col.new_user()
+        q, t = user.encrypt_query(ds.queries[0])
+        # requests sit in the queue during the deadline wait, so with
+        # max_queue=1 the second concurrent submit is shed immediately
+        fut = col.submit(q, t, K)
+        with pytest.raises(QueueFullError):
+            col.submit(q, t, K)
+        assert fut.result(timeout=30) is not None
+        assert col.telemetry.snapshot()["n_rejected"] == 1
+    finally:
+        if col is not None:
+            col.close()

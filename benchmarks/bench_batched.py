@@ -1,47 +1,57 @@
 """Batched-engine throughput: flat / IVF / HNSW filter backends at
-several batch sizes (EXPERIMENTS.md §Perf cell 2).
+several batch sizes (EXPERIMENTS.md §Perf cell 2), driven through the
+public API (`repro.api`, DESIGN.md §9).
 
 Not a paper figure — the paper serves queries one at a time; this table
 is the systems extension showing what the unified batched engine
 (DESIGN.md §2) buys: one jitted refine per batch instead of a per-query
-loop, with identical ids to the per-query path."""
+loop, with identical ids to the per-query path.  One owner-encrypted
+corpus backs three collections, one per filter backend; every search is
+a typed `SearchRequest` (coalesce=False: straight to the locked engine
+call, no micro-batching in the measurement)."""
 
 from __future__ import annotations
 
-import numpy as np
+import dataclasses
 
+from repro.api import (DataOwnerClient, EncryptedQuery, IndexSpec,
+                       SearchParams, SearchRequest, SecureAnnService,
+                       suggest_beta)
 from repro.data import synth
-from repro.serving.search_engine import (HNSWGraphFilter, SecureSearchEngine)
 
-from .common import row, system, timeit
+from .common import dataset, row, timeit
 
 
 def run(n: int = 6000, batches=(1, 8, 32), k: int = 10) -> list[str]:
     nq = max(batches)
-    ds, owner, user, server = system("sift1m", n, nq, beta_fraction=0.03)
-    enc = [user.encrypt_query(q) for q in ds.queries]
-    Q = np.stack([c for c, _ in enc])
-    T = np.stack([t for _, t in enc])
-
-    engines = {
-        "flat": SecureSearchEngine(server.db.C_sap, server.db.C_dce,
-                                   backend="flat"),
-        "ivf": SecureSearchEngine(server.db.C_sap, server.db.C_dce,
-                                  backend="ivf", n_partitions=64, nprobe=8),
-        "hnsw": SecureSearchEngine(server.db.C_sap, server.db.C_dce,
-                                   backend=HNSWGraphFilter(server.db.index)),
-    }
+    ds = dataset("sift1m", n, nq)
+    spec = IndexSpec(tenant="bench", name="batched-hnsw", d=ds.d,
+                     backend="hnsw",
+                     sap_beta=suggest_beta(ds.base, fraction=0.03),
+                     hnsw_M=16, hnsw_ef_construction=120, seed=0)
+    owner = DataOwnerClient(spec)
+    corpus = owner.encrypt_corpus(ds.base)
+    user = owner.query_client()
+    query = user.encrypt_queries(ds.queries)
+    params = SearchParams(k=k, ratio_k=8, ef_search=128)
 
     rows = []
-    for name, eng in engines.items():
-        for B in batches:
-            t, (ids, stats) = timeit(
-                eng.search_batch, Q[:B], T[:B], k,
-                ratio_k=8, ef_search=128, repeats=2)
-            rec = synth.recall_at_k(ids, ds.gt[:B], k)
-            rows.append(row(
-                f"batched/{name}/B={B}", 1e6 * t / B,
-                f"qps={B / t:.1f} recall={rec:.3f} "
-                f"dist_evals={stats.filter_dist_evals} "
-                f"cmp={stats.refine_comparisons}"))
+    with SecureAnnService() as svc:
+        for backend in ("flat", "ivf", "hnsw"):
+            bspec = dataclasses.replace(spec, name=f"batched-{backend}",
+                                        backend=backend)
+            svc.create_collection(bspec, corpus=corpus)
+            for B in batches:
+                req = SearchRequest(
+                    tenant=bspec.tenant, collection=bspec.name,
+                    query=EncryptedQuery(C_sap=query.C_sap[:B],
+                                         T=query.T[:B]),
+                    params=params, coalesce=False)
+                t, res = timeit(svc.submit, req, repeats=2)
+                rec = synth.recall_at_k(res.ids, ds.gt[:B], k)
+                rows.append(row(
+                    f"batched/{backend}/B={B}", 1e6 * t / B,
+                    f"qps={B / t:.1f} recall={rec:.3f} "
+                    f"dist_evals={res.stats.filter_dist_evals} "
+                    f"cmp={res.stats.refine_comparisons}"))
     return rows

@@ -28,10 +28,10 @@ import time
 
 import numpy as np
 
-from repro.core import dcpe
+from repro.api import (DataOwnerClient, IndexSpec, SecureAnnService,
+                       suggest_beta)
 from repro.data import synth
 from repro.serving.runtime import MicroBatcher, jit_cache_size
-from repro.serving.runtime.collections import Collection
 
 from .common import row
 
@@ -40,17 +40,26 @@ EF = 96
 RATIO_K = 8.0
 
 
-def _build_collection(n: int, d: int, n_queries: int, seed: int = 0):
+def _build_service(n: int, d: int, n_queries: int, seed: int = 0):
+    """Spec-driven construction through the public API: keyless service,
+    owner-side encryption, typed queries.  Returns the runtime
+    collection handle too — the policy sweep below benchmarks batcher
+    internals, which is observability access the API sanctions."""
     ds = synth.make_dataset("sift1m", n=n, n_queries=n_queries, d=d,
                             k_gt=K, seed=seed)
-    beta = dcpe.suggest_beta(ds.base, fraction=0.03)
-    col = Collection("bench", "runtime", d, backend="flat", sap_beta=beta,
+    spec = IndexSpec(tenant="bench", name="runtime", d=d, backend="flat",
+                     sap_beta=suggest_beta(ds.base, fraction=0.03),
                      seed=seed, max_batch=32, max_wait_ms=2.0)
-    col.insert(ds.base)
-    col.compact()
-    user = col.new_user()
-    enc = [user.encrypt_query(q) for q in ds.queries]
-    return ds, col, enc
+    svc = SecureAnnService()
+    svc.create_collection(spec)
+    owner = DataOwnerClient(spec)
+    svc.insert("bench", "runtime", *owner.encrypt_vectors(ds.base))
+    svc.compact("bench", "runtime")
+    user = owner.query_client()
+    enc = [(eq.C_sap[0], eq.T[0])
+           for eq in (user.encrypt_query(q) for q in ds.queries)]
+    col = svc.collection("bench", "runtime")
+    return ds, svc, col, enc
 
 
 def _closed_loop(batcher, enc, n_clients: int, per_client: int):
@@ -125,7 +134,7 @@ def run(n: int = 20_000, d: int = 64, n_clients: int = 16,
         per_client: int = 8, smoke: bool = False) -> list[str]:
     if smoke:
         n, d, n_clients, per_client = 4000, 48, 8, 6
-    _, col, enc = _build_collection(n, d, n_queries=32)
+    _, svc, col, enc = _build_service(n, d, n_queries=32)
     rows = []
     try:
         # --- per-query baseline: batch-of-one engine calls, no batching
@@ -182,7 +191,7 @@ def run(n: int = 20_000, d: int = 64, n_clients: int = 16,
                     f"smoke gate failed: occupancy={occ} "
                     f"recompiles={recompiles} qps={qps} base={qps_base}")
     finally:
-        col.close()
+        svc.close()
     return rows
 
 

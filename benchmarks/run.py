@@ -13,10 +13,43 @@ Default sizes are CPU-feasible; --full enlarges toward paper scale.
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import pathlib
+import subprocess
 import sys
 import time
+
+
+def provenance() -> dict:
+    """Attribution stamp for every BENCH_<suite>.json: which commit,
+    when, and on what software/hardware the numbers were taken — without
+    it the perf trajectory (history.jsonl) cannot be diffed meaningfully
+    across sessions."""
+    info: dict = {
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    try:
+        info["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent.parent,
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip()
+    except Exception:                               # noqa: BLE001
+        info["git_sha"] = None
+    import numpy as np
+    info["numpy_version"] = np.__version__
+    try:
+        import jax
+        dev = jax.devices()[0]
+        info["jax_version"] = jax.__version__
+        info["device"] = (f"{dev.platform}:"
+                          f"{getattr(dev, 'device_kind', 'unknown')}")
+        info["n_devices"] = jax.device_count()
+    except Exception:                               # noqa: BLE001
+        info["jax_version"] = info["device"] = None
+    return info
 
 
 def _parse_row(r: str) -> dict:
@@ -41,6 +74,7 @@ def write_suite_json(out_dir: pathlib.Path, suite: str, rows: list[str],
         "unix_time": time.time(),
         "wall_s": round(wall_s, 3),
         "full": full,
+        "provenance": provenance(),
         "rows": [_parse_row(r) for r in rows],
     }
     path.write_text(json.dumps(payload, indent=2) + "\n")

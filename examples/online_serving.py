@@ -1,26 +1,29 @@
-"""Online serving runtime quickstart (DESIGN.md §8): multi-tenant
-collections, live encrypted ingestion, dynamic micro-batching, and
-telemetry.
+"""Online serving through the public API (`repro.api`, DESIGN.md §8/§9):
+multi-tenant collections, live encrypted ingestion, dynamic
+micro-batching, and telemetry — with the roles split the way the threat
+model splits them.
 
   PYTHONPATH=src python examples/online_serving.py [--n 4000]
 
-Two tenants share one runtime; each collection has its own keys, so the
-server routes by (tenant, collection) and one tenant's trapdoors never
-touch another's ciphertexts.  Queries from concurrent clients coalesce
-into padded batches; inserts are visible to the next search; deleted ids
-never come back.
+Two tenants share one keyless service; each tenant's `DataOwnerClient`
+holds its own keys, so the service routes by (tenant, collection) and
+one tenant's trapdoors never touch another's ciphertexts.  Queries from
+concurrent clients coalesce into padded batches; inserts are visible to
+the next search; deleted ids never come back.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from repro.core import dcpe
+from repro.api import (DataOwnerClient, IndexSpec, SearchParams,
+                       SecureAnnService, TenantIsolationError,
+                       suggest_beta)
 from repro.data import synth
-from repro.serving.runtime import CollectionManager, TenantIsolationError
 
 
 def main(argv=None):
@@ -31,56 +34,66 @@ def main(argv=None):
 
     ds = synth.make_dataset("sift1m", n=args.n, n_queries=24, d=64,
                             k_gt=args.k, seed=0)
-    beta = dcpe.suggest_beta(ds.base, fraction=0.03)
+    beta = suggest_beta(ds.base, fraction=0.03)
+    params = SearchParams(k=args.k)
 
-    with CollectionManager(sap_beta=beta, max_wait_ms=4.0) as mgr:
+    with SecureAnnService(max_wait_ms=4.0) as svc:
         # -- two tenants, each with their own keys and index backend
-        acme = mgr.create_collection("acme", "docs", d=64, backend="flat",
-                                     seed=1)
-        globex = mgr.create_collection("globex", "docs", d=64,
-                                       backend="ivf", seed=2,
-                                       n_partitions=32, nprobe=8)
+        acme_spec = IndexSpec(tenant="acme", name="docs", d=64,
+                              backend="flat", sap_beta=beta, seed=1)
+        globex_spec = IndexSpec(tenant="globex", name="docs", d=64,
+                                backend="ivf", sap_beta=beta, seed=2,
+                                n_partitions=32, nprobe=8)
+        svc.create_collection(acme_spec)
+        svc.create_collection(globex_spec)
+        acme = DataOwnerClient(acme_spec)       # keys live client-side
+        globex = DataOwnerClient(globex_spec)
 
-        # -- live encrypted ingestion (owner-side jitted DCPE+DCE encrypt)
+        # -- live encrypted ingestion (owner-side jitted DCPE+DCE
+        #    encrypt; the service ingests ciphertexts only)
         t0 = time.time()
-        acme.insert(ds.base)
-        globex.insert(ds.base[: args.n // 2])
+        svc.insert("acme", "docs", *acme.encrypt_vectors(ds.base))
+        svc.insert("globex", "docs",
+                   *globex.encrypt_vectors(ds.base[: args.n // 2]))
         print(f"ingested {args.n + args.n // 2} vectors across 2 tenants "
               f"in {time.time() - t0:.2f}s")
-        acme.compact()
-        acme.warmup(k=args.k)
+        svc.compact("acme", "docs")
+        svc.warmup("acme", "docs", k=args.k)
 
         # -- concurrent single-query clients coalesce into batches
-        user = acme.new_user()
-        enc = [user.encrypt_query(q) for q in ds.queries]
+        user = acme.query_client()
+        reqs = [user.request("acme", "docs", q, params)
+                for q in ds.queries]
         t0 = time.time()
-        futs = [acme.submit(c, t, args.k) for c, t in enc]
-        ids = np.stack([f.result(timeout=60) for f in futs])
+        with ThreadPoolExecutor(len(reqs)) as pool:
+            ids = np.concatenate([r.ids for r in pool.map(svc.submit, reqs)])
         rec = synth.recall_at_k(ids, ds.gt, args.k)
-        snap = acme.stats()
-        print(f"acme/docs: {len(enc)} concurrent clients in "
+        snap = svc.stats("acme", "docs")
+        print(f"acme/docs: {len(reqs)} concurrent clients in "
               f"{time.time() - t0:.2f}s  recall@{args.k}={rec:.3f}  "
               f"occupancy={snap['batch_occupancy']:.1f}  "
               f"p99={1e3 * snap['p99_latency_s']:.1f}ms")
 
         # -- mutations: the next search sees them
-        planted = acme.insert(ds.queries[0][None])
-        ids1 = acme.search(*enc[0], args.k)
+        planted = svc.insert("acme", "docs",
+                             *acme.encrypt_vectors(ds.queries[0][None]))
+        ids1 = svc.submit(reqs[0]).ids[0]
         assert planted[0] in ids1, "insert must be immediately visible"
-        acme.delete(planted)
-        ids2 = acme.search(*enc[0], args.k)
+        svc.delete("acme", "docs", planted)
+        ids2 = svc.submit(reqs[0]).ids[0]
         assert planted[0] not in ids2, "deleted id must never return"
         print(f"mutation semantics: planted id {int(planted[0])} "
               "visible after insert, gone after delete")
 
         # -- strict tenant routing
         try:
-            mgr.search("initech", "docs", *enc[0], args.k)
+            svc.submit(user.request("initech", "docs", ds.queries[0],
+                                    params))
         except TenantIsolationError as e:
             print(f"tenant isolation: {e}")
 
         print("telemetry:", {k: (round(v, 4) if isinstance(v, float) else v)
-                             for k, v in acme.stats().items()})
+                             for k, v in svc.stats("acme", "docs").items()})
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
-"""Quickstart: the paper's full pipeline in ~60 lines.
+"""Quickstart: the paper's full pipeline through the public API
+(`repro.api`, DESIGN.md §9) in ~60 lines.
 
-  1. Data owner encrypts a vector database (DCPE filter ciphertexts +
-     DCE refine ciphertexts) and builds the privacy-preserving HNSW index.
-  2. User encrypts a query (DCPE ciphertext + DCE trapdoor).
-  3. Server answers k-ANN over ciphertexts only (filter-and-refine,
+  1. Data owner: keygen from an `IndexSpec`, encrypts the database
+     (DCPE filter + DCE refine ciphertexts), builds the privacy-
+     preserving HNSW index, and outsources it as an `EncryptedCorpus`.
+  2. User: encrypts each query (DCPE ciphertext + DCE trapdoor) into an
+     `EncryptedQuery` with the shared keys.
+  3. Service: answers k-ANN over ciphertexts only (filter-and-refine,
      Algorithm 2) — and we check recall against exact brute force.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -11,7 +14,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 
 import numpy as np
 
-from repro.core import ppanns
+from repro.api import (DataOwnerClient, IndexSpec, SearchParams,
+                       SecureAnnService, suggest_beta)
 from repro.data import synth
 
 
@@ -21,30 +25,38 @@ def main():
     print(f"dataset: n={ds.n} d={ds.d} (clustered synthetic, SIFT dims)")
 
     print("data owner: encrypting database + building DCPE-HNSW index ...")
-    owner, user, server = ppanns.build_system(
-        ds.base, beta_fraction=0.03, M=16, ef_construction=120, seed=7)
-    print(f"  DCPE ciphertexts: {server.db.C_sap.shape}  "
-          f"DCE ciphertexts: {server.db.C_dce.shape}")
+    spec = IndexSpec(tenant="demo", name="corpus", d=ds.d, backend="hnsw",
+                     sap_beta=suggest_beta(ds.base, fraction=0.03),
+                     hnsw_M=16, hnsw_ef_construction=120, seed=7)
+    owner = DataOwnerClient(spec)               # keygen — keys stay here
+    corpus = owner.encrypt_corpus(ds.base)      # ciphertexts + HNSW graph
+    print(f"  DCPE ciphertexts: {corpus.C_sap.shape}  "
+          f"DCE ciphertexts: {corpus.C_dce.shape}")
 
     k = 10
-    found, lat = [], []
-    for q in ds.queries:
-        c_sap, t_q = user.encrypt_query(q)          # user-side O(d^2)
-        ids, stats = server.search(c_sap, t_q, k, ratio_k=8, ef_search=128)
-        found.append(ids)
-        lat.append(stats.latency_s)
-    rec = synth.recall_at_k(np.stack(found), ds.gt, k)
-    print(f"server-side search: recall@{k} = {rec:.3f}, "
-          f"median latency {1e3 * np.median(lat):.1f} ms, "
-          f"QPS ~ {1.0 / np.median(lat):.1f}")
+    params = SearchParams(k=k, ratio_k=8, ef_search=128)
+    with SecureAnnService() as svc:
+        svc.create_collection(spec, corpus=corpus)   # server: ciphertexts only
+        user = owner.query_client()                  # trusted key handoff
 
-    # what the server never sees: plaintexts or distances
-    c_sap, t_q = user.encrypt_query(ds.queries[0])
-    ids, stats = server.search(c_sap, t_q, k)
-    print(f"bytes up per query: {stats.bytes_up} (O(d)); "
-          f"bytes down: {stats.bytes_down} (4k)")
-    print(f"refine comparisons: {stats.refine_comparisons} "
-          f"(each leaks only a sign, Theorem 3)")
+        found, lat = [], []
+        for q in ds.queries:
+            req = user.request(spec.tenant, spec.name, q, params)
+            res = svc.submit(req)                    # server-side Algorithm 2
+            found.append(res.ids[0])
+            lat.append(res.stats.latency_s)
+        rec = synth.recall_at_k(np.stack(found), ds.gt, k)
+        print(f"service-side search: recall@{k} = {rec:.3f}, "
+              f"median latency {1e3 * np.median(lat):.1f} ms, "
+              f"QPS ~ {1.0 / np.median(lat):.1f}")
+
+        # what the service never sees: plaintexts, keys, or distances
+        res = svc.submit(user.request(spec.tenant, spec.name,
+                                      ds.queries[0], params))
+        print(f"bytes up per query: {res.stats.bytes_up} (O(d)); "
+              f"bytes down: {res.stats.bytes_down} (4k)")
+        print(f"refine comparisons: {res.stats.refine_comparisons} "
+              f"(each leaks only a sign, Theorem 3)")
     assert rec >= 0.85
     print("OK")
 

@@ -1,13 +1,15 @@
 """RAG / kNN-LM bridge: the paper's PP-ANNS as a first-class serving
-feature of the LM stack.
+feature of the LM stack, through the public API (`repro.api`,
+DESIGN.md §9).
 
-An LM server decodes while a privacy-preserving retrieval sidecar — the
-unified batched search engine (DESIGN.md §2) — serves k-NN over an
-*encrypted* embedding datastore (kNN-LM style: the datastore maps
-context embeddings -> next tokens; retrieved neighbors' targets blend
-with the LM logits).  Each decode step issues the whole batch of queries
-as ONE engine call; the cloud host of the datastore never sees
-embeddings, queries, or distances — only DCE comparison signs.
+An LM server decodes while a privacy-preserving retrieval sidecar — a
+keyless `SecureAnnService` over the unified batched search engine
+(DESIGN.md §2) — serves k-NN over an *encrypted* embedding datastore
+(kNN-LM style: the datastore maps context embeddings -> next tokens;
+retrieved neighbors' targets blend with the LM logits).  Each decode
+step issues the whole batch of queries as ONE `SearchRequest`; the
+cloud host of the datastore never sees embeddings, queries, or
+distances — only DCE comparison signs.
 
   PYTHONPATH=src python examples/rag_serving.py
 """
@@ -18,10 +20,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (DataOwnerClient, IndexSpec, SearchParams,
+                       SecureAnnService)
 from repro.configs import get_config
-from repro.core import dce, dcpe, ppanns
 from repro.models import Model
-from repro.serving import LMServer, SecureSearchEngine
+from repro.serving import LMServer
 
 
 def main():
@@ -37,11 +40,13 @@ def main():
     store_emb = rng.standard_normal((n_store, d)).astype(np.float32)
     store_tok = rng.integers(0, cfg.vocab_size, n_store).astype(np.int32)
 
-    owner = ppanns.DataOwner(d=d, sap_beta=1.0, seed=1)
-    C_sap = dcpe.encrypt(store_emb, owner.keys.sap_key, seed=2)
-    C_dce = dce.encrypt(store_emb, owner.keys.dce_key, seed=3)
-    user = ppanns.User(owner.share_keys())
-    ann = SecureSearchEngine(C_sap, C_dce, backend="flat")
+    spec = IndexSpec(tenant="lm", name="datastore", d=d, backend="flat",
+                     sap_beta=1.0, seed=1)
+    owner = DataOwnerClient(spec)              # keys stay with the owner
+    svc = SecureAnnService()
+    svc.create_collection(spec, corpus=None)
+    svc.insert("lm", "datastore", *owner.encrypt_vectors(store_emb))
+    user = owner.query_client()
 
     # ---- decode with secure retrieval at each step
     B, k, lam = 2, 8, 0.3
@@ -57,8 +62,9 @@ def main():
         probe = np.asarray(
             jnp.take(params["embed"]["tokens"],
                      jnp.argmax(logits, -1), axis=0), np.float32)
-        qs, ts_ = zip(*(user.encrypt_query(p) for p in probe))
-        nbr, _ = ann.search_batch(np.stack(qs), np.stack(ts_), k=k)  # (B, k)
+        req = user.request("lm", "datastore", probe,
+                           SearchParams(k=k))          # one batch request
+        nbr = svc.submit(req).ids                                    # (B, k)
         knn_tokens = store_tok[nbr]                                  # (B, k)
 
         # kNN-LM blend: boost retrieved tokens' logits
@@ -72,6 +78,7 @@ def main():
         logits, cache = model.decode_step(params, nxt, cache)
 
     out = jnp.concatenate(generated, 1)
+    svc.close()
     print(f"decoded {out.shape} tokens with privacy-preserving retrieval "
           f"at every step (datastore host saw only ciphertexts)")
     assert out.shape == (B, 8)

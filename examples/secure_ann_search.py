@@ -1,19 +1,22 @@
-"""The paper's experimental pipeline end-to-end: per-query Algorithm 2,
-the unified batched engine over all three filter backends (DESIGN.md §2),
-the TPU-native distributed scan, and the §III attack demonstration.
+"""The paper's experimental pipeline end-to-end, through the public API
+(`repro.api`, DESIGN.md §9): per-query Algorithm 2 against a service,
+the unified batched engine over all three filter backends (DESIGN.md
+§2), the TPU-native distributed scan, and the §III attack demonstration.
 
   PYTHONPATH=src python examples/secure_ann_search.py [--n 8000]
 """
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
 
-from repro.core import attacks, ppanns
+from repro.api import (DataOwnerClient, DistributedSecureAnnService,
+                       IndexSpec, SearchParams, SecureAnnService,
+                       suggest_beta)
+from repro.core import attacks
 from repro.data import synth
-from repro.serving import (DistributedSecureANN, HNSWGraphFilter,
-                           SecureSearchEngine)
 
 
 def main():
@@ -25,56 +28,59 @@ def main():
     ds = synth.make_dataset("deep1m", n=args.n, n_queries=args.queries,
                             k_gt=50, seed=1)
     k = 10
+    params = SearchParams(k=k, ratio_k=8, ef_search=128)
 
-    # ---- 1. single-server filter-and-refine (the paper's Algorithm 2)
-    owner, user, server = ppanns.build_system(ds.base, beta_fraction=0.03,
-                                              M=16, ef_construction=120)
-    t0 = time.time()
-    found = []
-    for q in ds.queries:
-        c_sap, t_q = user.encrypt_query(q)
-        ids, _ = server.search(c_sap, t_q, k, ratio_k=8, ef_search=128)
-        found.append(ids)
-    rec = synth.recall_at_k(np.stack(found), ds.gt, k)
-    print(f"[hnsw-dce] recall@{k}={rec:.3f}  "
-          f"{args.queries / (time.time() - t0):.1f} QPS")
+    # ---- 1. three-role flow (the paper's Algorithm 2), one query at a
+    #         time through the service's micro-batcher
+    spec = IndexSpec(tenant="demo", name="deep", d=ds.d, backend="hnsw",
+                     sap_beta=suggest_beta(ds.base, fraction=0.03),
+                     hnsw_M=16, hnsw_ef_construction=120, seed=0)
+    owner = DataOwnerClient(spec)
+    corpus = owner.encrypt_corpus(ds.base)      # ciphertexts + owner HNSW
+    user = owner.query_client()
 
-    # ---- 2. the unified batched engine: one jitted refine per batch,
-    #         identical ids to the per-query path, any filter backend
-    C_sap = np.asarray(server.db.C_sap)
-    C_dce = np.asarray(server.db.C_dce)
-    qs, ts_ = zip(*(user.encrypt_query(q) for q in ds.queries))
-    Q, T = np.stack(qs), np.stack(ts_)
-    backends = {
-        "hnsw": SecureSearchEngine(C_sap, C_dce,
-                                   backend=HNSWGraphFilter(server.db.index)),
-        "flat": SecureSearchEngine(C_sap, C_dce, backend="flat"),
-        "ivf": SecureSearchEngine(C_sap, C_dce, backend="ivf",
-                                  n_partitions=64, nprobe=8),
-    }
-    recs = {}
-    for name, engine in backends.items():
+    with SecureAnnService() as svc:
+        svc.create_collection(spec, corpus=corpus)
         t0 = time.time()
-        ids, stats = engine.search_batch(Q, T, k=k, ratio_k=8,
-                                         ef_search=128)
-        recs[name] = synth.recall_at_k(ids, ds.gt, k)
-        print(f"[batched/{name}] recall@{k}={recs[name]:.3f}  "
-              f"{args.queries / (time.time() - t0):.1f} QPS  "
-              f"dist_evals={stats.filter_dist_evals}")
-    rec2 = recs["flat"]
+        found = [svc.submit(user.request(spec.tenant, spec.name, q,
+                                         params)).ids[0]
+                 for q in ds.queries]
+        rec = synth.recall_at_k(np.stack(found), ds.gt, k)
+        print(f"[hnsw-dce] recall@{k}={rec:.3f}  "
+              f"{args.queries / (time.time() - t0):.1f} QPS")
+
+        # ---- 2. the unified batched engine: one jitted refine per
+        #         batch, identical ids to the per-query path, any filter
+        #         backend — three collections share the one corpus
+        batch_req = user.request(spec.tenant, spec.name, ds.queries,
+                                 params)
+        recs = {}
+        for backend in ("hnsw", "flat", "ivf"):
+            bspec = dataclasses.replace(spec, name=f"deep-{backend}",
+                                        backend=backend)
+            svc.create_collection(bspec, corpus=corpus)
+            req = dataclasses.replace(batch_req, collection=bspec.name,
+                                      coalesce=False)
+            t0 = time.time()
+            res = svc.submit(req)
+            recs[backend] = synth.recall_at_k(res.ids, ds.gt, k)
+            print(f"[batched/{backend}] recall@{k}={recs[backend]:.3f}  "
+                  f"{args.queries / (time.time() - t0):.1f} QPS  "
+                  f"dist_evals={res.stats.filter_dist_evals}")
+        rec2 = recs["flat"]
 
     # ---- 3. distributed sharded secure scan (TPU-native deployment)
-    eng = DistributedSecureANN(C_sap, C_dce)
+    eng = DistributedSecureAnnService(corpus)
     t0 = time.time()
-    ids = eng.query_batch(Q, T, k=k, ratio_k=8)
-    rec3 = synth.recall_at_k(ids, ds.gt, k)
+    res = eng.search(batch_req.query, params)
+    rec3 = synth.recall_at_k(res.ids, ds.gt, k)
     print(f"[dist-scan] recall@{k}={rec3:.3f}  "
           f"{args.queries / (time.time() - t0):.1f} QPS (exact filter)")
 
     # ---- 4. why DCE instead of ASPE: the §III KPA attack
-    res = attacks.attack_roundtrip(d=12, n=100, nq=30, transform="linear")
+    res_a = attacks.attack_roundtrip(d=12, n=100, nq=30, transform="linear")
     print(f"[attack] ASPE-linear KPA: query recovery err "
-          f"{res['query_err']:.2e}, db recovery err {res['db_err']:.2e} "
+          f"{res_a['query_err']:.2e}, db recovery err {res_a['db_err']:.2e} "
           f"(broken; DCE leaks only comparison signs)")
     assert rec >= 0.85 and rec2 >= 0.9 and rec3 >= 0.9
     print("OK")

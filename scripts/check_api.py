@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Public-surface check (DESIGN.md §9): `repro.api` is the one entry
+point for secure-ANN functionality.
+
+Two gates:
+  1. every name in `repro.api.__all__` actually resolves (the lazy
+     export table cannot rot);
+  2. no example and no serve launcher imports a legacy secure-ANN
+     constructor directly — `examples/*.py` and
+     `src/repro/launch/serve.py` must reach the system through
+     `repro.api` only.  (Tests and benchmarks may still reach inside;
+     they exercise internals on purpose.)
+
+Run from the repo root:  PYTHONPATH=src python scripts/check_api.py
+Exit code 0 = surface intact.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Files that must speak only repro.api for secure-ANN functionality.
+GUARDED = sorted((ROOT / "examples").glob("*.py")) + \
+    [ROOT / "src" / "repro" / "launch" / "serve.py"]
+
+# Legacy secure-ANN modules: any import of these (or a submodule) from a
+# guarded file is a surface violation.
+BANNED_MODULES = (
+    "repro.core.ppanns",
+    "repro.serving.search_engine",
+    "repro.serving.runtime",
+    "repro.serving.ann_server",
+    "repro.serving.secure_scan",
+)
+
+# Legacy constructors re-exported by `repro.serving` / `repro.core`:
+# importing them by name from an umbrella module is the same violation.
+BANNED_NAMES = {
+    "ppanns", "SecureSearchEngine", "SearchStats", "FlatScanFilter",
+    "IVFScanFilter", "HNSWGraphFilter", "CollectionManager", "Collection",
+    "MicroBatcher", "MutableEncryptedStore", "DeltaAwareBackend",
+    "DistributedSecureANN", "QueueFullError", "TenantIsolationError",
+    "build_secure_scan_step", "secure_scan",
+}
+
+
+def _banned_module(mod: str) -> bool:
+    return any(mod == b or mod.startswith(b + ".") for b in BANNED_MODULES)
+
+
+def check_imports(path: pathlib.Path) -> list[str]:
+    errors = []
+    rel = path.relative_to(ROOT)
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if _banned_module(alias.name):
+                    errors.append(f"{rel}:{node.lineno}: imports legacy "
+                                  f"module {alias.name} (use repro.api)")
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if node.level:                 # relative import — not repro.*
+                continue
+            if _banned_module(mod):
+                errors.append(f"{rel}:{node.lineno}: imports from legacy "
+                              f"module {mod} (use repro.api)")
+            elif mod in ("repro.core", "repro.serving"):
+                bad = sorted({a.name for a in node.names} & BANNED_NAMES)
+                if bad:
+                    errors.append(
+                        f"{rel}:{node.lineno}: imports legacy "
+                        f"constructor(s) {', '.join(bad)} from {mod} "
+                        f"(use repro.api)")
+    return errors
+
+
+def check_api_exports() -> list[str]:
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        import repro.api as api
+    except Exception as e:                          # noqa: BLE001
+        return [f"import repro.api failed: {type(e).__name__}: {e}"]
+    errors = []
+    for name in api.__all__:
+        try:
+            getattr(api, name)
+        except Exception as e:                      # noqa: BLE001
+            errors.append(f"repro.api.{name} does not resolve: "
+                          f"{type(e).__name__}: {e}")
+    return errors
+
+
+def main() -> int:
+    errors = check_api_exports()
+    for f in GUARDED:
+        errors.extend(check_imports(f))
+    if errors:
+        print("api surface check FAILED:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    import repro.api as api
+    print(f"api surface check OK: {len(api.__all__)} public names "
+          f"resolve; {len(GUARDED)} guarded files import only repro.api")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""repro.api — the public, role-typed client/service surface
+(DESIGN.md §9).
+
+The paper's threat model has three roles — data owner, user, untrusted
+server — and this package is their protocol: typed dataclasses
+(`IndexSpec`, `SearchParams`, `EncryptedQuery`, `SearchRequest`,
+`SearchResult`, `EncryptedCorpus`) with versioned `to_bytes`/
+`from_bytes` wire round-trips, role objects (`DataOwnerClient`,
+`QueryClient`, `SecureAnnService`, `DistributedSecureAnnService`), an
+on-disk `Keystore` (owner-side), and persistent encrypted collections
+(`SecureAnnService.save`/`load` — ciphertexts only, never keys).
+
+Everything an example, launcher, or downstream user needs lives here;
+`scripts/check_api.py` enforces that they import nothing deeper.
+Exports resolve lazily so `import repro.api` stays light.
+"""
+
+import importlib
+
+_EXPORTS = {
+    # protocol types + wire format
+    "PROTOCOL_VERSION": ".protocol",
+    "WireFormatError": ".protocol",
+    "IndexSpec": ".protocol",
+    "SearchParams": ".protocol",
+    "EncryptedQuery": ".protocol",
+    "EncryptedCorpus": ".protocol",
+    "SearchRequest": ".protocol",
+    "SearchResult": ".protocol",
+    "SearchStats": ".protocol",
+    "Keys": ".protocol",
+    "suggest_beta": ".protocol",
+    # roles
+    "DataOwnerClient": ".roles",
+    "QueryClient": ".roles",
+    "SecureAnnService": ".roles",
+    "TenantIsolationError": ".roles",
+    "QueueFullError": ".roles",
+    # key custody
+    "Keystore": ".keystore",
+    # mesh deployment + dry-run builders
+    "DistributedSecureAnnService": ".mesh",
+    "build_secure_scan_step": ".mesh",
+    "build_secure_scan_step_gspmd": ".mesh",
+    "secure_scan_input_specs": ".mesh",
+    "secure_scan_pspecs": ".mesh",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        mod = importlib.import_module(_EXPORTS[name], __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

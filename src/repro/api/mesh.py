@@ -1,0 +1,75 @@
+"""Mesh-sharded deployment behind the protocol types (DESIGN.md §3, §9).
+
+`DistributedSecureAnnService` is the typed face of
+`serving.ann_server.DistributedSecureANN`: the encrypted database is
+sharded row-wise across every mesh device, queries arrive as
+`EncryptedQuery`, results leave as `SearchResult` — same protocol
+vocabulary as the single-host `SecureAnnService`, different deployment.
+
+The explicit-collective dry-run builders (`serving.secure_scan`) are
+re-exported here so that launch tooling reaches them through the one
+public surface.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..serving.ann_server import DistributedSecureANN
+from ..serving.search_engine import SearchStats
+from ..serving.secure_scan import (build_secure_scan_step,          # noqa: F401
+                                   build_secure_scan_step_gspmd,    # noqa: F401
+                                   secure_scan_input_specs,         # noqa: F401
+                                   secure_scan_pspecs)              # noqa: F401
+from .protocol import EncryptedCorpus, EncryptedQuery, SearchParams, \
+    SearchResult
+
+__all__ = ["DistributedSecureAnnService", "build_secure_scan_step",
+           "build_secure_scan_step_gspmd", "secure_scan_input_specs",
+           "secure_scan_pspecs"]
+
+
+class DistributedSecureAnnService:
+    """Sharded exhaustive filter + batched exact DCE refine, typed.
+
+    Construct from an owner-uploaded `EncryptedCorpus` (or raw
+    ciphertext arrays) and an optional mesh; `search` is the whole
+    surface."""
+
+    def __init__(self, corpus, C_dce=None, *, mesh=None, axis=None):
+        if isinstance(corpus, EncryptedCorpus):
+            C_sap, C_dce = corpus.C_sap, corpus.C_dce
+        else:
+            C_sap = corpus
+            if C_dce is None:
+                raise ValueError("pass an EncryptedCorpus or both "
+                                 "(C_sap, C_dce) arrays")
+        self._impl = DistributedSecureANN(np.asarray(C_sap),
+                                          np.asarray(C_dce),
+                                          mesh=mesh, axis=axis)
+
+    @property
+    def n(self) -> int:
+        return self._impl.n
+
+    def search(self, query: EncryptedQuery,
+               params: SearchParams = SearchParams()) -> SearchResult:
+        t0 = time.perf_counter()
+        ids = self._impl.query_batch(query.C_sap, query.T, params.k,
+                                     ratio_k=params.ratio_k)
+        nq = query.nq
+        kp = min(int(max(params.k, round(params.ratio_k * params.k))),
+                 self._impl.n_padded)
+        nv = min(kp, self._impl.n)        # pad rows never reach the refine
+        stats = SearchStats(
+            latency_s=time.perf_counter() - t0,
+            filter_dist_evals=nq * self._impl.n,
+            refine_comparisons=nq * nv * (nv - 1),
+            bytes_up=query.nbytes + 4 * nq,
+            bytes_down=4 * int(np.asarray(ids).size),
+            n_queries=nq,
+            backend="mesh-flat",
+        )
+        return SearchResult(ids=np.asarray(ids, np.int64), stats=stats)

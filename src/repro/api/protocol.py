@@ -1,0 +1,352 @@
+"""Typed, wire-serializable protocol objects (DESIGN.md §9).
+
+These dataclasses are the *entire* vocabulary of the client/service
+protocol — what a data owner, a querying user, and the untrusted search
+service exchange:
+
+  IndexSpec        owner -> service   what collection to create
+  EncryptedCorpus  owner -> service   ciphertexts (+ owner-built index)
+  EncryptedQuery   user  -> service   DCPE query ciphertexts + trapdoors
+  SearchRequest    user  -> service   routed query + SearchParams
+  SearchResult     service -> user    ids + the engine's SearchStats
+
+Every type round-trips through versioned `to_bytes`/`from_bytes`
+(npz-backed, see `core.wireformat`), so each leg of the protocol can
+cross a process or wire boundary.  Arrays are bit-exact across a round
+trip; a mismatched kind or version raises `WireFormatError` instead of
+misparsing.
+
+Ciphertext conventions (paper §IV/§V): for dimension d the DCPE
+ciphertext keeps shape (d,) and the DCE trapdoor has 2*(d + d%2) + 16
+components; `EncryptedQuery` is batch-native — a single query is the
+nq=1 case, so the client/service protocol has one shape story, not two.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import dce
+from ..core.dcpe import suggest_beta                      # noqa: F401
+from ..core.ppanns import Keys                            # noqa: F401
+from ..core.wireformat import WireFormatError, pack, unpack
+from ..serving.search_engine import SearchStats
+
+__all__ = ["PROTOCOL_VERSION", "WireFormatError", "IndexSpec",
+           "SearchParams", "EncryptedQuery", "EncryptedCorpus",
+           "SearchRequest", "SearchResult", "SearchStats", "Keys",
+           "suggest_beta"]
+
+PROTOCOL_VERSION = 1
+
+_BACKENDS = ("flat", "ivf", "hnsw")
+
+
+# ---------------------------------------------------------------------------
+# IndexSpec — the one config object behind every entry point.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IndexSpec:
+    """Everything needed to create (or re-create) a collection.
+
+    Identity (`tenant`, `name`) routes requests; `d` fixes the
+    ciphertext shapes; `backend` picks the filter index the service
+    builds; the crypto fields parameterize the owner's keygen; the
+    batching fields tune the service's micro-batcher.  `seed` keys both
+    the owner's keygen and the service's deterministic index state —
+    `None` means fresh entropy (the service records the effective seed
+    when persisting, so a reloaded collection rebuilds identically).
+    """
+    tenant: str
+    name: str
+    d: int
+    backend: str = "flat"
+    # crypto (owner-side)
+    sap_beta: float = 1.0
+    sap_s: float = 1024.0
+    seed: int | None = None
+    # filter index (service-side)
+    n_partitions: int = 64
+    nprobe: int = 8
+    hnsw_M: int = 16
+    hnsw_ef_construction: int = 200
+    use_kernel: bool = True
+    # micro-batcher / runtime
+    max_batch: int = 32
+    max_wait_ms: float = 2.0
+    max_queue: int = 256
+    compact_every: int = 4096
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self):
+        if not self.tenant or not self.name:
+            raise ValueError("IndexSpec needs non-empty tenant and name")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             f"(have {_BACKENDS})")
+        if self.d < 2:
+            raise ValueError("PP-ANNS requires d >= 2")
+
+    @property
+    def cdim(self) -> int:
+        """DCE trapdoor / ciphertext component dimension for this d."""
+        return dce.ciphertext_dim(self.d)
+
+    def collection_kwargs(self) -> dict:
+        """Constructor kwargs for the runtime `Collection`."""
+        return dict(
+            backend=self.backend, sap_beta=self.sap_beta,
+            sap_s=self.sap_s, seed=self.seed, use_kernel=self.use_kernel,
+            max_batch=self.max_batch, max_wait_ms=self.max_wait_ms,
+            max_queue=self.max_queue, compact_every=self.compact_every,
+            n_partitions=self.n_partitions, nprobe=self.nprobe,
+            hnsw_M=self.hnsw_M,
+            hnsw_ef_construction=self.hnsw_ef_construction)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IndexSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = set(d) - known
+        if extra:
+            raise WireFormatError(f"IndexSpec: unknown fields {sorted(extra)}")
+        return cls(**d)
+
+    def to_bytes(self) -> bytes:
+        return pack("index-spec", PROTOCOL_VERSION, arrays={},
+                    meta=self.to_dict())
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "IndexSpec":
+        _, meta = unpack(data, "index-spec", PROTOCOL_VERSION)
+        return cls.from_dict(meta)
+
+
+# ---------------------------------------------------------------------------
+# SearchParams — the per-request knobs of Algorithm 2.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """k plus the filter/refine knobs (paper Algorithm 2).  Requests
+    micro-batch together only when their (k, ratio_k, ef_search) agree —
+    the jitted executables specialize on them."""
+    k: int = 10
+    ratio_k: float = 8.0
+    ef_search: int = 96
+    refine: str = "tournament"      # | "none" (filter-only, Fig. 6)
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
+        if self.refine not in ("tournament", "none"):
+            raise ValueError(f"batched refine must be 'tournament' or "
+                             f"'none', got {self.refine!r}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SearchParams":
+        return cls(**d)
+
+    def to_bytes(self) -> bytes:
+        return pack("search-params", PROTOCOL_VERSION, arrays={},
+                    meta=self.to_dict())
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "SearchParams":
+        _, meta = unpack(data, "search-params", PROTOCOL_VERSION)
+        return cls.from_dict(meta)
+
+
+# ---------------------------------------------------------------------------
+# EncryptedQuery — what the user sends (batch-native).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EncryptedQuery:
+    """(nq, d) DCPE query ciphertexts + (nq, 2d+16) DCE trapdoors.
+
+    This is all the server ever learns about a query (paper §V-C): the
+    user-side O(d^2) encryption happens in `QueryClient.encrypt_query`.
+    """
+    C_sap: np.ndarray
+    T: np.ndarray
+
+    def __post_init__(self):
+        self.C_sap = np.atleast_2d(np.asarray(self.C_sap, np.float32))
+        self.T = np.atleast_2d(np.asarray(self.T, np.float32))
+        if self.C_sap.shape[0] != self.T.shape[0]:
+            raise ValueError(
+                f"{self.C_sap.shape[0]} ciphertexts vs "
+                f"{self.T.shape[0]} trapdoors")
+        if self.T.shape[1] != dce.ciphertext_dim(self.C_sap.shape[1]):
+            raise ValueError(
+                f"trapdoor dim {self.T.shape[1]} does not match "
+                f"d={self.C_sap.shape[1]} "
+                f"(expect {dce.ciphertext_dim(self.C_sap.shape[1])})")
+
+    @property
+    def nq(self) -> int:
+        return self.C_sap.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.C_sap.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return self.C_sap.nbytes + self.T.nbytes
+
+    def to_bytes(self) -> bytes:
+        return pack("encrypted-query", PROTOCOL_VERSION,
+                    arrays={"C_sap": self.C_sap, "T": self.T})
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "EncryptedQuery":
+        arrays, _ = unpack(data, "encrypted-query", PROTOCOL_VERSION)
+        try:
+            return cls(C_sap=arrays["C_sap"], T=arrays["T"])
+        except (KeyError, ValueError) as e:
+            raise WireFormatError(f"bad encrypted-query payload: {e}") from e
+
+
+# ---------------------------------------------------------------------------
+# EncryptedCorpus — what the owner uploads (ciphertexts + optional index).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EncryptedCorpus:
+    """The owner's outsourced database (paper §V-A): DCPE filter
+    ciphertexts, DCE refine ciphertexts, and — for hnsw collections —
+    the owner-built filter graph (`HNSW.to_arrays` payload, a function
+    of ciphertexts only).  The service stores this and nothing else."""
+    C_sap: np.ndarray               # (n, d)
+    C_dce: np.ndarray               # (n, 4, 2d+16)
+    index: dict | None = None       # HNSW.to_arrays() arrays, or None
+
+    def __post_init__(self):
+        self.C_sap = np.atleast_2d(np.asarray(self.C_sap, np.float32))
+        self.C_dce = np.asarray(self.C_dce, np.float32)
+        n, d = self.C_sap.shape
+        if self.C_dce.shape != (n, 4, dce.ciphertext_dim(d)):
+            raise ValueError(
+                f"C_dce shape {self.C_dce.shape} does not match n={n}, "
+                f"d={d} (expect {(n, 4, dce.ciphertext_dim(d))})")
+
+    @property
+    def n(self) -> int:
+        return self.C_sap.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.C_sap.shape[1]
+
+    def to_bytes(self) -> bytes:
+        arrays = {"C_sap": self.C_sap, "C_dce": self.C_dce}
+        if self.index is not None:
+            arrays.update({f"index__{k}": v for k, v in self.index.items()})
+        return pack("encrypted-corpus", PROTOCOL_VERSION, arrays=arrays,
+                    meta={"has_index": self.index is not None})
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "EncryptedCorpus":
+        arrays, meta = unpack(data, "encrypted-corpus", PROTOCOL_VERSION)
+        index = None
+        if meta.get("has_index"):
+            index = {k[len("index__"):]: v for k, v in arrays.items()
+                     if k.startswith("index__")}
+        try:
+            return cls(C_sap=arrays["C_sap"], C_dce=arrays["C_dce"],
+                       index=index)
+        except (KeyError, ValueError) as e:
+            raise WireFormatError(f"bad encrypted-corpus payload: {e}") from e
+
+
+# ---------------------------------------------------------------------------
+# SearchRequest / SearchResult — the submit() round trip.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One routed search: (tenant, collection) + query + params.
+
+    coalesce=True lets a single-query request ride the service's
+    micro-batcher (throughput under concurrency); batch requests and
+    coalesce=False go straight to one locked engine call.
+    """
+    tenant: str
+    collection: str
+    query: EncryptedQuery
+    params: SearchParams = dataclasses.field(default_factory=SearchParams)
+    coalesce: bool = True
+
+    def to_bytes(self) -> bytes:
+        return pack("search-request", PROTOCOL_VERSION,
+                    arrays={"C_sap": self.query.C_sap, "T": self.query.T},
+                    meta={"tenant": self.tenant,
+                          "collection": self.collection,
+                          "params": self.params.to_dict(),
+                          "coalesce": bool(self.coalesce)})
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "SearchRequest":
+        arrays, meta = unpack(data, "search-request", PROTOCOL_VERSION)
+        try:
+            return cls(tenant=meta["tenant"], collection=meta["collection"],
+                       query=EncryptedQuery(C_sap=arrays["C_sap"],
+                                            T=arrays["T"]),
+                       params=SearchParams.from_dict(meta["params"]),
+                       coalesce=bool(meta.get("coalesce", True)))
+        except (KeyError, TypeError, ValueError) as e:
+            raise WireFormatError(f"bad search-request payload: {e}") from e
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """(nq, k) int64 neighbor ids (-1 fills slots where a query had
+    fewer than k real candidates) + the engine's uniform SearchStats.
+
+    For a coalesced single-query request the stats describe the flush
+    the request rode in (stats.n_queries = how many requests shared the
+    batched engine call)."""
+    ids: np.ndarray
+    stats: SearchStats
+
+    def __post_init__(self):
+        self.ids = np.atleast_2d(np.asarray(self.ids, np.int64))
+
+    @property
+    def nq(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.ids.shape[1]
+
+    def ids_lists(self) -> list[np.ndarray]:
+        """Per-query ids with the -1 padding stripped — the user-side
+        post-processing step."""
+        return [row[row >= 0] for row in self.ids]
+
+    def to_bytes(self) -> bytes:
+        return pack("search-result", PROTOCOL_VERSION,
+                    arrays={"ids": self.ids},
+                    meta={"stats": dataclasses.asdict(self.stats)})
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "SearchResult":
+        arrays, meta = unpack(data, "search-result", PROTOCOL_VERSION)
+        try:
+            return cls(ids=arrays["ids"],
+                       stats=SearchStats(**meta["stats"]))
+        except (KeyError, TypeError) as e:
+            raise WireFormatError(f"bad search-result payload: {e}") from e

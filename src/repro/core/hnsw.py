@@ -269,13 +269,18 @@ class HNSW:
             "levels": np.asarray(self.levels, np.int32),
             "flat": np.asarray(flat, np.int32),
             "offsets": np.asarray(offsets, np.int64),
+            # n_layers can exceed max_level+1: deleting the top node
+            # lowers max_level but the (empty) upper link layers remain
             "meta": np.asarray(
-                [self.M, self.efC, self.entry, self.max_level, self._n]),
+                [self.M, self.efC, self.entry, self.max_level, self._n,
+                 len(self.links)]),
         }
 
     @classmethod
     def from_arrays(cls, arrs: dict) -> "HNSW":
-        M, efC, entry, max_level, n = (int(v) for v in arrs["meta"])
+        meta = [int(v) for v in arrs["meta"]]
+        M, efC, entry, max_level, n = meta[:5]
+        n_layers = meta[5] if len(meta) > 5 else max_level + 1
         self = cls(dim=arrs["X"].shape[1], M=M, ef_construction=efC)
         self._X = np.asarray(arrs["X"], np.float32).copy()
         self._n = n
@@ -284,7 +289,7 @@ class HNSW:
         flat, offsets = arrs["flat"], arrs["offsets"]
         self.links = []
         pos = 0
-        for lev in range(max_level + 1):
+        for lev in range(n_layers):
             layer = []
             for node in range(n):
                 off = offsets[pos]

@@ -25,13 +25,17 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import warnings
 
 import numpy as np
 
 from . import dce, dcpe, hnsw as hnsw_mod
+from .wireformat import WireFormatError, pack, unpack
 
-__all__ = ["Keys", "EncryptedDatabase", "DataOwner", "User", "Server",
-           "SearchStats", "build_system"]
+__all__ = ["Keys", "KEYS_WIRE_VERSION", "EncryptedDatabase", "DataOwner",
+           "User", "Server", "SearchStats", "build_system"]
+
+KEYS_WIRE_VERSION = 1
 
 
 def __getattr__(name):
@@ -48,13 +52,70 @@ class Keys:
     dce_key: dce.DCEKey
     sap_key: dcpe.SAPKey
 
+    @property
+    def d(self) -> int:
+        return self.dce_key.d
+
+    # ------------------------------------------------- wire (DESIGN.md §9)
+    # The owner->user key handoff and the on-disk keystore both move keys
+    # across a process boundary; this is the only sanctioned format.
+    # float64 key matrices round-trip bit-exactly (npz keeps dtypes), so
+    # ciphertexts produced before and after a round-trip are identical
+    # for the same randomness seed.
+
+    def to_bytes(self) -> bytes:
+        k = self.dce_key
+        return pack(
+            "ppanns-keys", KEYS_WIRE_VERSION,
+            arrays={
+                "perm1": k.perm1, "perm2": k.perm2,
+                "M1": k.M1, "M1_inv": k.M1_inv,
+                "M2": k.M2, "M2_inv": k.M2_inv,
+                "M3": k.M3, "M3_inv": k.M3_inv,
+                "r": k.r, "kv": k.kv,
+            },
+            meta={"d": k.d, "d_pad": k.d_pad,
+                  "sap_s": self.sap_key.s, "sap_beta": self.sap_key.beta})
+
+    @classmethod
+    def from_bytes(cls, data: bytes, *, expect_d: int | None = None
+                   ) -> "Keys":
+        """Deserialize; refuses a mismatched wire version (via `unpack`)
+        and, when `expect_d` is given, keys for any other dimension —
+        loading d=128 keys into a d=512 collection must fail loudly, not
+        produce garbage ciphertexts."""
+        arrays, meta = unpack(data, "ppanns-keys", KEYS_WIRE_VERSION)
+        d, d_pad = int(meta["d"]), int(meta["d_pad"])
+        if expect_d is not None and d != int(expect_d):
+            raise WireFormatError(
+                f"keys are for d={d}, expected d={int(expect_d)}")
+        if d_pad != d + (d % 2):
+            raise WireFormatError(f"inconsistent key dims d={d}, "
+                                  f"d_pad={d_pad}")
+        h, big = d_pad // 2 + 4, 2 * d_pad + 16
+        shapes = {"perm1": (d_pad,), "perm2": (d_pad + 8,),
+                  "M1": (h, h), "M1_inv": (h, h), "M2": (h, h),
+                  "M2_inv": (h, h), "M3": (big, big), "M3_inv": (big, big),
+                  "r": (4,), "kv": (4, big)}
+        for name, shape in shapes.items():
+            got = arrays[name].shape if name in arrays else None
+            if got != shape:
+                raise WireFormatError(
+                    f"key component {name!r}: expected shape {shape} for "
+                    f"d={d}, payload has {got}")
+        dce_key = dce.DCEKey(d=d, d_pad=d_pad, **{
+            name: np.asarray(arrays[name]) for name in shapes})
+        sap_key = dcpe.SAPKey(s=float(meta["sap_s"]),
+                              beta=float(meta["sap_beta"]))
+        return cls(dce_key=dce_key, sap_key=sap_key)
+
 
 @dataclasses.dataclass
 class EncryptedDatabase:
     """Everything the server stores (paper §V-A): C_SAP, HNSW over C_SAP,
     and C_DCE."""
     C_sap: np.ndarray            # (n, d)       DCPE ciphertexts
-    index: hnsw_mod.HNSW         # HNSW built on C_sap
+    index: hnsw_mod.HNSW | None  # HNSW built on C_sap (None: no graph)
     C_dce: np.ndarray            # (n, 4, 2d+16) DCE ciphertexts
 
     @property
@@ -73,17 +134,36 @@ class DataOwner:
         self._enc_ctr = 10_000 + seed    # fresh-randomness counter (ingest)
         self._enc_lock = threading.Lock()
 
+    @classmethod
+    def from_keys(cls, keys: Keys, seed: int = 0) -> "DataOwner":
+        """Rehydrate an owner around round-tripped keys (repro.api).
+
+        `seed` keeps the deterministic `encrypt_database` schedule;
+        the fresh-randomness counter for `encrypt_vectors` restarts
+        from fresh entropy, NEVER from the seed — a restarted owner
+        re-drawing an earlier incarnation's auto-seeds would let the
+        server difference old and new ciphertexts."""
+        self = cls.__new__(cls)
+        self.keys = keys
+        self._seed = int(seed)
+        self._enc_ctr = 10_000 + int(
+            np.random.SeedSequence().entropy % (2 ** 31))
+        self._enc_lock = threading.Lock()
+        return self
+
     def encrypt_database(
         self, P: np.ndarray, M: int = 16, ef_construction: int = 200,
-        progress_every: int = 0,
+        progress_every: int = 0, build_index: bool = True,
     ) -> EncryptedDatabase:
         P = np.atleast_2d(np.asarray(P))
         C_sap = dcpe.encrypt(P, self.keys.sap_key, seed=self._seed + 1)
         C_dce = dce.encrypt(P, self.keys.dce_key, seed=self._seed + 2)
-        index = hnsw_mod.HNSW(dim=P.shape[1], M=M,
-                              ef_construction=ef_construction,
-                              seed=self._seed + 3)
-        index.build(C_sap, progress_every=progress_every)
+        index = None
+        if build_index:
+            index = hnsw_mod.HNSW(dim=P.shape[1], M=M,
+                                  ef_construction=ef_construction,
+                                  seed=self._seed + 3)
+            index.build(C_sap, progress_every=progress_every)
         return EncryptedDatabase(C_sap=C_sap, index=index, C_dce=C_dce)
 
     def encrypt_vector(self, p: np.ndarray, seed: int):
@@ -180,6 +260,12 @@ class Server:
         ef_search: int = 96,
         refine: str = "tournament",    # | "heap" (paper) | "none" (Fig. 6)
     ) -> tuple[np.ndarray, SearchStats]:
+        warnings.warn(
+            "ppanns.Server.search is a legacy entry point; new code "
+            "should go through repro.api (QueryClient.encrypt_query -> "
+            "SecureAnnService.submit), which returns the same ids "
+            "(parity-tested in tests/test_api.py)",
+            DeprecationWarning, stacklevel=2)
         return self.engine.search(
             np.asarray(C_sap_q), np.asarray(T_q), k, ratio_k=ratio_k,
             ef_search=ef_search, refine=refine)
@@ -216,7 +302,17 @@ class Server:
 def build_system(P: np.ndarray, beta_fraction: float = 0.05,
                  beta: float | None = None, s: float = 1024.0,
                  M: int = 16, ef_construction: int = 200, seed: int = 0):
-    """Convenience: owner encrypts P, returns (owner, user, server)."""
+    """Convenience: owner encrypts P, returns (owner, user, server).
+
+    .. deprecated:: use `repro.api` — `DataOwnerClient(spec)` +
+       `encrypt_corpus` + `SecureAnnService.create_collection` builds the
+       same system behind the typed protocol (and serializable keys /
+       queries / collections); parity is asserted in tests/test_api.py.
+    """
+    warnings.warn(
+        "ppanns.build_system is deprecated; use repro.api "
+        "(DataOwnerClient / QueryClient / SecureAnnService)",
+        DeprecationWarning, stacklevel=2)
     P = np.atleast_2d(np.asarray(P))
     if beta is None:
         beta = dcpe.suggest_beta(P, fraction=beta_fraction)

@@ -184,10 +184,10 @@ def lower_cell(arch: str, shape_name: str, mesh):
 
     if arch == "ppanns-scan":
         import jax.numpy as jnp
-        from repro.serving.secure_scan import (build_secure_scan_step,
-                                               build_secure_scan_step_gspmd,
-                                               secure_scan_input_specs,
-                                               secure_scan_pspecs)
+        from repro.api import (build_secure_scan_step,
+                               build_secure_scan_step_gspmd,
+                               secure_scan_input_specs,
+                               secure_scan_pspecs)
         cell = PPANNS_CELLS[shape_name]
         builder = (build_secure_scan_step_gspmd if cell.get("gspmd")
                    else build_secure_scan_step)

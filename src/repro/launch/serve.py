@@ -1,8 +1,9 @@
 """Serve driver: loads (or inits) a model, runs batched prefill+decode,
 and optionally attaches the PP-ANNS retrieval sidecar (the paper's secure
-k-NN as a serving feature) through the online serving runtime —
-multi-tenant collections, live encrypted ingestion, and the dynamic
-micro-batcher (DESIGN.md §8).
+k-NN as a serving feature) through the typed public API (DESIGN.md §9):
+a keyless `SecureAnnService` hosts the collection, a `DataOwnerClient`
+encrypts the corpus, and concurrent `QueryClient` requests coalesce in
+the service's micro-batcher (DESIGN.md §8).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
       --batch 4 --prompt-len 32 --new-tokens 16 --secure-ann
@@ -12,16 +13,18 @@ from __future__ import annotations
 
 import argparse
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (DataOwnerClient, IndexSpec, SearchParams,
+                       SecureAnnService, suggest_beta)
 from repro.configs import get_config
-from repro.core import dcpe
 from repro.data import synth
 from repro.models import Model
-from repro.serving import CollectionManager, LMServer
+from repro.serving import LMServer
 
 
 def main(argv=None):
@@ -57,30 +60,35 @@ def main(argv=None):
     print(f"[serve] generated {out.shape} in {dt:.2f}s ({tok_s:.1f} tok/s)")
 
     if args.secure_ann:
-        print("[serve] starting PP-ANNS runtime sidecar "
+        print("[serve] starting PP-ANNS service sidecar "
               f"({args.ann_db_size} encrypted vectors)...")
         d = min(cfg.d_model, 128)
         ds = synth.make_dataset("sift1m", n=args.ann_db_size, n_queries=16,
                                 d=d, k_gt=10, seed=0)
-        with CollectionManager() as mgr:
-            col = mgr.create_collection(
-                "serve-demo", "rag", d=d, backend="flat",
-                sap_beta=dcpe.suggest_beta(ds.base, fraction=0.03),
-                max_wait_ms=4.0, seed=0)
+        spec = IndexSpec(tenant="serve-demo", name="rag", d=d,
+                         backend="flat",
+                         sap_beta=suggest_beta(ds.base, fraction=0.03),
+                         max_wait_ms=4.0, seed=0)
+        with SecureAnnService() as svc:
+            svc.create_collection(spec)
+            owner = DataOwnerClient(spec)       # keys stay client-side
             t0 = time.time()
-            col.insert(ds.base)          # live batched-encrypted ingestion
-            col.compact()
+            C_sap, C_dce = owner.encrypt_vectors(ds.base)
+            svc.insert(spec.tenant, spec.name, C_sap, C_dce)
+            svc.compact(spec.tenant, spec.name)
             print(f"[serve] ingested {args.ann_db_size} vectors "
                   f"(jitted DCPE+DCE encrypt) in {time.time() - t0:.2f}s")
-            col.warmup(k=10)
-            user = col.new_user()
-            enc = [user.encrypt_query(q) for q in ds.queries]
+            svc.warmup(spec.tenant, spec.name, k=10)
+            user = owner.query_client()
+            reqs = [user.request(spec.tenant, spec.name, q,
+                                 SearchParams(k=10)) for q in ds.queries]
             t0 = time.time()
-            futs = [col.submit(c, t, 10) for c, t in enc]   # concurrent
-            ids = np.stack([f.result(timeout=60) for f in futs])
+            with ThreadPoolExecutor(len(reqs)) as pool:   # concurrent
+                results = list(pool.map(svc.submit, reqs))
+            ids = np.concatenate([r.ids for r in results])
             dt = time.time() - t0
             rec = synth.recall_at_k(ids, ds.gt, 10)
-            snap = col.stats()
+            snap = svc.stats(spec.tenant, spec.name)
             print(f"[serve] secure 10-NN over {args.ann_db_size} vectors: "
                   f"recall@10={rec:.3f} in {dt:.2f}s "
                   f"(occupancy={snap['batch_occupancy']:.1f}, "

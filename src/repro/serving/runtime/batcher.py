@@ -59,6 +59,7 @@ class _Request:
     group: tuple                  # (k, ratio_k, ef_search)
     future: Future
     t_enq: float
+    want_stats: bool = False      # future resolves to (ids, flush stats)
 
 
 class MicroBatcher:
@@ -95,12 +96,17 @@ class MicroBatcher:
     # ------------------------------------------------------------- client
 
     def submit(self, C_sap_q: np.ndarray, T_q: np.ndarray, k: int, *,
-               ratio_k: float = 8.0, ef_search: int = 96) -> Future:
-        """Enqueue one query; resolves to its (k,) id vector."""
+               ratio_k: float = 8.0, ef_search: int = 96,
+               want_stats: bool = False) -> Future:
+        """Enqueue one query; resolves to its (k,) id vector — or, with
+        want_stats, to (ids, SearchStats of the enclosing flush), so a
+        protocol-level caller can report the engine's uniform accounting
+        (stats.n_queries tells it how many requests coalesced)."""
         req = _Request(
             Q=np.asarray(C_sap_q), T=np.asarray(T_q),
             group=(int(k), float(ratio_k), int(ef_search)),
-            future=Future(), t_enq=time.monotonic())
+            future=Future(), t_enq=time.monotonic(),
+            want_stats=want_stats)
         with self._cv:
             if self._closed:
                 raise RuntimeError("batcher is closed")
@@ -220,7 +226,9 @@ class MicroBatcher:
                 self._resolve(r.future, exc=exc)
             return
         for i, r in enumerate(batch):
-            self._resolve(r.future, result=np.asarray(ids[i]))
+            row = np.asarray(ids[i])
+            self._resolve(r.future,
+                          result=(row, stats) if r.want_stats else row)
         if self.telemetry is not None:
             self.telemetry.record_flush(
                 B, [now - r.t_enq for r in batch], stats.backend,

@@ -24,7 +24,8 @@ import threading
 
 import numpy as np
 
-from ...core import dce, ppanns
+from ...core import dce, hnsw as hnsw_mod, ppanns
+from ...core.ivf import IVFIndex
 from ..search_engine import SearchStats, SecureSearchEngine
 from .batcher import MicroBatcher
 from .ingest import DeltaAwareBackend, MutableEncryptedStore
@@ -49,7 +50,7 @@ class Collection:
                  use_kernel: bool = True, max_batch: int = 32,
                  max_wait_ms: float = 2.0, max_queue: int = 256,
                  compact_every: int = 4096, verify_parity: bool = False,
-                 **backend_kw):
+                 keyless: bool = False, **backend_kw):
         self.tenant = tenant
         self.name = name
         self.d = d
@@ -57,8 +58,12 @@ class Collection:
             # fresh entropy per collection: two tenants must never derive
             # the same key pair just because neither passed a seed
             seed = int(np.random.SeedSequence().entropy % (2 ** 31))
-        self.owner = ppanns.DataOwner(d=d, sap_beta=sap_beta, sap_s=sap_s,
-                                      seed=seed)
+        self.seed = seed          # effective seed — recorded by save()
+        # keyless = the honest-but-curious server's view (repro.api): the
+        # collection holds ciphertexts only; keys live with the remote
+        # DataOwnerClient and plaintext ingestion is structurally absent
+        self.owner = None if keyless else ppanns.DataOwner(
+            d=d, sap_beta=sap_beta, sap_s=sap_s, seed=seed)
         self.store = MutableEncryptedStore(d, dce.ciphertext_dim(d))
         self._backend = DeltaAwareBackend(self.store, backend,
                                           use_kernel=use_kernel,
@@ -77,6 +82,10 @@ class Collection:
 
     def new_user(self) -> ppanns.User:
         """Owner -> trusted user key handoff for this collection."""
+        if self.owner is None:
+            raise RuntimeError(
+                f"collection {self.tenant}/{self.name} is keyless "
+                "(server-side): keys live with the DataOwnerClient")
         return ppanns.User(self.owner.share_keys())
 
     # ------------------------------------------------------- ingestion
@@ -84,6 +93,10 @@ class Collection:
     def insert(self, P: np.ndarray) -> np.ndarray:
         """Owner-side API: batch-encrypt plaintext vectors (jitted DCPE +
         DCE paths) and append.  Returns the stable row ids."""
+        if self.owner is None:
+            raise RuntimeError(
+                f"collection {self.tenant}/{self.name} is keyless "
+                "(server-side): ingest ciphertexts via insert_encrypted")
         C_sap, C_dce = self.owner.encrypt_vectors(P)
         return self.insert_encrypted(C_sap, C_dce)
 
@@ -131,6 +144,62 @@ class Collection:
             self._refresh_engine()
         self.telemetry.record_ingest(compacted=True)
 
+    def load_snapshot(self, C_sap: np.ndarray, C_dce: np.ndarray, *,
+                      alive: np.ndarray | None = None, n_main: int = -1,
+                      main_gen: int = 1, graph_arrays: dict | None = None,
+                      ivf_state: dict | None = None):
+        """Load pre-encrypted rows — an owner-uploaded corpus or a
+        persisted collection snapshot — into this (empty) collection
+        without re-running per-row ingestion (DESIGN.md §9).
+
+        For an hnsw-backed collection the filter graph comes in as
+        `graph_arrays` (`HNSW.to_arrays` payload — built by the data
+        owner over DCPE ciphertexts, or saved by a previous service
+        incarnation); node ids must equal row ids.  flat/ivf backends
+        rebuild their (deterministic, seed-keyed) acceleration state
+        lazily on the next search.  Returns the row ids."""
+        C_sap = np.atleast_2d(np.asarray(C_sap, np.float32))
+        n = C_sap.shape[0]
+        if alive is None:
+            alive = np.ones(n, bool)
+        if n_main < 0:
+            n_main = n            # an uploaded corpus is all main region
+        with self._lock:
+            self.store.restore(C_sap, C_dce, alive, n_main, main_gen)
+            if self._backend.kind == "hnsw":
+                if graph_arrays is None:
+                    raise ValueError(
+                        "hnsw-backed collection needs the filter graph "
+                        "(HNSW.to_arrays payload) alongside the "
+                        "ciphertexts")
+                graph = hnsw_mod.HNSW.from_arrays(dict(graph_arrays))
+                if graph.size != self.store.n_total:
+                    raise ValueError(
+                        f"graph has {graph.size} nodes for "
+                        f"{self.store.n_total} rows")
+                self._backend.graph = graph
+            elif self._backend.kind == "ivf" and ivf_state is not None:
+                # restore the IVF index exactly as snapshotted: its
+                # centroids depend on which rows were alive at build
+                # time, which a fresh kmeans over today's survivors
+                # would not reproduce
+                cent = np.asarray(ivf_state["centroids"], np.float32)
+                offs = np.asarray(ivf_state["list_offsets"], np.int64)
+                flat = np.asarray(ivf_state["list_flat"], np.int64)
+                ivf = IVFIndex(n_clusters=cent.shape[0], seed=self.seed)
+                ivf.centroids = cent
+                ivf.lists = [flat[offs[i]: offs[i + 1]].copy()
+                             for i in range(offs.size - 1)]
+                b = self._backend
+                b.ivf = ivf
+                b._assign = {int(r): c
+                             for c, l in enumerate(ivf.lists) for r in l}
+                b._ivf_built_upto = int(ivf_state["built_upto"])
+                b._attached_gen = int(ivf_state["attached_gen"])
+            self._refresh_engine()
+        self.telemetry.record_ingest(n_inserted=n)
+        return np.arange(n)
+
     def _refresh_engine(self):
         """Mark engine state dirty; the rebuild happens lazily on the next
         search, so a burst of mutations pays one refresh (DESIGN.md §8)."""
@@ -144,9 +213,49 @@ class Collection:
             self._engine.update_database(self.store.sap_view,
                                          self.store.dce_padded_view)
 
+    def snapshot(self) -> tuple[dict, dict]:
+        """Persistable state: (arrays, bookkeeping) — the ciphertext
+        store with its tombstone encoding plus the filter state that is
+        NOT a pure function of the store: the hnsw graph (prefixed
+        `graph__`) and the live IVF index (prefixed `ivf__` — its
+        centroids were fit over the rows alive *at build time*, so a
+        rebuild after later deletes would not reproduce it).  Key
+        material is never part of a snapshot (a keyless collection has
+        none to begin with); feed the output back through
+        `load_snapshot` to restore bit-identical search behaviour
+        (DESIGN.md §9).  Every array is copied under the lock — a
+        concurrent mutation cannot tear the payload."""
+        with self._lock:
+            st = self.store
+            arrays = {"C_sap": st.sap_view.copy(),
+                      "C_dce": st.dce_view.copy(),
+                      "alive": st.alive_view.copy()}
+            bookkeeping = {"n_main": st.n_main, "main_gen": st.main_gen}
+            if self._backend.kind == "hnsw":
+                arrays.update({f"graph__{k}": np.array(v) for k, v in
+                               self._backend.graph.to_arrays().items()})
+            elif self._backend.kind == "ivf" \
+                    and self._backend.ivf is not None:
+                ivf = self._backend.ivf
+                lists = [np.asarray(l, np.int64) for l in ivf.lists]
+                offsets = np.zeros(len(lists) + 1, np.int64)
+                np.cumsum([l.size for l in lists], out=offsets[1:])
+                arrays.update({
+                    "ivf__centroids": np.array(ivf.centroids, np.float32),
+                    "ivf__list_flat": (np.concatenate(lists) if lists
+                                       else np.zeros(0, np.int64)),
+                    "ivf__list_offsets": offsets,
+                })
+                bookkeeping["ivf_built_upto"] = \
+                    int(self._backend._ivf_built_upto)
+                bookkeeping["ivf_attached_gen"] = \
+                    int(self._backend._attached_gen)
+        return arrays, bookkeeping
+
     # ---------------------------------------------------------- search
 
-    def _run_batch(self, Q, T, k, ratio_k=8.0, ef_search=96):
+    def _run_batch(self, Q, T, k, ratio_k=8.0, ef_search=96,
+                   refine="tournament"):
         """The batcher's flush target: one locked engine call."""
         with self._lock:
             if self._engine is None:            # empty collection
@@ -157,11 +266,13 @@ class Collection:
                                     bytes_down=0, n_queries=nq,
                                     backend=self._backend.name))
             return self._engine.search_batch(Q, T, k, ratio_k=ratio_k,
-                                             ef_search=ef_search)
+                                             ef_search=ef_search,
+                                             refine=refine)
 
     def submit(self, C_sap_q, T_q, k, *, ratio_k: float = 8.0,
-               ef_search: int = 96):
-        """Async single query through the micro-batcher -> Future[(k,) ids]."""
+               ef_search: int = 96, want_stats: bool = False):
+        """Async single query through the micro-batcher -> Future[(k,) ids]
+        (or Future[(ids, flush SearchStats)] with want_stats)."""
         C_sap_q = np.asarray(C_sap_q)
         T_q = np.asarray(T_q)
         if C_sap_q.shape != (self.d,) or \
@@ -170,7 +281,8 @@ class Collection:
                 f"query shapes {C_sap_q.shape}/{T_q.shape} do not match "
                 f"collection (d={self.d}, cdim={dce.ciphertext_dim(self.d)})")
         return self.batcher.submit(C_sap_q, T_q, k, ratio_k=ratio_k,
-                                   ef_search=ef_search)
+                                   ef_search=ef_search,
+                                   want_stats=want_stats)
 
     def search(self, C_sap_q, T_q, k, *, ratio_k: float = 8.0,
                ef_search: int = 96, timeout: float | None = 30.0):

@@ -134,6 +134,30 @@ class MutableEncryptedStore:
         self.n_main = self.n_total
         self.main_gen += 1
 
+    def restore(self, C_sap: np.ndarray, C_dce: np.ndarray,
+                alive: np.ndarray, n_main: int, main_gen: int):
+        """Reload a persisted snapshot into an empty store (DESIGN.md §9).
+
+        The saved arrays already carry the tombstone encoding (SENTINEL
+        DCPE rows, scrubbed DCE rows), so restoring is append + alive
+        overlay + bookkeeping — row ids and the main/delta split come
+        back exactly as saved, which is what makes restored searches
+        bit-identical."""
+        if self.n_total:
+            raise RuntimeError("restore requires an empty store "
+                               f"(store already holds {self.n_total} rows)")
+        rows = self.append(C_sap, C_dce)
+        alive = np.asarray(alive, bool)
+        if alive.shape != (rows.size,):
+            raise ValueError(f"alive mask shape {alive.shape} does not "
+                             f"match {rows.size} restored rows")
+        self._alive[: rows.size] = alive
+        if not 0 <= int(n_main) <= self.n_total:
+            raise ValueError(f"n_main={n_main} out of range for "
+                             f"{self.n_total} rows")
+        self.n_main = int(n_main)
+        self.main_gen = int(main_gen)
+
 
 class DeltaAwareBackend:
     """Engine filter backend over a `MutableEncryptedStore`.

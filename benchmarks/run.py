@@ -109,6 +109,11 @@ def main() -> None:
         "fig10_scalability": lambda: bench_scalability.run(
             sizes=(10000, 20000, 40000, 80000) if args.full
             else (5000, 10000, 20000, 40000)),
+        # mesh-sharded placement over 1/2/8 simulated devices (runs in a
+        # subprocess so the forced device count cannot leak into the
+        # other suites' jax state) — DESIGN.md §10
+        "sharded": lambda: bench_scalability.run_sharded(
+            n=16000 if args.full else 6000),
         "batched_engine": lambda: bench_batched.run(
             n=20000 if args.full else 6000),
         # measurement only — the hard smoke gate (occupancy/recompiles)

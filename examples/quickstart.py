@@ -54,7 +54,7 @@ def main():
         res = svc.submit(user.request(spec.tenant, spec.name,
                                       ds.queries[0], params))
         print(f"bytes up per query: {res.stats.bytes_up} (O(d)); "
-              f"bytes down: {res.stats.bytes_down} (4k)")
+              f"bytes down: {res.stats.bytes_down} (8 bytes per int64 id)")
         print(f"refine comparisons: {res.stats.refine_comparisons} "
               f"(each leaks only a sign, Theorem 3)")
     assert rec >= 0.85

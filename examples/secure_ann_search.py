@@ -12,9 +12,8 @@ import time
 
 import numpy as np
 
-from repro.api import (DataOwnerClient, DistributedSecureAnnService,
-                       IndexSpec, SearchParams, SecureAnnService,
-                       suggest_beta)
+from repro.api import (DataOwnerClient, IndexSpec, PlacementSpec,
+                       SearchParams, SecureAnnService, suggest_beta)
 from repro.core import attacks
 from repro.data import synth
 
@@ -69,13 +68,23 @@ def main():
                   f"dist_evals={res.stats.filter_dist_evals}")
         rec2 = recs["flat"]
 
-    # ---- 3. distributed sharded secure scan (TPU-native deployment)
-    eng = DistributedSecureAnnService(corpus)
-    t0 = time.time()
-    res = eng.search(batch_req.query, params)
-    rec3 = synth.recall_at_k(res.ids, ds.gt, k)
-    print(f"[dist-scan] recall@{k}={rec3:.3f}  "
-          f"{args.queries / (time.time() - t0):.1f} QPS (exact filter)")
+    # ---- 3. sharded deployment: the SAME service surface, placement
+    #         as a parameter (row-sharded shard_map filter + sharded
+    #         refine across every local device, DESIGN.md §10)
+    with SecureAnnService() as svc:
+        sspec = dataclasses.replace(spec, name="deep-sharded",
+                                    backend="flat")
+        svc.create_collection(sspec, corpus=corpus,
+                              placement=PlacementSpec(kind="sharded"))
+        sreq = dataclasses.replace(batch_req, collection=sspec.name,
+                                   coalesce=False)
+        t0 = time.time()
+        res = svc.submit(sreq)
+        rec3 = synth.recall_at_k(res.ids, ds.gt, k)
+        pl = svc.placement(sspec.tenant, sspec.name)
+        print(f"[sharded/{pl.n_shards}-dev] recall@{k}={rec3:.3f}  "
+              f"{args.queries / (time.time() - t0):.1f} QPS "
+              f"(exact filter, backend={res.stats.backend})")
 
     # ---- 4. why DCE instead of ASPE: the §III KPA attack
     res_a = attacks.attack_roundtrip(d=12, n=100, nq=30, transform="linear")

@@ -43,8 +43,24 @@ BANNED_NAMES = {
     "ppanns", "SecureSearchEngine", "SearchStats", "FlatScanFilter",
     "IVFScanFilter", "HNSWGraphFilter", "CollectionManager", "Collection",
     "MicroBatcher", "MutableEncryptedStore", "DeltaAwareBackend",
-    "DistributedSecureANN", "QueueFullError", "TenantIsolationError",
-    "build_secure_scan_step", "secure_scan",
+    "DistributedSecureANN", "ShardedBackend", "QueueFullError",
+    "TenantIsolationError", "build_secure_scan_step", "secure_scan",
+}
+
+# Names that MUST stay exported by repro.api — the placement-aware
+# surface contract (DESIGN.md §10) on top of the resolve check.
+REQUIRED_EXPORTS = {
+    "PlacementSpec", "IndexSpec", "SearchParams", "SearchRequest",
+    "SearchResult", "SecureAnnService", "DataOwnerClient", "QueryClient",
+}
+
+# serving.ann_server is a deprecated shim (DESIGN.md §10): nothing in
+# the src tree may import it except the shim modules themselves.  Tests
+# may (they parity-test the shim).
+ANN_SERVER_SHIMS = {
+    pathlib.Path("src/repro/serving/ann_server.py"),
+    pathlib.Path("src/repro/api/mesh.py"),
+    pathlib.Path("src/repro/serving/__init__.py"),
 }
 
 
@@ -92,11 +108,43 @@ def check_api_exports() -> list[str]:
         except Exception as e:                      # noqa: BLE001
             errors.append(f"repro.api.{name} does not resolve: "
                           f"{type(e).__name__}: {e}")
+    for name in sorted(REQUIRED_EXPORTS - set(api.__all__)):
+        errors.append(f"repro.api must export {name} (placement-aware "
+                      f"surface contract, DESIGN.md §10)")
+    return errors
+
+
+def check_ann_server_ban() -> list[str]:
+    """No src module outside the shims may import the deprecated
+    `serving.ann_server` path (absolute or relative)."""
+    errors = []
+    for path in sorted((ROOT / "src").rglob("*.py")):
+        rel = path.relative_to(ROOT)
+        if rel in ANN_SERVER_SHIMS:
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            mods = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom):
+                # `from pkg.serving import ann_server` names the module
+                # as an alias, not in node.module — check both
+                mods = [node.module or ""] \
+                    + [a.name for a in node.names]
+            for mod in mods:
+                if mod == "ann_server" or mod.endswith(".ann_server"):
+                    errors.append(
+                        f"{rel}:{node.lineno}: imports deprecated "
+                        f"ann_server (only the shims may; use "
+                        f"serving.sharded / placement=)")
+                    break
     return errors
 
 
 def main() -> int:
     errors = check_api_exports()
+    errors.extend(check_ann_server_ban())
     for f in GUARDED:
         errors.extend(check_imports(f))
     if errors:

@@ -1,14 +1,20 @@
 """repro.api — the public, role-typed client/service surface
-(DESIGN.md §9).
+(DESIGN.md §9, §10).
 
 The paper's threat model has three roles — data owner, user, untrusted
 server — and this package is their protocol: typed dataclasses
-(`IndexSpec`, `SearchParams`, `EncryptedQuery`, `SearchRequest`,
-`SearchResult`, `EncryptedCorpus`) with versioned `to_bytes`/
-`from_bytes` wire round-trips, role objects (`DataOwnerClient`,
-`QueryClient`, `SecureAnnService`, `DistributedSecureAnnService`), an
-on-disk `Keystore` (owner-side), and persistent encrypted collections
+(`IndexSpec`, `PlacementSpec`, `SearchParams`, `EncryptedQuery`,
+`SearchRequest`, `SearchResult`, `EncryptedCorpus`) with versioned
+`to_bytes`/`from_bytes` wire round-trips, role objects
+(`DataOwnerClient`, `QueryClient`, `SecureAnnService`), an on-disk
+`Keystore` (owner-side), and persistent encrypted collections
 (`SecureAnnService.save`/`load` — ciphertexts only, never keys).
+
+Deployment is a *parameter*, not a class: `create_collection(spec,
+placement=PlacementSpec(kind="sharded", ...))` runs the same
+`submit(SearchRequest)` surface mesh-sharded (DESIGN.md §10).  The old
+`DistributedSecureAnnService` remains as a deprecated shim over that
+path.
 
 Everything an example, launcher, or downstream user needs lives here;
 `scripts/check_api.py` enforces that they import nothing deeper.
@@ -22,6 +28,7 @@ _EXPORTS = {
     "PROTOCOL_VERSION": ".protocol",
     "WireFormatError": ".protocol",
     "IndexSpec": ".protocol",
+    "PlacementSpec": ".protocol",
     "SearchParams": ".protocol",
     "EncryptedQuery": ".protocol",
     "EncryptedCorpus": ".protocol",
@@ -38,7 +45,7 @@ _EXPORTS = {
     "QueueFullError": ".roles",
     # key custody
     "Keystore": ".keystore",
-    # mesh deployment + dry-run builders
+    # deprecated mesh wrapper + dry-run builders
     "DistributedSecureAnnService": ".mesh",
     "build_secure_scan_step": ".mesh",
     "build_secure_scan_step_gspmd": ".mesh",

@@ -1,75 +1,99 @@
-"""Mesh-sharded deployment behind the protocol types (DESIGN.md §3, §9).
+"""DEPRECATED mesh wrapper (DESIGN.md §10) + dry-run builder re-exports.
 
-`DistributedSecureAnnService` is the typed face of
-`serving.ann_server.DistributedSecureANN`: the encrypted database is
-sharded row-wise across every mesh device, queries arrive as
-`EncryptedQuery`, results leave as `SearchResult` — same protocol
-vocabulary as the single-host `SecureAnnService`, different deployment.
+`DistributedSecureAnnService` predates placement-aware collections: it
+was a second, weaker service class (exhaustive flat scan only, a
+`search(query, params)` surface instead of `submit(SearchRequest)`, no
+batching/tenancy/ingestion/persistence).  Deployment is now a parameter
+of the one public API:
 
-The explicit-collective dry-run builders (`serving.secure_scan`) are
-re-exported here so that launch tooling reaches them through the one
-public surface.
+    svc.create_collection(spec, corpus=corpus,
+                          placement=PlacementSpec(kind="sharded"))
+
+This module keeps the old class as a thin `DeprecationWarning` shim over
+exactly that path (parity-tested to the id in tests/test_api.py), and
+keeps re-exporting the explicit-collective dry-run builders
+(`serving.secure_scan`) so launch tooling still reaches them through
+the public surface.
 """
 
 from __future__ import annotations
 
-import time
+import warnings
 
 import numpy as np
 
-from ..serving.ann_server import DistributedSecureANN
-from ..serving.search_engine import SearchStats
 from ..serving.secure_scan import (build_secure_scan_step,          # noqa: F401
                                    build_secure_scan_step_gspmd,    # noqa: F401
                                    secure_scan_input_specs,         # noqa: F401
                                    secure_scan_pspecs)              # noqa: F401
-from .protocol import EncryptedCorpus, EncryptedQuery, SearchParams, \
-    SearchResult
+from .protocol import (EncryptedCorpus, EncryptedQuery, IndexSpec,
+                       PlacementSpec, SearchParams, SearchRequest,
+                       SearchResult)
+from .roles import SecureAnnService
 
 __all__ = ["DistributedSecureAnnService", "build_secure_scan_step",
            "build_secure_scan_step_gspmd", "secure_scan_input_specs",
            "secure_scan_pspecs"]
 
+_TENANT, _NAME = "_legacy", "mesh"
+
 
 class DistributedSecureAnnService:
-    """Sharded exhaustive filter + batched exact DCE refine, typed.
+    """DEPRECATED: a sharded collection behind the unified service.
 
-    Construct from an owner-uploaded `EncryptedCorpus` (or raw
-    ciphertext arrays) and an optional mesh; `search` is the whole
-    surface."""
+    Construct `SecureAnnService` and pass
+    `placement=PlacementSpec(kind="sharded", ...)` to
+    `create_collection` instead — that path adds batching, tenancy,
+    live ingestion, and persistence on top of the same sharded
+    execution.  This shim routes `search` through it unchanged."""
 
     def __init__(self, corpus, C_dce=None, *, mesh=None, axis=None):
-        if isinstance(corpus, EncryptedCorpus):
-            C_sap, C_dce = corpus.C_sap, corpus.C_dce
-        else:
-            C_sap = corpus
+        warnings.warn(
+            "DistributedSecureAnnService is deprecated; create a "
+            "sharded collection through repro.api instead: "
+            "SecureAnnService.create_collection(spec, corpus=corpus, "
+            "placement=PlacementSpec(kind='sharded', ...)) — same ids, "
+            "one service surface", DeprecationWarning, stacklevel=2)
+        if not isinstance(corpus, EncryptedCorpus):
             if C_dce is None:
                 raise ValueError("pass an EncryptedCorpus or both "
                                  "(C_sap, C_dce) arrays")
-        self._impl = DistributedSecureANN(np.asarray(C_sap),
-                                          np.asarray(C_dce),
-                                          mesh=mesh, axis=axis)
+            corpus = EncryptedCorpus(C_sap=np.asarray(corpus),
+                                     C_dce=np.asarray(C_dce))
+        if mesh is not None:
+            # legacy semantics: shard over the named axis only, or over
+            # every axis when none is named
+            axes = tuple(mesh.axis_names) if axis is None else (axis,)
+            n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+            axis_name = axes[0]
+        else:
+            n_shards, axis_name = 1, "data"
+        # sap_beta/sap_s never matter here: the collection is keyless
+        # and ingests the given ciphertexts as-is
+        spec = IndexSpec(tenant=_TENANT, name=_NAME, d=corpus.d,
+                         backend="flat", seed=0)
+        self._svc = SecureAnnService()
+        self._svc.create_collection(
+            spec, corpus=corpus,
+            placement=PlacementSpec(kind="sharded", data_axis=axis_name,
+                                    n_shards=n_shards))
+        self._n = corpus.n
 
     @property
     def n(self) -> int:
-        return self._impl.n
+        return self._n
 
     def search(self, query: EncryptedQuery,
                params: SearchParams = SearchParams()) -> SearchResult:
-        t0 = time.perf_counter()
-        ids = self._impl.query_batch(query.C_sap, query.T, params.k,
-                                     ratio_k=params.ratio_k)
-        nq = query.nq
-        kp = min(int(max(params.k, round(params.ratio_k * params.k))),
-                 self._impl.n_padded)
-        nv = min(kp, self._impl.n)        # pad rows never reach the refine
-        stats = SearchStats(
-            latency_s=time.perf_counter() - t0,
-            filter_dist_evals=nq * self._impl.n,
-            refine_comparisons=nq * nv * (nv - 1),
-            bytes_up=query.nbytes + 4 * nq,
-            bytes_down=4 * int(np.asarray(ids).size),
-            n_queries=nq,
-            backend="mesh-flat",
-        )
-        return SearchResult(ids=np.asarray(ids, np.int64), stats=stats)
+        return self._svc.submit(SearchRequest(
+            tenant=_TENANT, collection=_NAME, query=query, params=params,
+            coalesce=False))
+
+    def close(self):
+        self._svc.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -35,13 +35,95 @@ from ..core.wireformat import WireFormatError, pack, unpack
 from ..serving.search_engine import SearchStats
 
 __all__ = ["PROTOCOL_VERSION", "WireFormatError", "IndexSpec",
-           "SearchParams", "EncryptedQuery", "EncryptedCorpus",
-           "SearchRequest", "SearchResult", "SearchStats", "Keys",
-           "suggest_beta"]
+           "PlacementSpec", "SearchParams", "EncryptedQuery",
+           "EncryptedCorpus", "SearchRequest", "SearchResult",
+           "SearchStats", "Keys", "suggest_beta"]
 
 PROTOCOL_VERSION = 1
 
 _BACKENDS = ("flat", "ivf", "hnsw")
+_PLACEMENT_KINDS = ("single", "sharded")
+
+
+# ---------------------------------------------------------------------------
+# PlacementSpec — WHERE a collection executes (deployment as a parameter).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlacementSpec:
+    """Deployment placement of one collection (DESIGN.md §10).
+
+    `single` runs the engine's single-device path; `sharded` row-shards
+    the ciphertexts across `n_shards` mesh devices on axis `data_axis`
+    and runs the shard_map filter + sharded refine gather.  Placement is
+    a *parameter* of `SecureAnnService.create_collection` — the same
+    `submit(SearchRequest)` surface, micro-batcher, tenancy, ingestion,
+    and persistence work over either.
+
+    `n_shards=None` (sharded) means "every local device"; the service
+    pins the effective count at creation (`resolve`), which is what
+    `save` persists — a reloaded collection re-shards identically.
+    """
+    kind: str = "single"
+    data_axis: str = "data"
+    n_shards: int | None = None
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self):
+        if self.kind not in _PLACEMENT_KINDS:
+            raise ValueError(f"unknown placement kind {self.kind!r} "
+                             f"(have {_PLACEMENT_KINDS})")
+        if self.kind == "single":
+            if self.n_shards not in (None, 1):
+                raise ValueError("single placement cannot set n_shards "
+                                 f"(got {self.n_shards})")
+        else:
+            if not self.data_axis:
+                raise ValueError("sharded placement needs a non-empty "
+                                 "data_axis name")
+            if self.n_shards is not None and self.n_shards < 1:
+                raise ValueError(f"n_shards must be >= 1, got "
+                                 f"{self.n_shards}")
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.kind == "sharded"
+
+    def resolve(self, n_devices: int) -> "PlacementSpec":
+        """Pin `n_shards=None` to the device count at creation time."""
+        if not self.is_sharded:
+            return self
+        n = int(self.n_shards or n_devices)
+        if n > n_devices:
+            raise ValueError(f"placement wants {n} shards but only "
+                             f"{n_devices} device(s) exist")
+        return dataclasses.replace(self, n_shards=n)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlacementSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = set(d) - known
+        if extra:
+            raise WireFormatError(
+                f"PlacementSpec: unknown fields {sorted(extra)}")
+        return cls(**d)
+
+    def to_bytes(self) -> bytes:
+        return pack("placement-spec", PROTOCOL_VERSION, arrays={},
+                    meta=self.to_dict())
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "PlacementSpec":
+        _, meta = unpack(data, "placement-spec", PROTOCOL_VERSION)
+        try:
+            return cls.from_dict(meta)
+        except (TypeError, ValueError) as e:
+            raise WireFormatError(f"bad placement-spec payload: {e}") from e
 
 
 # ---------------------------------------------------------------------------

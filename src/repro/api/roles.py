@@ -36,7 +36,8 @@ from ..serving.runtime import TenantIsolationError               # noqa: F401
 from ..serving.runtime.collections import Collection
 from .keystore import Keystore
 from .protocol import (PROTOCOL_VERSION, EncryptedCorpus, EncryptedQuery,
-                       IndexSpec, SearchParams, SearchRequest, SearchResult)
+                       IndexSpec, PlacementSpec, SearchParams,
+                       SearchRequest, SearchResult)
 
 __all__ = ["DataOwnerClient", "QueryClient", "SecureAnnService",
            "TenantIsolationError", "QueueFullError"]
@@ -212,18 +213,35 @@ class SecureAnnService:
     def __init__(self, *, result_timeout: float = 120.0, **default_kw):
         self._mgr = CollectionManager(**default_kw)
         self._specs: dict[tuple[str, str], IndexSpec] = {}
+        self._placements: dict[tuple[str, str], PlacementSpec] = {}
         self._lock = threading.Lock()
         self.result_timeout = result_timeout
 
     # ------------------------------------------------------ collections
 
     def create_collection(self, spec: IndexSpec,
-                          corpus: EncryptedCorpus | None = None
+                          corpus: EncryptedCorpus | None = None, *,
+                          placement: PlacementSpec | None = None
                           ) -> IndexSpec:
         """Create a (keyless) collection per the spec; optionally load an
         owner-uploaded `EncryptedCorpus` (ciphertexts + owner-built
-        index) in the same call.  Returns the effective spec (seed
-        resolved), which is what `save` persists."""
+        index) in the same call.  `placement` chooses the deployment
+        (DESIGN.md §10): the default single-device engine, or
+        `PlacementSpec(kind="sharded", ...)` for row-sharded mesh
+        execution behind the same `submit` surface.  Returns the
+        effective spec (seed resolved), which is what `save` persists
+        (alongside the resolved placement)."""
+        if placement is None:
+            placement = PlacementSpec()
+        if placement.is_sharded:
+            if spec.backend == "hnsw":
+                raise ValueError(
+                    "hnsw collections cannot be sharded: graph "
+                    "traversal does not shard (DESIGN.md §3); use a "
+                    "flat or ivf backend with sharded placement")
+            import jax                    # resolve n_shards=None NOW so
+            placement = placement.resolve(len(jax.devices()))   # save()
+            # persists the exact shard count this collection ran with
         if corpus is not None:        # validate BEFORE creating: a bad
             if corpus.d != spec.d:    # corpus must not orphan an empty
                 raise ValueError(     # collection under this name
@@ -233,20 +251,27 @@ class SecureAnnService:
                                  "owner-built index in the corpus")
         col = self._mgr.create_collection(
             spec.tenant, spec.name, spec.d, keyless=True,
-            **spec.collection_kwargs())
+            placement=placement, **spec.collection_kwargs())
         if spec.seed is None:
             spec = dataclasses.replace(spec, seed=col.seed)
         with self._lock:
             self._specs[(spec.tenant, spec.name)] = spec
+            self._placements[(spec.tenant, spec.name)] = placement
         if corpus is not None:
             col.load_snapshot(corpus.C_sap, corpus.C_dce,
                               graph_arrays=corpus.index)
         return spec
 
+    def placement(self, tenant: str, name: str) -> PlacementSpec:
+        self._mgr.collection(tenant, name)      # tenancy check first
+        with self._lock:
+            return self._placements[(tenant, name)]
+
     def drop_collection(self, tenant: str, name: str):
         self._mgr.drop_collection(tenant, name)
         with self._lock:
             self._specs.pop((tenant, name), None)
+            self._placements.pop((tenant, name), None)
 
     def collection(self, tenant: str, name: str) -> Collection:
         """The underlying runtime collection — advanced/observability
@@ -314,11 +339,18 @@ class SecureAnnService:
         root.mkdir(parents=True, exist_ok=True)
         with self._lock:
             specs = dict(self._specs)
+            placements = dict(self._placements)
         paths = []
         for (tenant, name), spec in sorted(specs.items()):
             arrays, bookkeeping = self._mgr.collection(tenant,
                                                        name).snapshot()
-            meta = {"spec": spec.to_dict(), **bookkeeping}
+            placement = placements[(tenant, name)]
+            # a sharded collection's bookkeeping carries its per-shard
+            # manifest (global row span + live count per shard), taken
+            # under the same lock hold as the arrays — the record a
+            # multi-host loader would map shard files from
+            meta = {"spec": spec.to_dict(),
+                    "placement": placement.to_dict(), **bookkeeping}
             path = root / self._collection_filename(tenant, name)
             tmp = path.with_suffix(_COLLECTION_SUFFIX + ".tmp")
             tmp.write_bytes(pack("encrypted-collection", PROTOCOL_VERSION,
@@ -344,7 +376,10 @@ class SecureAnnService:
             arrays, meta = unpack(f.read_bytes(), "encrypted-collection",
                                   PROTOCOL_VERSION)
             spec = IndexSpec.from_dict(meta["spec"])
-            svc.create_collection(spec)
+            # pre-placement snapshots carry no placement key -> single
+            placement = (PlacementSpec.from_dict(meta["placement"])
+                         if meta.get("placement") else None)
+            svc.create_collection(spec, placement=placement)
             graph_arrays = {k[len("graph__"):]: v for k, v in arrays.items()
                             if k.startswith("graph__")} or None
             ivf_state = None

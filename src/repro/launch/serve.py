@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import (DataOwnerClient, IndexSpec, SearchParams,
-                       SecureAnnService, suggest_beta)
+from repro.api import (DataOwnerClient, IndexSpec, PlacementSpec,
+                       SearchParams, SecureAnnService, suggest_beta)
 from repro.configs import get_config
 from repro.data import synth
 from repro.models import Model
@@ -36,6 +36,10 @@ def main(argv=None):
     ap.add_argument("--secure-ann", action="store_true",
                     help="attach the PP-ANNS retrieval sidecar")
     ap.add_argument("--ann-db-size", type=int, default=5000)
+    ap.add_argument("--ann-shards", type=int, default=0,
+                    help="row-shard the ANN collection over this many "
+                         "devices (0 = single-device placement; -1 = "
+                         "every local device) — DESIGN.md §10")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).smoke()
@@ -69,8 +73,13 @@ def main(argv=None):
                          backend="flat",
                          sap_beta=suggest_beta(ds.base, fraction=0.03),
                          max_wait_ms=4.0, seed=0)
+        placement = None
+        if args.ann_shards:
+            placement = PlacementSpec(
+                kind="sharded",
+                n_shards=None if args.ann_shards < 0 else args.ann_shards)
         with SecureAnnService() as svc:
-            svc.create_collection(spec)
+            svc.create_collection(spec, placement=placement)
             owner = DataOwnerClient(spec)       # keys stay client-side
             t0 = time.time()
             C_sap, C_dce = owner.encrypt_vectors(ds.base)

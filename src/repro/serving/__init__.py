@@ -10,6 +10,7 @@ import importlib
 _EXPORTS = {
     "LMServer": ".engine",
     "DistributedSecureANN": ".ann_server",
+    "ShardedBackend": ".sharded",
     "SecureSearchEngine": ".search_engine",
     "SearchStats": ".search_engine",
     "FlatScanFilter": ".search_engine",

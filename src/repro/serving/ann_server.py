@@ -1,92 +1,69 @@
-"""Distributed privacy-preserving ANN serving — the unified search
-engine's filter-and-refine pipeline mapped onto a TPU mesh (DESIGN.md §3).
+"""DEPRECATED — the legacy mesh server, now a shim over the unified
+sharded execution layer (DESIGN.md §10).
 
-Graph traversal doesn't shard; scans do.  Layout:
-  * the DCPE ciphertexts and DCE ciphertexts are sharded row-wise across
-    every mesh device (jax.device_put with a NamedSharding);
-  * `query_batch` runs under jit on the mesh: each device computes local
-    filter distances (the l2_topk kernel's ||q||^2 - 2 q.x + ||x||^2
-    restructuring), a global top-k' merge prunes to the candidate sets;
-  * the refine phase is the engine's shared batched DCE tournament
-    (`serving.search_engine.refine_candidates`) — the einsum formulation
-    under a mesh (GSPMD partitions the gather + matmuls), the dce_comp
-    Pallas kernel on a single device.  There is no per-query Python loop
-    anywhere in the batched path.
-
-Single-host partition pruning (IVF) lives in the engine's IVFScanFilter
-backend; this module is the mesh-sharded deployment of the same pipeline
-— the 1000x-at-scale story of the single-server PP-ANNS design.
+`DistributedSecureANN` predates placement-aware collections: it was a
+parallel implementation of the sharded scan (its own filter jit, its own
+pad/sentinel logic).  The real thing now lives in `serving/sharded.py`
+(`ShardedBackend` behind `SecureSearchEngine`), which is what
+`repro.api`'s `placement=PlacementSpec(kind="sharded")` collections run.
+This class remains only so old callers keep working — it warns, builds
+the same sharded backend, and returns bit-identical ids (parity-tested
+in tests/test_search_engine.py).
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import warnings
 
-from .search_engine import refine_candidates
+import numpy as np
+
+from ..core import dce
+from .runtime.ingest import MutableEncryptedStore
+from .search_engine import SecureSearchEngine
+from .sharded import ShardedBackend
 
 __all__ = ["DistributedSecureANN"]
 
 
 class DistributedSecureANN:
-    """Sharded filter (DCPE distances) + exact batched refine (DCE
-    tournament) — the mesh deployment of the unified search engine."""
+    """DEPRECATED shim: sharded filter + batched refine via the unified
+    engine.  Use `repro.api` with a sharded `PlacementSpec` instead."""
 
     def __init__(self, C_sap: np.ndarray, C_dce: np.ndarray,
-                 mesh: Mesh | None = None, axis: str | None = None):
-        self.mesh = mesh
+                 mesh=None, axis: str | None = None):
+        warnings.warn(
+            "serving.ann_server.DistributedSecureANN is deprecated; use "
+            "repro.api: SecureAnnService.create_collection(spec, "
+            "placement=PlacementSpec(kind='sharded', ...)) runs the same "
+            "sharded pipeline behind submit()", DeprecationWarning,
+            stacklevel=2)
+        C_sap = np.asarray(C_sap, np.float32)
+        C_dce = np.asarray(C_dce, np.float32)
         self.n = C_sap.shape[0]
+        self.mesh = mesh
         if mesh is not None:
             axes = tuple(mesh.axis_names) if axis is None else (axis,)
-            shards = int(np.prod([mesh.shape[a] for a in axes]))
-            pad = (-self.n) % shards
+            n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+            axis_name = axes[0]
         else:
-            axes, pad = (), 0
-        # zero-padding adds far-away phantoms only if vectors can be near 0;
-        # pad with +inf-ish sentinel rows instead so they never enter top-k.
-        if pad:
-            big = np.full((pad, C_sap.shape[1]), 1e9, C_sap.dtype)
-            C_sap = np.concatenate([C_sap, big], 0)
-            C_dce = np.concatenate(
-                [C_dce, np.zeros((pad,) + C_dce.shape[1:], C_dce.dtype)], 0)
-        self.n_padded = C_sap.shape[0]
-        if mesh is not None:
-            sh_sap = NamedSharding(mesh, P(axes, None))
-            sh_dce = NamedSharding(mesh, P(axes, None, None))
-            self.C_sap = jax.device_put(jnp.asarray(C_sap), sh_sap)
-            self.C_dce = jax.device_put(jnp.asarray(C_dce), sh_dce)
-        else:
-            self.C_sap = jnp.asarray(C_sap)
-            self.C_dce = jnp.asarray(C_dce)
+            n_shards, axis_name = 1, "data"
+        store = MutableEncryptedStore(C_sap.shape[1],
+                                      dce.ciphertext_dim(C_sap.shape[1]))
+        store.append(C_sap, C_dce)
+        self._backend = ShardedBackend(store, "flat", n_shards=n_shards,
+                                       data_axis=axis_name)
+        self._engine = SecureSearchEngine(
+            store.sap_view, store.dce_padded_view, backend=self._backend,
+            use_kernel=False)
 
-        # Pallas refine on a single device; einsum refine under GSPMD
-        # (a pallas_call over mesh-sharded gathers fights the partitioner).
-        self._use_kernel = mesh is None
-        self._filter = jax.jit(self._filter_impl, static_argnames=("kp",))
-
-    # ---- filter phase: sharded DCPE distance scan + global top-k'
-    def _filter_impl(self, Q_sap, kp: int):
-        qn = (Q_sap * Q_sap).sum(-1, keepdims=True)
-        xn = (self.C_sap * self.C_sap).sum(-1)[None, :]
-        d = qn - 2.0 * Q_sap @ self.C_sap.T + xn        # (nq, n_padded)
-        neg, idx = jax.lax.top_k(-d, kp)
-        return -neg, idx
+    @property
+    def n_padded(self) -> int:
+        return self._backend.padded_rows
 
     def query_batch(self, Q_sap: np.ndarray, T_q: np.ndarray, k: int,
                     ratio_k: float = 8.0):
         """Q_sap: (nq, d) DCPE-encrypted queries; T_q: (nq, 2d+16) DCE
         trapdoors.  Returns ids (nq, k); -1 fills slots where fewer than
-        k real rows exist.  Filter and refine both run batched under jit
-        — no per-query host loop."""
-        kp = min(int(max(k, round(ratio_k * k))), self.n_padded)
-        _, cand = self._filter(jnp.asarray(Q_sap), kp)   # (nq, kp)
-        valid = cand < self.n          # mask the +inf sentinel pad rows
-        ids = refine_candidates(self.C_dce, cand, jnp.asarray(T_q), valid,
-                                min(k, kp), self._use_kernel)
-        ids = np.asarray(ids, np.int64)
-        if ids.shape[1] < k:           # uniform (nq, k) contract: -1 fill
-            ids = np.pad(ids, ((0, 0), (0, k - ids.shape[1])),
-                         constant_values=-1)
+        k real rows exist — the engine's uniform contract."""
+        ids, _ = self._engine.search_batch(Q_sap, T_q, k, ratio_k=ratio_k)
         return ids

@@ -50,7 +50,7 @@ class Collection:
                  use_kernel: bool = True, max_batch: int = 32,
                  max_wait_ms: float = 2.0, max_queue: int = 256,
                  compact_every: int = 4096, verify_parity: bool = False,
-                 keyless: bool = False, **backend_kw):
+                 keyless: bool = False, placement=None, **backend_kw):
         self.tenant = tenant
         self.name = name
         self.d = d
@@ -65,9 +65,26 @@ class Collection:
         self.owner = None if keyless else ppanns.DataOwner(
             d=d, sap_beta=sap_beta, sap_s=sap_s, seed=seed)
         self.store = MutableEncryptedStore(d, dce.ciphertext_dim(d))
-        self._backend = DeltaAwareBackend(self.store, backend,
-                                          use_kernel=use_kernel,
-                                          seed=seed, **backend_kw)
+        # placement chooses WHERE the engine executes (DESIGN.md §10):
+        # None/"single" -> the delta-aware single-device backend,
+        # "sharded"     -> row-sharded shard_map scans + sharded refine.
+        # Everything above the backend (batcher, ingestion, telemetry,
+        # snapshots) is placement-agnostic.
+        self.placement = placement
+        if placement is not None and placement.kind == "sharded":
+            from ..sharded import ShardedBackend
+            if placement.n_shards is None:
+                raise ValueError("sharded placement must be resolved "
+                                 "(n_shards pinned) before it reaches "
+                                 "the runtime")
+            self._backend = ShardedBackend(
+                self.store, backend, n_shards=placement.n_shards,
+                data_axis=placement.data_axis, use_kernel=use_kernel,
+                seed=seed, **backend_kw)
+        else:
+            self._backend = DeltaAwareBackend(self.store, backend,
+                                              use_kernel=use_kernel,
+                                              seed=seed, **backend_kw)
         self._engine: SecureSearchEngine | None = None
         self._lock = threading.RLock()
         self.compact_every = int(compact_every)
@@ -250,7 +267,24 @@ class Collection:
                     int(self._backend._ivf_built_upto)
                 bookkeeping["ivf_attached_gen"] = \
                     int(self._backend._attached_gen)
+            manifest_fn = getattr(self._backend, "shard_manifest", None)
+            if manifest_fn is not None:
+                # computed under the SAME lock hold as the array copies,
+                # so the persisted manifest describes exactly the store
+                # state the snapshot captured — a concurrent insert
+                # cannot wedge between them
+                bookkeeping["shard_manifest"] = manifest_fn()
         return arrays, bookkeeping
+
+    def shard_manifest(self) -> list[dict] | None:
+        """Per-shard row partition of a sharded collection (None for
+        single placement) — observability; `snapshot()` embeds its own
+        lock-consistent copy for persistence."""
+        fn = getattr(self._backend, "shard_manifest", None)
+        if fn is None:
+            return None
+        with self._lock:
+            return fn()
 
     # ---------------------------------------------------------- search
 

@@ -33,6 +33,7 @@ def jit_cache_size() -> int:
     from ...kernels.dce_comp import ops as dce_ops
     from ...kernels.l2_topk import ops as l2_ops
     from .. import search_engine as se
+    from .. import sharded
 
     fns = (
         se.refine_candidates,
@@ -42,7 +43,7 @@ def jit_cache_size() -> int:
         dce._encrypt_jax_core,
         dcpe._encrypt_jax,
     )
-    return sum(f._cache_size() for f in fns)
+    return sum(f._cache_size() for f in fns) + sharded.cache_size()
 
 
 class CollectionTelemetry:

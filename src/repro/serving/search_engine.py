@@ -45,7 +45,7 @@ from ..kernels.l2_topk import ops as l2_ops
 
 __all__ = ["SearchStats", "SecureSearchEngine", "FlatScanFilter",
            "IVFScanFilter", "HNSWGraphFilter", "refine_candidates",
-           "scan_ivf_pools", "traverse_graph_candidates"]
+           "layout_pools", "scan_ivf_pools", "traverse_graph_candidates"]
 
 
 @dataclasses.dataclass
@@ -53,8 +53,8 @@ class SearchStats:
     """Uniform per-call search accounting (single query or batch).
 
     Communication model (paper §V-C): user -> server is the DCPE query
-    ciphertext + DCE trapdoor + k (4 bytes); server -> user is 4 bytes
-    per returned id.
+    ciphertext + DCE trapdoor + k (4 bytes); server -> user is the
+    serialized id matrix — int64 ids, so 8 bytes per returned slot.
     """
     latency_s: float
     filter_dist_evals: int      # ciphertext distance evaluations (filter)
@@ -121,17 +121,17 @@ def _masked_pruned_scan(C_sap, Q, cand, valid, kp: int):
 # ---------------------------------------------------------------------------
 
 
-def scan_ivf_pools(C_dev, Q_sap: np.ndarray, pools, kp: int,
-                   pool_mask=None):
-    """Pad ragged probe pools to a 128-bucketed rectangle and run the
-    jitted masked scan over C_dev.  pool_mask(p) -> bool mask lets a
-    caller pre-invalidate pool entries (e.g. tombstoned rows).
-    Returns (ids (nq, kp), valid (nq, kp))."""
-    nq = Q_sap.shape[0]
-    # power-of-two-bucket the padded pool width: probe-pool sizes vary
-    # per batch and grow with ingestion, so a finer rounding (e.g. to
-    # 128-multiples) would recompile the jitted scan at every boundary
-    # crossing — pow2 bounds the distinct widths to O(log n)
+def layout_pools(nq: int, pools, kp: int, pool_mask=None):
+    """Pad ragged probe pools to a 128-bucketed (nq, L) rectangle.
+
+    Shared by the single-device masked scan and the sharded pool scan
+    (serving/sharded.py) — one layout, so candidate order (and with it
+    exact id parity across placements) cannot drift.  The power-of-two
+    bucket on L matters: probe-pool sizes vary per batch and grow with
+    ingestion, so a finer rounding would recompile the jitted scans at
+    every boundary crossing — pow2 bounds the distinct widths to
+    O(log n).  pool_mask(p) -> bool mask lets a caller pre-invalidate
+    pool entries (e.g. tombstoned rows)."""
     L = next_bucket(max(kp, max((p.size for p in pools), default=1), 1),
                     minimum=128)
     cand = np.zeros((nq, L), np.int32)
@@ -139,6 +139,15 @@ def scan_ivf_pools(C_dev, Q_sap: np.ndarray, pools, kp: int,
     for qi, p in enumerate(pools):                      # id layout only
         cand[qi, : p.size] = p
         valid[qi, : p.size] = True if pool_mask is None else pool_mask(p)
+    return cand, valid
+
+
+def scan_ivf_pools(C_dev, Q_sap: np.ndarray, pools, kp: int,
+                   pool_mask=None):
+    """Lay out the probe pools and run the jitted masked scan over
+    C_dev.  Returns (ids (nq, kp), valid (nq, kp))."""
+    nq = Q_sap.shape[0]
+    cand, valid = layout_pools(nq, pools, kp, pool_mask)
     ids, vout = _masked_pruned_scan(
         C_dev, jnp.asarray(np.asarray(Q_sap, np.float32)),
         jnp.asarray(cand), jnp.asarray(valid), kp)
@@ -323,9 +332,18 @@ class SecureSearchEngine:
             valid = np.pad(valid, pad)
 
         if refine == "tournament":
-            ids = np.asarray(refine_candidates(
-                self._C_dce_dev, jnp.asarray(cand), jnp.asarray(T_q),
-                jnp.asarray(valid), k, self.use_kernel), np.int64)
+            # a backend may supply its own batched refine (the sharded
+            # backend's tournament runs the candidate gather under the
+            # mesh, serving/sharded.py); semantics are identical
+            refine_fn = getattr(self.backend, "refine_batch", None)
+            if refine_fn is not None:
+                out = refine_fn(self._C_dce_dev, jnp.asarray(cand),
+                                jnp.asarray(T_q), jnp.asarray(valid), k)
+            else:
+                out = refine_candidates(
+                    self._C_dce_dev, jnp.asarray(cand), jnp.asarray(T_q),
+                    jnp.asarray(valid), k, self.use_kernel)
+            ids = np.asarray(out, np.int64)
             nv = valid.sum(axis=1)
             ncmp = int((nv * (nv - 1)).sum())
         elif refine == "none":          # filter-only baseline
@@ -340,7 +358,7 @@ class SecureSearchEngine:
             filter_dist_evals=int(dist_evals),
             refine_comparisons=ncmp,
             bytes_up=Q_sap.nbytes + T_q.nbytes + 4 * nq,
-            bytes_down=4 * ids.size,
+            bytes_down=ids.nbytes,          # int64 ids: 8 bytes per slot
             n_queries=nq,
             backend=self.backend.name,
         )
@@ -374,7 +392,7 @@ class SecureSearchEngine:
             filter_dist_evals=int(dist_evals),
             refine_comparisons=int(ncmp),
             bytes_up=np.asarray(C_sap_q).nbytes + np.asarray(T_q).nbytes + 4,
-            bytes_down=4 * len(ids),
+            bytes_down=np.asarray(ids, np.int64).nbytes,
             n_queries=1,
             backend=self.backend.name,
         )

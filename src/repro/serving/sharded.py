@@ -1,0 +1,341 @@
+"""Placement-aware sharded execution: the filter-and-refine pipeline
+row-sharded across a device mesh (DESIGN.md §10).
+
+`ShardedBackend` is a drop-in engine filter backend (the same
+`attach`/`candidates` protocol as `runtime.ingest.DeltaAwareBackend`,
+which it subclasses), so the micro-batcher, tenant routing, telemetry,
+live encrypted ingestion, and `save`/`load` snapshots of the serving
+runtime all work unchanged over a sharded collection.  What changes is
+*where* the scan and the refine gather run:
+
+  filter (flat):  the sentinel-padded ciphertext array is row-sharded
+                  (`NamedSharding(P(axis, None))`); under `shard_map`
+                  each shard scans its rows, takes a local top-k' with
+                  *global* ids (`local_idx + shard * rows_per_shard` —
+                  the stable-global-id offset), and an all-gather of
+                  only k' rows per shard feeds the cross-shard top-k'
+                  merge.
+  filter (ivf):   coarse probing stays host-side (identical pools to
+                  the single-device backend, so parity is exact); the
+                  pool scan runs sharded — each shard computes the
+                  distances for pool entries it owns, non-owned slots
+                  are +inf, and a `pmin` over the axis reassembles the
+                  full (nq, L) distance matrix bit-identically to the
+                  single-device `_masked_pruned_scan`.
+  refine:         the DCE refine array is row-sharded too; each shard
+                  extracts the candidate rows it owns (others zeroed)
+                  and one `psum` of (nq, k', 4, D) — k' rows per query,
+                  never the database — assembles the replicated
+                  candidate tensor for the batched tournament (einsum
+                  formulation: a Pallas call over mesh-sharded gathers
+                  would fight the partitioner, DESIGN.md §3).
+
+Row -> shard routing is the block partition of the padded capacity
+bucket: global row id r lives on shard `r // rows_per_shard`.  Ids are
+the stable store row ids, so live inserts append to the tail shard(s)
+and deletes tombstone in place; `shard_manifest()` reports the current
+partition for persistence (the per-shard manifest in a `.ppcol`
+snapshot).
+
+Every jitted entry point here is module-level and specialised only on
+bucketed shapes + (mesh, axis, k') statics, so a warmed-up collection
+serves steady-state traffic with zero recompiles
+(`runtime.telemetry.jit_cache_size` audits these functions too).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..kernels.common import next_bucket
+from ..kernels.dce_comp import ops as dce_ops
+from ..launch.mesh import make_mesh
+from .runtime.ingest import SENTINEL, DeltaAwareBackend
+from .search_engine import layout_pools
+
+__all__ = ["ShardedBackend", "sharded_mesh", "shard_bucket"]
+
+
+def sharded_mesh(n_shards: int, data_axis: str = "data"):
+    """A 1-D mesh over the first `n_shards` local devices."""
+    n_dev = len(jax.devices())
+    if n_shards > n_dev:
+        raise ValueError(f"placement wants {n_shards} shards but only "
+                         f"{n_dev} device(s) exist (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count=N to "
+                         f"simulate more on CPU)")
+    return make_mesh((n_shards,), (data_axis,))
+
+
+def shard_bucket(n: int, n_shards: int, minimum: int = 256) -> int:
+    """Padded row capacity: the store's power-of-two bucket, rounded up
+    to a multiple of n_shards so the block partition is even.  (For the
+    usual power-of-two shard counts the rounding is a no-op.)"""
+    b = next_bucket(max(n, 1), minimum=minimum)
+    return -(-b // n_shards) * n_shards
+
+
+# ---------------------------------------------------------------------------
+# Jitted sharded entry points.  Module-level, specialised on (mesh, axis,
+# k') statics + bucketed shapes only — the zero-recompile contract.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "kp"))
+def _sharded_flat_topk(C_sh, Q, *, mesh, axis, kp: int):
+    """Row-sharded exhaustive filter: per-shard distances + local top-k'
+    with global id offsets, then a cross-shard merge that all-gathers
+    only k' rows per shard (never the (nq, n) matrix)."""
+
+    def body(C_loc, Q_rep):
+        n_loc = C_loc.shape[0]
+        qn = (Q_rep * Q_rep).sum(-1, keepdims=True)
+        xn = (C_loc * C_loc).sum(-1)[None, :]
+        dist = qn - 2.0 * Q_rep @ C_loc.T + xn            # (nq, n_loc)
+        kp_loc = min(kp, n_loc)
+        neg, idx = jax.lax.top_k(-dist, kp_loc)           # local top-k'
+        gidx = idx + jax.lax.axis_index(axis) * n_loc     # global ids
+        vals = jax.lax.all_gather(-neg, axis, axis=1, tiled=True)
+        gids = jax.lax.all_gather(gidx, axis, axis=1, tiled=True)
+        neg2, pos = jax.lax.top_k(-vals, min(kp, vals.shape[1]))
+        return jnp.take_along_axis(gids, pos, axis=1)     # (nq, kp_out)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis, None), P(None, None)),
+                     out_specs=P(None, None),
+                     check_rep=False)(C_sh, Q)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "kp"))
+def _sharded_pool_scan(C_sh, Q, cand, valid, *, mesh, axis, kp: int):
+    """Row-sharded IVF pool scan.  Each shard computes the (nq, L)
+    distance entries whose candidate row it owns (+inf elsewhere); a
+    pmin over the axis reassembles the full matrix — element-for-element
+    the same float32 values as the single-device masked scan, so the
+    top-k' that follows is bit-identical."""
+
+    def body(C_loc, Q_rep, cand_rep, valid_rep):
+        n_loc = C_loc.shape[0]
+        base = jax.lax.axis_index(axis) * n_loc
+        loc = cand_rep - base
+        mine = (loc >= 0) & (loc < n_loc) & valid_rep
+        rows = jnp.take(C_loc, jnp.clip(loc, 0, n_loc - 1), axis=0)
+        qn = (Q_rep * Q_rep).sum(-1)[:, None]
+        xn = (rows * rows).sum(-1)
+        cross = jnp.einsum("qld,qd->ql", rows, Q_rep)
+        d = jnp.where(mine, qn - 2.0 * cross + xn, jnp.inf)
+        d = jax.lax.pmin(d, axis)                         # (nq, L) full
+        kp_out = min(kp, d.shape[1])
+        _, pos = jax.lax.top_k(-d, kp_out)
+        return (jnp.take_along_axis(cand_rep, pos, axis=1),
+                jnp.take_along_axis(valid_rep, pos, axis=1))
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis, None), P(None, None),
+                               P(None, None), P(None, None)),
+                     out_specs=(P(None, None), P(None, None)),
+                     check_rep=False)(C_sh, Q, cand, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "k"))
+def _sharded_refine(C_dce_sh, cand, T, valid, *, mesh, axis, k: int):
+    """Sharded batched DCE tournament: per-shard candidate-row extraction
+    + one psum of (nq, k', 4, D) assembles the replicated candidate
+    tensor; the tournament itself (einsum Z-matrices, win-count ranking)
+    runs replicated.  Same -1 semantics as `search_engine
+    .refine_candidates` with a validity mask."""
+
+    def gather(C_loc, cand_rep):
+        n_loc = C_loc.shape[0]
+        base = jax.lax.axis_index(axis) * n_loc
+        loc = cand_rep - base
+        mine = (loc >= 0) & (loc < n_loc)
+        rows = jnp.take(C_loc, jnp.clip(loc, 0, n_loc - 1), axis=0)
+        rows = jnp.where(mine[..., None, None], rows, 0.0)
+        return jax.lax.psum(rows, axis)                   # (nq, kp, 4, D)
+
+    Cc = shard_map(gather, mesh=mesh,
+                   in_specs=(P(axis, None, None), P(None, None)),
+                   out_specs=P(None, None, None, None),
+                   check_rep=False)(C_dce_sh, cand)
+    local = dce_ops.batched_top_k_by_wins(Cc, T, k, valid=valid,
+                                          use_kernel=False)
+    local = local.astype(cand.dtype)
+    ids = jnp.take_along_axis(cand, local, axis=1)
+    vsel = jnp.take_along_axis(valid, local, axis=1)
+    return jnp.where(vsel, ids, -1)
+
+
+def cache_size() -> int:
+    """Compiled-executable count of the sharded entry points (summed
+    into `runtime.telemetry.jit_cache_size` for the recompile audit)."""
+    return sum(f._cache_size() for f in
+               (_sharded_flat_topk, _sharded_pool_scan, _sharded_refine))
+
+
+# ---------------------------------------------------------------------------
+# The backend.
+# ---------------------------------------------------------------------------
+
+class ShardedBackend(DeltaAwareBackend):
+    """Row-sharded flat / IVF filter + sharded refine over a mutable
+    encrypted store.
+
+    Reuses the delta-aware host-side machinery wholesale — mutation
+    hooks, tombstone masking (`_mask_alive`), the IVF centroid build and
+    incremental delta assignment — and replaces only the device layout
+    (NamedSharding row partition) and the scan/refine executables
+    (shard_map).  Engine parity therefore reduces to the collective
+    formulation, which is tested id-exact against the single-device
+    path (tests/test_placement.py).
+    """
+
+    def __init__(self, store, kind: str = "flat", *, n_shards: int,
+                 data_axis: str = "data", **kw):
+        if kind not in ("flat", "ivf"):
+            raise ValueError(
+                f"sharded placement supports flat|ivf filter backends, "
+                f"not {kind!r} (graph traversal does not shard, "
+                f"DESIGN.md §3)")
+        super().__init__(store, kind, **kw)
+        self.n_shards = int(n_shards)
+        self.axis = data_axis
+        self.mesh = sharded_mesh(self.n_shards, data_axis)
+        self.name = f"sharded-{kind}"
+        self.use_kernel = False       # einsum refine under the mesh
+        self._sh_sap = NamedSharding(self.mesh, P(data_axis, None))
+        self._sh_dce = NamedSharding(self.mesh, P(data_axis, None, None))
+
+    # ------------------------------------------------------------ layout
+
+    def _row_bucket(self, n: int) -> int:
+        return shard_bucket(n, self.n_shards)
+
+    @property
+    def padded_rows(self) -> int:
+        return self._row_bucket(self.store.n_total)
+
+    def shard_manifest(self) -> list[dict]:
+        """The current row -> shard block partition (persisted as the
+        per-shard manifest of a sharded collection snapshot)."""
+        st = self.store
+        per = self.padded_rows // self.n_shards
+        out = []
+        for s in range(self.n_shards):
+            start = min(s * per, st.n_total)
+            stop = min((s + 1) * per, st.n_total)
+            out.append({"shard": s, "row_start": int(start),
+                        "row_stop": int(stop),
+                        "n_alive": int(st.alive_view[start:stop].sum())})
+        return out
+
+    # ------------------------------------------------------------ attach
+
+    def on_delete(self, row: int):
+        super().on_delete(row)
+        if self.kind == "flat":
+            # force a re-upload so the deleted row is sentinelled on
+            # device too — keeps the sharded candidate sets identical to
+            # the single-device backend's (which re-sentinels its main
+            # array); ivf needs nothing: the row left its probe list
+            self._scan_snapshot = (-1, -1)
+
+    def _refresh_scan_array(self, C_sap: np.ndarray):
+        """Sharded replacement for the parent's scan-array refresh: one
+        sentinel-padded, row-sharded device array serving both the flat
+        exhaustive scan and the ivf pool scan.  Same caching rule as the
+        parent: insert bursts inside an unchanged bucket ship only the
+        new rows (scatter preserves the NamedSharding), not the whole
+        database; bucket growth, compaction, or a flat delete (which
+        invalidates the snapshot) pay one full sharded re-upload."""
+        st = self.store
+        bucket = self._row_bucket(st.n_total)
+        snapshot = (st.main_gen, st.n_total)
+        if self._C_all is not None and self._scan_snapshot == snapshot:
+            return
+        old_gen, old_n = self._scan_snapshot
+        if (self._C_all is not None and old_gen == st.main_gen
+                and 0 <= old_n <= st.n_total
+                and self._C_all.shape[0] == bucket):
+            self._C_all = self._C_all.at[old_n: st.n_total].set(
+                jnp.asarray(C_sap[old_n: st.n_total]))
+        else:
+            buf = np.full((bucket, st.d), SENTINEL, np.float32)
+            buf[: st.n_total] = C_sap
+            self._C_all = jax.device_put(buf, self._sh_sap)
+        self._scan_snapshot = snapshot
+
+    def attach(self, C_sap: np.ndarray, engine):
+        if self.kind == "ivf":
+            self._attach_ivf(C_sap)       # parent logic; calls our
+        else:                             # _refresh_scan_array override
+            self._refresh_scan_array(C_sap)
+
+    def dce_device(self, C_dce_padded: np.ndarray):
+        """Row-sharded residency for the refine array, padded to the
+        same bucket as the scan array so both partition identically.
+        Same incremental rule as the parent: inside an unchanged bucket,
+        ship only the rows appended since the last refresh (the scatter
+        preserves the NamedSharding).  Tombstoned rows keep a stale
+        device copy, exactly like the single-device backend — they are
+        never valid candidates."""
+        st = self.store
+        bucket = self._row_bucket(st.n_total)
+        old_bucket, old_n = self._dce_snapshot
+        if self._C_dce_dev is not None and bucket == old_bucket:
+            if st.n_total > old_n:
+                self._C_dce_dev = self._C_dce_dev.at[old_n: st.n_total].set(
+                    jnp.asarray(C_dce_padded[old_n: st.n_total]))
+        else:
+            buf = np.zeros((bucket,) + C_dce_padded.shape[1:], np.float32)
+            buf[: st.n_total] = C_dce_padded[: st.n_total]
+            self._C_dce_dev = jax.device_put(buf, self._sh_dce)
+        self._dce_snapshot = (bucket, st.n_total)
+        return self._C_dce_dev
+
+    # ------------------------------------------------------- candidates
+
+    def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
+        if self.kind == "flat":
+            return self._candidates_flat(Q_sap, kp)
+        return self._candidates_ivf(Q_sap, kp)
+
+    def _candidates_flat(self, Q_sap: np.ndarray, kp: int):
+        st = self.store
+        nq = Q_sap.shape[0]
+        kp_eff = min(kp, int(self._C_all.shape[0]))
+        cand = np.asarray(_sharded_flat_topk(
+            self._C_all, jnp.asarray(np.asarray(Q_sap, np.float32)),
+            mesh=self.mesh, axis=self.axis, kp=kp_eff), np.int32)
+        safe, valid = self._mask_alive(cand, np.ones(cand.shape, bool))
+        return safe, valid, nq * st.n_total
+
+    def _candidates_ivf(self, Q_sap: np.ndarray, kp: int):
+        st = self.store
+        nq = Q_sap.shape[0]
+        if self.ivf is None:                  # nothing alive to probe
+            return (np.zeros((nq, kp), np.int32),
+                    np.zeros((nq, kp), bool), 0)
+        Q = np.asarray(Q_sap, np.float32)
+        pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        cand, valid = layout_pools(nq, pools, kp,
+                                   pool_mask=lambda p: st.alive_view[p])
+        ids, vout = _sharded_pool_scan(
+            self._C_all, jnp.asarray(Q), jnp.asarray(cand),
+            jnp.asarray(valid), mesh=self.mesh, axis=self.axis, kp=kp)
+        evals = sum(p.size for p in pools) \
+            + nq * self.ivf.centroids.shape[0]
+        return np.asarray(ids), np.asarray(vout), evals
+
+    # ----------------------------------------------------------- refine
+
+    def refine_batch(self, C_dce_dev, cand, T, valid, k: int):
+        """Engine hook: the sharded tournament replaces the single-device
+        `refine_candidates` call (same semantics, same -1 fill)."""
+        return _sharded_refine(C_dce_dev, cand, T, valid,
+                               mesh=self.mesh, axis=self.axis, k=k)

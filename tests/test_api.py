@@ -13,17 +13,14 @@ Covers the protocol acceptance bar:
     stay id-identical to the typed path.
 """
 
-import dataclasses
-import warnings
-
 import numpy as np
 import pytest
 
 from repro.api import (DataOwnerClient, DistributedSecureAnnService,
                        EncryptedCorpus, EncryptedQuery, IndexSpec, Keys,
-                       Keystore, QueryClient, SearchParams, SearchRequest,
-                       SearchResult, SecureAnnService, WireFormatError,
-                       suggest_beta)
+                       Keystore, PlacementSpec, QueryClient, SearchParams,
+                       SearchRequest, SearchResult, SecureAnnService,
+                       WireFormatError, suggest_beta)
 from repro.core import ppanns
 from repro.core.wireformat import pack
 from repro.data import synth
@@ -273,27 +270,38 @@ def test_shims_warn_and_match_new_path(ds):
 
 
 # ---------------------------------------------------------------------------
-# Mesh deployment wrapper.
+# Mesh deployment wrapper — now a deprecation shim over placement=sharded.
 # ---------------------------------------------------------------------------
 
-def test_distributed_service_typed_surface(ds):
+def test_distributed_service_is_deprecated_shim_with_id_parity(ds):
     spec = _spec(ds)
     owner = DataOwnerClient(spec)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        corpus = owner.encrypt_corpus(ds.base)
+    corpus = owner.encrypt_corpus(ds.base)
     user = owner.query_client()
     query = user.encrypt_queries(ds.queries)
-    eng = DistributedSecureAnnService(corpus)
-    res = eng.search(query, SearchParams(k=10))
+    with pytest.warns(DeprecationWarning, match="placement"):
+        eng = DistributedSecureAnnService(corpus)
+    with eng:
+        res = eng.search(query, SearchParams(k=10))
     assert res.ids.shape == (len(ds.queries), 10)
-    assert res.stats.backend == "mesh-flat"
+    assert res.stats.backend == "sharded-flat"
     assert res.stats.n_queries == len(ds.queries)
+    assert res.stats.bytes_down == res.ids.nbytes        # true int64 size
     assert synth.recall_at_k(res.ids, ds.gt, 10) > 0.8
-    # parity against the engine's exhaustive path on the same arrays
+    # id parity against the unified engine's exhaustive path AND against
+    # a placement=sharded collection on the one service surface
     engine = SecureSearchEngine(corpus.C_sap, corpus.C_dce, backend="flat")
     ids_ref, _ = engine.search_batch(query.C_sap, query.T, 10)
     assert np.array_equal(res.ids, ids_ref)
+    with SecureAnnService() as svc:
+        svc.create_collection(spec, corpus=corpus,
+                              placement=PlacementSpec(kind="sharded",
+                                                      n_shards=1))
+        res2 = svc.submit(SearchRequest(tenant="t", collection=spec.name,
+                                        query=query,
+                                        params=SearchParams(k=10),
+                                        coalesce=False))
+    assert np.array_equal(res2.ids, ids_ref)
 
 
 # ---------------------------------------------------------------------------

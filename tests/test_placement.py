@@ -1,0 +1,249 @@
+"""Placement-aware deployment (DESIGN.md §10): PlacementSpec wire
+round-trips, sharded-vs-single exact-id parity across backends and shard
+counts, sharded persistence + live ingestion, and the zero-recompile
+contract.
+
+Shard counts above the local device count skip; CI runs this file under
+`XLA_FLAGS=--xla_force_host_platform_device_count=8` (the sharded-smoke
+job) so the 2- and 8-shard cells execute there.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (DataOwnerClient, IndexSpec, PlacementSpec,
+                       QueryClient, SearchParams, SearchRequest,
+                       SecureAnnService, WireFormatError, suggest_beta)
+from repro.core.wireformat import pack
+from repro.data import synth
+
+D = 16
+N = 600
+SHARD_COUNTS = (1, 2, 8)
+
+
+def _need_devices(n_shards: int):
+    if n_shards > jax.device_count():
+        pytest.skip(f"needs {n_shards} devices, have {jax.device_count()} "
+                    f"(run under XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=8)")
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return synth.make_dataset("sift1m", n=N, n_queries=6, d=D, k_gt=10,
+                              seed=0)
+
+
+@pytest.fixture(scope="module")
+def owner_and_query(ds):
+    spec = IndexSpec(tenant="t", name="base", d=D,
+                     sap_beta=suggest_beta(ds.base, fraction=0.05), seed=5)
+    owner = DataOwnerClient(spec)
+    C_sap, C_dce = owner.encrypt_vectors(ds.base, seed=11)
+    user = owner.query_client()
+    return spec, owner, C_sap, C_dce, user.encrypt_queries(ds.queries)
+
+
+def _spec(base: IndexSpec, backend: str, name: str) -> IndexSpec:
+    extra = dict(n_partitions=8, nprobe=3) if backend == "ivf" else {}
+    return dataclasses.replace(base, name=name, backend=backend, **extra)
+
+
+# ---------------------------------------------------------------------------
+# Wire round-trips + validation.
+# ---------------------------------------------------------------------------
+
+def test_placement_wire_roundtrip():
+    for pl in (PlacementSpec(),
+               PlacementSpec(kind="sharded"),
+               PlacementSpec(kind="sharded", data_axis="x", n_shards=4)):
+        assert PlacementSpec.from_bytes(pl.to_bytes()) == pl
+    assert PlacementSpec().kind == "single"
+    assert PlacementSpec(kind="sharded", n_shards=4).is_sharded
+
+
+def test_placement_rejects_unknown_kind_and_fields():
+    with pytest.raises(ValueError, match="unknown placement kind"):
+        PlacementSpec(kind="ring")
+    # an unknown kind arriving over the wire is a WireFormatError, not a
+    # misparse — same contract as every other protocol type
+    payload = pack("placement-spec", 1, arrays={},
+                   meta={"kind": "ring", "data_axis": "data",
+                         "n_shards": 2})
+    with pytest.raises(WireFormatError, match="unknown placement kind"):
+        PlacementSpec.from_bytes(payload)
+    with pytest.raises(WireFormatError, match="unknown fields"):
+        PlacementSpec.from_dict({"kind": "single", "data_axis": "data",
+                                 "n_shards": None, "rack": 3})
+    with pytest.raises(WireFormatError, match="kind"):
+        PlacementSpec.from_bytes(pack("index-spec", 1, {}, {}))
+    with pytest.raises(ValueError, match="n_shards"):
+        PlacementSpec(kind="single", n_shards=4)
+    with pytest.raises(ValueError, match="n_shards must be"):
+        PlacementSpec(kind="sharded", n_shards=0)
+
+
+def test_placement_resolve_pins_device_count():
+    pl = PlacementSpec(kind="sharded")
+    assert pl.n_shards is None
+    resolved = pl.resolve(4)
+    assert resolved.n_shards == 4
+    assert resolved.resolve(4) == resolved          # idempotent
+    with pytest.raises(ValueError, match="device"):
+        PlacementSpec(kind="sharded", n_shards=9).resolve(8)
+    assert PlacementSpec().resolve(8) == PlacementSpec()
+
+
+def test_sharded_rejects_hnsw_and_too_many_shards(ds, owner_and_query):
+    spec, owner, *_ = owner_and_query
+    hspec = dataclasses.replace(spec, name="h", backend="hnsw")
+    with SecureAnnService() as svc:
+        with pytest.raises(ValueError, match="does not shard"):
+            svc.create_collection(hspec,
+                                  placement=PlacementSpec(kind="sharded"))
+        with pytest.raises(ValueError, match="device"):
+            svc.create_collection(
+                dataclasses.replace(spec, name="wide"),
+                placement=PlacementSpec(kind="sharded",
+                                        n_shards=jax.device_count() + 1))
+
+
+# ---------------------------------------------------------------------------
+# Sharded vs single-host exact-id parity.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("backend", ["flat", "ivf"])
+def test_sharded_matches_single_host_exactly(ds, owner_and_query, backend,
+                                             n_shards):
+    """The acceptance bar: a placement=sharded collection answers
+    submit() with bit-identical ids to the single-device collection —
+    batch path and coalesced single-query path both."""
+    _need_devices(n_shards)
+    spec0, owner, C_sap, C_dce, query = owner_and_query
+    spec = _spec(spec0, backend, f"par-{backend}-{n_shards}")
+    params = SearchParams(k=8, ratio_k=6.0)
+    req = SearchRequest(tenant="t", collection=spec.name, query=query,
+                        params=params, coalesce=False)
+
+    def build(svc, placement):
+        svc.create_collection(spec, placement=placement)
+        svc.insert("t", spec.name, C_sap, C_dce)
+
+    with SecureAnnService() as single:
+        build(single, None)
+        ids_single = single.submit(req).ids
+        one_single = single.submit(SearchRequest(
+            tenant="t", collection=spec.name,
+            query=dataclasses.replace(query), params=params)).ids
+    with SecureAnnService() as sharded:
+        build(sharded, PlacementSpec(kind="sharded", n_shards=n_shards))
+        res = sharded.submit(req)
+        assert res.stats.backend == f"sharded-{backend}"
+        np.testing.assert_array_equal(res.ids, ids_single)
+        # the coalesced micro-batcher path over the sharded engine
+        one = sharded.submit(SearchRequest(
+            tenant="t", collection=spec.name,
+            query=dataclasses.replace(query), params=params)).ids
+        np.testing.assert_array_equal(one, one_single)
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_sharded_live_ingestion_and_deletes(ds, owner_and_query, n_shards):
+    """Inserts route to a shard with stable global ids and are visible
+    to the next search; deleted ids never come back — identical
+    semantics (and ids) to the single-device runtime."""
+    _need_devices(n_shards)
+    spec0, owner, C_sap, C_dce, query = owner_and_query
+    spec = _spec(spec0, "flat", f"mut-{n_shards}")
+    params = SearchParams(k=8)
+    with SecureAnnService() as svc:
+        svc.create_collection(spec, placement=PlacementSpec(
+            kind="sharded", n_shards=n_shards))
+        rows = svc.insert("t", spec.name, C_sap, C_dce)
+        assert np.array_equal(rows, np.arange(N))      # stable global ids
+        planted = svc.insert("t", spec.name,
+                             *owner.encrypt_vectors(ds.queries[0][None],
+                                                    seed=99))
+        assert planted[0] == N                         # appended, stable
+        req = SearchRequest(tenant="t", collection=spec.name,
+                            query=dataclasses.replace(query),
+                            params=params, coalesce=False)
+        ids1 = svc.submit(req).ids
+        assert int(planted[0]) in ids1[0]
+        svc.delete("t", spec.name, planted)
+        ids2 = svc.submit(req).ids
+        assert int(planted[0]) not in ids2
+        manifest = svc.collection("t", spec.name).shard_manifest()
+        assert len(manifest) == n_shards
+        assert manifest[-1]["row_stop"] == N + 1
+        assert sum(m["row_stop"] - m["row_start"] for m in manifest) \
+            == N + 1
+
+
+@pytest.mark.parametrize("backend", ["flat", "ivf"])
+def test_sharded_save_load_bit_identical(ds, owner_and_query, tmp_path,
+                                         backend):
+    """A sharded collection survives save/load: placement + per-shard
+    manifest persist, and a reloaded service answers bit-identically
+    (including post-build mutations, same bar as the single-host test)."""
+    n_shards = min(2, jax.device_count())
+    spec0, owner, C_sap, C_dce, query = owner_and_query
+    spec = _spec(spec0, backend, f"snap-{backend}")
+    req = SearchRequest(tenant="t", collection=spec.name, query=query,
+                        params=SearchParams(k=8), coalesce=False)
+    with SecureAnnService() as svc:
+        svc.create_collection(spec, placement=PlacementSpec(
+            kind="sharded", n_shards=n_shards))
+        svc.insert("t", spec.name, C_sap, C_dce)
+        svc.submit(req)              # force the lazy filter build NOW
+        extra = svc.insert("t", spec.name,
+                           *owner.encrypt_vectors(ds.base[:5], seed=77))
+        svc.delete("t", spec.name, [int(extra[0]), 3])
+        ids_before = svc.submit(req).ids
+        svc.save(tmp_path / "snap")
+
+    from repro.core.wireformat import unpack
+    files = sorted((tmp_path / "snap").glob("*.ppcol"))
+    assert len(files) == 1
+    _, meta = unpack(files[0].read_bytes(), "encrypted-collection", 1)
+    assert meta["placement"]["kind"] == "sharded"
+    assert meta["placement"]["n_shards"] == n_shards
+    assert len(meta["shard_manifest"]) == n_shards
+
+    with SecureAnnService.load(tmp_path / "snap") as svc2:
+        assert svc2.placement("t", spec.name).n_shards == n_shards
+        ids_after = svc2.submit(req).ids
+        np.testing.assert_array_equal(ids_before, ids_after)
+        assert 3 not in ids_after and int(extra[0]) not in ids_after
+        more = svc2.insert("t", spec.name,
+                           *owner.encrypt_vectors(ds.queries[0][None],
+                                                  seed=99))
+        assert int(more[0]) in svc2.submit(req).ids[0]
+
+
+# ---------------------------------------------------------------------------
+# Zero recompiles after warmup.
+# ---------------------------------------------------------------------------
+
+def test_sharded_zero_recompiles_after_warmup(ds, owner_and_query):
+    from repro.serving.runtime.telemetry import jit_cache_size
+    n_shards = min(2, jax.device_count())
+    spec0, owner, C_sap, C_dce, query = owner_and_query
+    spec = _spec(spec0, "flat", "warm")
+    with SecureAnnService() as svc:
+        svc.create_collection(spec, placement=PlacementSpec(
+            kind="sharded", n_shards=n_shards))
+        svc.insert("t", spec.name, C_sap, C_dce)
+        svc.warmup("t", spec.name, k=8)
+        before = jit_cache_size()
+        user = QueryClient(owner.keys, seed=7)
+        for q in ds.queries:
+            svc.submit(SearchRequest(tenant="t", collection=spec.name,
+                                     query=user.encrypt_query(q),
+                                     params=SearchParams(k=8)))
+        assert jit_cache_size() == before, "steady-state traffic recompiled"

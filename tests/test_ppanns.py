@@ -109,9 +109,10 @@ def test_insert_and_delete_maintenance(system):
 def test_communication_cost_matches_paper(system):
     """§V-C: up = 36d + O(1) bytes (4d DCPE f32 + 4(2d+16) trapdoor f32 ...
     our f32 layout gives 4d + 4(2d+16) + 4 = 12d + 68 bytes; the paper's 36d
-    assumes f64 + padding — we assert the O(d) shape and the 4k download)."""
+    assumes f64 + padding — we assert the O(d) shape and the download as
+    the true serialized id size: int64 ids, 8 bytes each)."""
     ds, owner, user, server = system
     c_sap, t_q = user.encrypt_query(ds.queries[0])
     ids, stats = server.search(c_sap, t_q, 10)
     assert stats.bytes_up == 4 * ds.d + 4 * (2 * ds.d + 16) + 4
-    assert stats.bytes_down == 4 * 10
+    assert stats.bytes_down == 8 * 10

@@ -94,11 +94,11 @@ def test_stats_populated_and_consistent(setup, backend):
     assert stats.filter_dist_evals > 0
     assert stats.refine_comparisons > 0
     assert stats.bytes_up == Q.nbytes + T.nbytes + 4 * nq
-    assert stats.bytes_down == 4 * ids.size
+    assert stats.bytes_down == ids.nbytes == 8 * ids.size   # int64 ids
     # single-query stats carry the paper's §V-C communication shape
     _, s1 = eng.search(Q[0], T[0], K, ratio_k=6)
     assert s1.bytes_up == 4 * ds.d + 4 * (2 * ds.d + 16) + 4
-    assert s1.bytes_down == 4 * K
+    assert s1.bytes_down == 8 * K
 
 
 def test_heap_refine_selects_same_set(setup):

@@ -92,9 +92,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_attacks, bench_baselines, bench_batched,
-                   bench_beta, bench_encrypt, bench_kernels, bench_ratio_k,
-                   bench_refine, bench_roofline, bench_runtime,
-                   bench_scalability)
+                   bench_beta, bench_encrypt, bench_filter, bench_kernels,
+                   bench_ratio_k, bench_refine, bench_roofline,
+                   bench_runtime, bench_scalability)
 
     suites = {
         "fig4_beta": lambda: bench_beta.run(
@@ -114,6 +114,11 @@ def main() -> None:
         # other suites' jax state) — DESIGN.md §10
         "sharded": lambda: bench_scalability.run_sharded(
             n=16000 if args.full else 6000),
+        # quantized ADC filter path: f32 vs int8 vs pq8 (DESIGN.md §11);
+        # also writes the repo-root BENCH_filter.json trajectory record
+        "filter": lambda: bench_filter.run(
+            sizes=(10_000, 100_000, 200_000) if args.full
+            else (10_000, 100_000)),
         "batched_engine": lambda: bench_batched.run(
             n=20000 if args.full else 6000),
         # measurement only — the hard smoke gate (occupancy/recompiles)

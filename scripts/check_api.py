@@ -111,6 +111,40 @@ def check_api_exports() -> list[str]:
     for name in sorted(REQUIRED_EXPORTS - set(api.__all__)):
         errors.append(f"repro.api must export {name} (placement-aware "
                       f"surface contract, DESIGN.md §10)")
+    errors.extend(check_quantization_surface(api))
+    return errors
+
+
+def check_quantization_surface(api) -> list[str]:
+    """The quantized-ADC surface contract (DESIGN.md §11): IndexSpec
+    carries the quantization knobs, rejects bad values, and round-trips
+    them over the wire."""
+    import dataclasses
+    errors = []
+    fields = {f.name for f in dataclasses.fields(api.IndexSpec)}
+    for name in ("quantization", "refine_ratio", "pq_m"):
+        if name not in fields:
+            errors.append(f"IndexSpec must carry {name} (quantized ADC "
+                          f"surface, DESIGN.md §11)")
+    if errors:
+        return errors
+    try:
+        spec = api.IndexSpec(tenant="_gate", name="_gate", d=8,
+                             quantization="int8")
+        spec2 = api.IndexSpec.from_bytes(spec.to_bytes())
+        if spec2.quantization != "int8":
+            errors.append("IndexSpec.quantization does not survive a "
+                          "wire round-trip")
+    except Exception as e:                          # noqa: BLE001
+        errors.append(f"IndexSpec(quantization='int8') must construct "
+                      f"and round-trip: {type(e).__name__}: {e}")
+    for bad in ({"quantization": "int4"},
+                {"quantization": "int8", "backend": "hnsw"}):
+        try:
+            api.IndexSpec(tenant="_gate", name="_gate", d=8, **bad)
+            errors.append(f"IndexSpec must reject {bad}")
+        except ValueError:
+            pass
     return errors
 
 

@@ -43,6 +43,7 @@ PROTOCOL_VERSION = 1
 
 _BACKENDS = ("flat", "ivf", "hnsw")
 _PLACEMENT_KINDS = ("single", "sharded")
+_QUANTIZATIONS = (None, "int8", "pq8")
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +142,13 @@ class IndexSpec:
     the owner's keygen and the service's deterministic index state —
     `None` means fresh entropy (the service records the effective seed
     when persisting, so a reloaded collection rebuilds identically).
+
+    `quantization` compresses the *filter* ciphertexts server-side
+    (DESIGN.md §11): None scans f32 DCPE ciphertexts; "int8"/"pq8"
+    scan 1-byte/dim scalar-quantized or m-byte/vector product-
+    quantized codes through the fused adc_topk path, oversampling
+    k' by `refine_ratio` (None = the per-kind default, core.adc)
+    into the unchanged exact DCE refine.  flat/ivf backends only.
     """
     tenant: str
     name: str
@@ -156,6 +164,10 @@ class IndexSpec:
     hnsw_M: int = 16
     hnsw_ef_construction: int = 200
     use_kernel: bool = True
+    # quantized ADC filter (service-side, keyless — DESIGN.md §11)
+    quantization: str | None = None
+    refine_ratio: float | None = None
+    pq_m: int = 16
     # micro-batcher / runtime
     max_batch: int = 32
     max_wait_ms: float = 2.0
@@ -173,6 +185,21 @@ class IndexSpec:
                              f"(have {_BACKENDS})")
         if self.d < 2:
             raise ValueError("PP-ANNS requires d >= 2")
+        if self.quantization not in _QUANTIZATIONS:
+            raise ValueError(f"unknown quantization {self.quantization!r} "
+                             f"(have {_QUANTIZATIONS})")
+        if self.quantization is not None and self.backend == "hnsw":
+            raise ValueError("quantization applies to flat|ivf backends "
+                             "(the graph walk reads full-precision rows)")
+        if self.refine_ratio is not None:
+            if self.quantization is None:
+                raise ValueError("refine_ratio is the ADC oversampling "
+                                 "factor — it needs quantization set")
+            if self.refine_ratio < 1.0:
+                raise ValueError(f"refine_ratio must be >= 1, got "
+                                 f"{self.refine_ratio}")
+        if self.pq_m < 1:
+            raise ValueError(f"pq_m must be >= 1, got {self.pq_m}")
 
     @property
     def cdim(self) -> int:
@@ -188,7 +215,9 @@ class IndexSpec:
             max_queue=self.max_queue, compact_every=self.compact_every,
             n_partitions=self.n_partitions, nprobe=self.nprobe,
             hnsw_M=self.hnsw_M,
-            hnsw_ef_construction=self.hnsw_ef_construction)
+            hnsw_ef_construction=self.hnsw_ef_construction,
+            quantization=self.quantization,
+            refine_ratio=self.refine_ratio, pq_m=self.pq_m)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -391,10 +391,16 @@ class SecureAnnService:
                     "built_upto": meta["ivf_built_upto"],
                     "attached_gen": meta["ivf_attached_gen"],
                 }
+            adc_arrays = {k[len("adc__"):]: v for k, v in arrays.items()
+                          if k.startswith("adc__")}
+            adc_state = ({"arrays": adc_arrays,
+                          "trained_gen": meta["adc_trained_gen"]}
+                         if adc_arrays else None)
             svc._mgr.collection(spec.tenant, spec.name).load_snapshot(
                 arrays["C_sap"], arrays["C_dce"], alive=arrays["alive"],
                 n_main=int(meta["n_main"]), main_gen=int(meta["main_gen"]),
-                graph_arrays=graph_arrays, ivf_state=ivf_state)
+                graph_arrays=graph_arrays, ivf_state=ivf_state,
+                adc_state=adc_state)
         return svc
 
     # ------------------------------------------------------------- misc

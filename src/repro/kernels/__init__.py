@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 l2_topk  — filter-phase batched squared-L2 distance tiles + streaming k-NN
+adc_topk — quantized-ADC filter scan (int8 / PQ codes) + fused running top-k
 dce_comp — refine-phase batched DCE DistanceComp (pairwise Z) tiles
 
 Each kernel directory carries ops.py (jit wrapper) and ref.py (pure-jnp

@@ -1,0 +1,3 @@
+"""adc_topk — fused quantized-ADC filter scan + running top-k
+(DESIGN.md §11).  ops.py holds the jitted wrappers, ref.py the
+numpy/jnp oracle; parity is tested in interpret mode."""

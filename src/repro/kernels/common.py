@@ -39,6 +39,38 @@ def next_bucket(n: int, minimum: int = 1, maximum: int | None = None) -> int:
     return b
 
 
+def running_topk_scan(dist_fn, n: int, nq: int, k: int, chunk: int):
+    """Streaming top-k merge shared by `l2_topk.ops.knn` and the
+    adc_topk XLA fallbacks: fold `chunk`-row distance blocks into a
+    running (nq, k) ascending state.
+
+    `dist_fn(start)` returns the (nq, chunk) distance block for rows
+    [start, start+chunk) of the (padded) database, with invalid rows
+    already pushed to +inf/sentinel.  The id mapping avoids ever
+    materializing an (nq, chunk) id block: merge positions < k select
+    from the running ids, the rest are `start + (pos - k)`.  Returns
+    (dists (nq, k) ascending, ids (nq, k) int32; unfilled slots -1).
+    """
+    n_chunks = -(-n // chunk)
+
+    def body(carry, ci):
+        best_d, best_i = carry
+        start = ci * chunk
+        d_blk = dist_fn(start)
+        cat_d = jnp.concatenate([best_d, d_blk], axis=1)
+        neg, pos = jax.lax.top_k(-cat_d, k)
+        from_best = jnp.take_along_axis(best_i, jnp.minimum(pos, k - 1),
+                                        axis=1)
+        best_i = jnp.where(pos < k, from_best,
+                           start + (pos - k).astype(jnp.int32))
+        return (-neg, best_i), None
+
+    init = (jnp.full((nq, k), jnp.inf, jnp.float32),
+            jnp.full((nq, k), -1, jnp.int32))
+    (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return best_d, best_i
+
+
 def pad_to(x: jnp.ndarray, axis: int, multiple: int,
            value: float = 0.0) -> jnp.ndarray:
     """Right-pad `axis` of x up to a multiple (hardware-aligned shapes)."""

@@ -14,6 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..common import running_topk_scan
 from . import l2_topk as _kernel
 from . import ref as _ref
 
@@ -45,27 +46,23 @@ def knn(
     n_pad = n_chunks * chunk
     Xp = jnp.pad(X, ((0, n_pad - n), (0, 0)))
 
-    dist_fn = pairwise_sq_dists if use_kernel else _ref.pairwise_sq_dists
+    kernel_fn = pairwise_sq_dists if use_kernel else _ref.pairwise_sq_dists
 
-    def body(carry, ci):
-        best_d, best_i = carry
-        start = ci * chunk
+    # Hoisted loop invariants: the in-chunk column offsets (the mask is
+    # one add+compare against them per step, never a fresh arange).
+    # The running-top-k merge itself — including the pos<k id mapping
+    # that avoids materializing an (nq, chunk) id block — is the shared
+    # `running_topk_scan` (kernels/common.py), one copy for this scan
+    # and the adc_topk fallbacks.
+    col = jnp.arange(chunk, dtype=jnp.int32)[None, :]
+
+    def dist_fn(start):
         xs = jax.lax.dynamic_slice_in_dim(Xp, start, chunk, axis=0)
         if use_kernel:
-            d_blk = dist_fn(Q, xs, interpret=interpret)
+            d_blk = kernel_fn(Q, xs, interpret=interpret)
         else:
-            d_blk = dist_fn(Q, xs)
-        idx_blk = start + jnp.arange(chunk)[None, :]
-        # mask padded rows
-        valid = (idx_blk < n)
-        d_blk = jnp.where(valid, d_blk, jnp.inf)
-        cat_d = jnp.concatenate([best_d, d_blk], axis=1)
-        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(idx_blk, (nq, chunk))],
-                                axis=1)
-        neg, pos = jax.lax.top_k(-cat_d, k)
-        return (-neg, jnp.take_along_axis(cat_i, pos, axis=1)), None
+            d_blk = kernel_fn(Q, xs)
+        return jnp.where(start + col < n, d_blk, jnp.inf)
 
-    init = (jnp.full((nq, k), jnp.inf, jnp.float32),
-            jnp.full((nq, k), -1, jnp.int32))
-    (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    best_d, best_i = running_topk_scan(dist_fn, n_pad, nq, k, chunk)
     return best_d, best_i.astype(jnp.int32)

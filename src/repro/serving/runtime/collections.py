@@ -164,7 +164,8 @@ class Collection:
     def load_snapshot(self, C_sap: np.ndarray, C_dce: np.ndarray, *,
                       alive: np.ndarray | None = None, n_main: int = -1,
                       main_gen: int = 1, graph_arrays: dict | None = None,
-                      ivf_state: dict | None = None):
+                      ivf_state: dict | None = None,
+                      adc_state: dict | None = None):
         """Load pre-encrypted rows — an owner-uploaded corpus or a
         persisted collection snapshot — into this (empty) collection
         without re-running per-row ingestion (DESIGN.md §9).
@@ -213,6 +214,16 @@ class Collection:
                              for c, l in enumerate(ivf.lists) for r in l}
                 b._ivf_built_upto = int(ivf_state["built_upto"])
                 b._attached_gen = int(ivf_state["attached_gen"])
+            if adc_state is not None:
+                # restore the exact codebook the snapshot was trained
+                # with (its grid/centroids depend on the rows alive at
+                # training time); the codes re-encode bit-identically
+                # from the restored ciphertexts (DESIGN.md §11)
+                from ...core import adc as adc_mod
+                codebook = adc_mod.codebook_from_arrays(
+                    self._backend.quantization, adc_state["arrays"])
+                self._backend.restore_adc(
+                    codebook, int(adc_state["trained_gen"]))
             self._refresh_engine()
         self.telemetry.record_ingest(n_inserted=n)
         return np.arange(n)
@@ -267,6 +278,15 @@ class Collection:
                     int(self._backend._ivf_built_upto)
                 bookkeeping["ivf_attached_gen"] = \
                     int(self._backend._attached_gen)
+            if getattr(self._backend, "adc_codebook", None) is not None:
+                # quantized collections persist the codebook (codes are
+                # a deterministic function of ciphertexts + codebook,
+                # so they re-derive bit-identically on load)
+                arrays.update({f"adc__{k}": np.asarray(v) for k, v in
+                               self._backend.adc_codebook.to_arrays()
+                               .items()})
+                bookkeeping["adc_trained_gen"] = \
+                    int(self._backend.adc_trained_gen)
             manifest_fn = getattr(self._backend, "shard_manifest", None)
             if manifest_fn is not None:
                 # computed under the SAME lock hold as the array copies,

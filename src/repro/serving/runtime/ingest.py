@@ -28,11 +28,14 @@ mutating database.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...core import adc
 from ...core.hnsw import HNSW
 from ...core.ivf import IVFIndex
+from ...kernels.adc_topk import ops as adc_ops
 from ...kernels.common import next_bucket
 from ...kernels.l2_topk import ops as l2_ops
 from .. import search_engine as se
@@ -175,18 +178,46 @@ class DeltaAwareBackend:
 
     All kinds mask tombstoned rows out of the candidate validity mask, so
     the refine never returns a deleted id.
+
+    quantization="int8"|"pq8" (flat/ivf kinds) swaps the f32 scans for
+    the quantized ADC path (DESIGN.md §11): the backend keeps one
+    capacity-bucketed code array over *all* rows plus an int32
+    row-validity stream, so delta appends re-encode only the new rows
+    at the next attach (codes are 4-32x smaller than the ciphertexts —
+    a delta re-encode burst is cheap) and deletes only flip validity.
+    The codebook is trained keylessly over the alive ciphertexts at
+    first attach; a compaction *retrains* it when the collection has
+    at least doubled since training (stale codebooks lose recall as
+    the distribution drifts) and *reuses* it otherwise — and a
+    codebook restored from a snapshot re-encodes bit-identical codes.
+    The filter oversamples k' by `refine_ratio` into the unchanged
+    exact refine (core.adc).
     """
 
     def __init__(self, store: MutableEncryptedStore, kind: str = "flat", *,
                  use_kernel: bool = True, n_partitions: int = 64,
                  nprobe: int = 8, hnsw_M: int = 16,
                  hnsw_ef_construction: int = 200,
-                 delta_bucket_min: int = 128, seed: int = 0):
+                 delta_bucket_min: int = 128, seed: int = 0,
+                 quantization: str | None = None,
+                 refine_ratio: float | None = None, pq_m: int = 16):
         if kind not in ("flat", "ivf", "hnsw"):
             raise ValueError(f"unknown backend kind {kind!r}")
+        if quantization not in adc.QUANTIZATIONS:
+            raise ValueError(f"unknown quantization {quantization!r} "
+                             f"(have {adc.QUANTIZATIONS})")
+        if quantization is not None and kind == "hnsw":
+            raise ValueError("quantization applies to flat|ivf backends "
+                             "(the graph walk reads full-precision rows)")
         self.store = store
         self.kind = kind
-        self.name = kind
+        self.quantization = quantization
+        self.name = (kind if quantization is None
+                     else f"adc-{kind}-{quantization}")
+        self.refine_ratio = (adc.default_refine_ratio(quantization)
+                             if refine_ratio is None else
+                             float(refine_ratio))
+        self.pq_m = pq_m
         self.use_kernel = use_kernel
         self.n_partitions = n_partitions
         self.nprobe = nprobe
@@ -207,6 +238,14 @@ class DeltaAwareBackend:
         self._delta_n = 0
         self._C_dce_dev = None    # refine array device residency (all
         self._dce_snapshot = (-1, -1)    # kinds); (padded_len, n_total)
+        # quantized-ADC state: codebook + one bucketed code array over
+        # all rows + row-validity stream (see class docstring)
+        self.adc_codebook = None
+        self.adc_trained_gen = -1        # main_gen the codebook is for
+        self._adc_c8 = self._adc_cn = self._adc_codes_t = None
+        self._adc_ok = None
+        self._adc_snapshot = (-1, -1, -1)  # (codebook id, gen, n_total)
+        self.last_filter_bytes = 0
 
     # ------------------------------------------------- mutation hooks
     # Called by the Collection under its lock, *before* the engine is
@@ -255,9 +294,111 @@ class DeltaAwareBackend:
         self._dce_snapshot = (plen, n_total)
         return self._C_dce_dev
 
+    def _row_bucket(self, n: int) -> int:
+        """Padded row capacity of the bucketed scan/code arrays (the
+        sharded backend overrides this with its shard-even bucket)."""
+        return next_bucket(n, minimum=256)
+
+    def _use_pallas(self) -> bool:
+        """ADC Pallas path on actual TPU only; elsewhere the
+        rank-identical XLA formulation is the serving path
+        (kernels/adc_topk/ops.py)."""
+        return self.use_kernel and jax.default_backend() == "tpu"
+
+    # ----------------------------------------------- ADC code arrays
+
+    def restore_adc(self, codebook, trained_gen: int):
+        """Install a snapshotted codebook (Collection.load_snapshot):
+        codes re-encode from the restored ciphertexts bit-identically,
+        so only the codebook itself persists (DESIGN.md §11)."""
+        self.adc_codebook = codebook
+        self.adc_trained_gen = int(trained_gen)
+        self._adc_snapshot = (-1, -1, -1)
+
+    # device-placement hooks (the sharded backend re-targets these)
+    def _put_codes(self, buf: np.ndarray):
+        return jnp.asarray(buf)             # (bucket, d) int8
+
+    def _put_codes_t(self, buf: np.ndarray):
+        return jnp.asarray(buf)             # (m, bucket) uint8
+
+    def _put_rowvec(self, buf: np.ndarray):
+        return jnp.asarray(buf)             # (bucket,) int32
+
+    def _attach_adc(self, C_sap: np.ndarray):
+        """Refresh codebook + code arrays (one refresh per mutation
+        burst).  Retrain-or-reuse: a compaction retrains only once the
+        alive set has at least doubled since training; anything else
+        reuses the codebook and encodes just the appended rows."""
+        st = self.store
+        alive = st.alive_view
+        cb = self.adc_codebook
+        # retrain-or-reuse: at a compaction once the alive set doubled,
+        # or at the first attach with real rows after a placeholder
+        # training pass (trained_n == 0: a fully-tombstoned store has
+        # no geometry to fit — its degenerate grid must never encode
+        # real rows, cf. code review)
+        stale = cb is not None and (
+            (st.main_gen != self.adc_trained_gen
+             and st.n_alive >= 2 * cb.trained_n)
+            or (cb.trained_n == 0 and st.n_alive > 0))
+        if cb is None or stale:
+            rows = C_sap[alive]
+            placeholder = rows.shape[0] == 0
+            if placeholder:                 # fully tombstoned: keep a
+                rows = np.zeros((1, st.d), np.float32)   # usable grid
+            self.adc_codebook = adc.train_codebook(
+                rows, self.quantization, m=self.pq_m, seed=self.seed)
+            if placeholder:
+                self.adc_codebook.trained_n = 0
+            self._adc_snapshot = (-1, -1, -1)   # force full re-encode
+        self.adc_trained_gen = st.main_gen
+
+        bucket = self._row_bucket(st.n_total)
+        cb_id = id(self.adc_codebook)
+        old_cb, old_bucket, old_n = self._adc_snapshot
+        fresh = not (old_cb == cb_id and old_bucket == bucket)
+        if self.quantization == "int8":
+            if fresh:
+                buf = np.zeros((bucket, st.d), np.int8)
+                cnb = np.zeros(bucket, np.int32)
+                codes, cn = self.adc_codebook.encode(C_sap)
+                buf[: st.n_total], cnb[: st.n_total] = codes, cn
+                self._adc_c8 = self._put_codes(buf)
+                self._adc_cn = self._put_rowvec(cnb)
+            elif st.n_total > old_n:        # encode appended rows only
+                codes, cn = self.adc_codebook.encode(
+                    C_sap[old_n: st.n_total])
+                self._adc_c8 = self._adc_c8.at[old_n: st.n_total].set(
+                    jnp.asarray(codes))
+                self._adc_cn = self._adc_cn.at[old_n: st.n_total].set(
+                    jnp.asarray(cn))
+        else:                               # pq8
+            if fresh:
+                buf = np.zeros((self.adc_codebook.m, bucket), np.uint8)
+                codes = self.adc_codebook.encode(C_sap)
+                buf[:, : st.n_total] = codes.T
+                self._adc_codes_t = self._put_codes_t(buf)
+            elif st.n_total > old_n:
+                codes = self.adc_codebook.encode(C_sap[old_n: st.n_total])
+                self._adc_codes_t = \
+                    self._adc_codes_t.at[:, old_n: st.n_total].set(
+                        jnp.asarray(np.ascontiguousarray(codes.T)))
+        # validity is data, not shape: refreshed every burst, so
+        # deletes flip bits without touching the code arrays
+        ok = np.zeros(bucket, np.int32)
+        ok[: st.n_total] = alive
+        self._adc_ok = self._put_rowvec(ok)
+        self._adc_snapshot = (cb_id, bucket, st.n_total)
+
     def attach(self, C_sap: np.ndarray, engine):
         """One refresh per mutation burst (the engine attaches lazily)."""
         st = self.store
+        if self.quantization is not None:
+            if self.kind == "ivf":
+                self._attach_ivf_index(C_sap)
+            self._attach_adc(C_sap)
+            return
         if self.kind == "flat":
             if self._attached_gen != st.main_gen or self._C_main is None:
                 self._C_main = (jnp.asarray(C_sap[: st.n_main])
@@ -277,6 +418,14 @@ class DeltaAwareBackend:
         # hnsw: the graph already holds its ciphertexts, nothing to refresh
 
     def _attach_ivf(self, C_sap: np.ndarray):
+        self._attach_ivf_index(C_sap)
+        self._refresh_scan_array(C_sap)
+
+    def _attach_ivf_index(self, C_sap: np.ndarray):
+        """Coarse-quantizer maintenance only (centroid build at
+        compaction + incremental delta assignment) — shared by the f32
+        scan and the quantized ADC pool scan, so probe pools are
+        identical across quantization settings."""
         st = self.store
         if self.ivf is None or self._attached_gen != st.main_gen:
             base_n = st.n_main if st.n_main else st.n_total
@@ -314,7 +463,6 @@ class DeltaAwareBackend:
                     for row in sel:
                         self._assign[int(row)] = int(c)
             self._ivf_built_upto = st.n_total
-        self._refresh_scan_array(C_sap)
 
     def _refresh_scan_array(self, C_sap: np.ndarray):
         """Sentinel-padded capacity-bucketed device copy of all rows for
@@ -342,19 +490,87 @@ class DeltaAwareBackend:
     # ------------------------------------------------------- candidates
 
     def _mask_alive(self, cand: np.ndarray, valid: np.ndarray):
-        """valid &= alive, with out-of-range ids (sentinel pad slots)
-        invalidated and clamped so the host-side alive lookup is safe."""
+        """valid &= alive, with out-of-range ids (sentinel pad slots,
+        and the ADC kernels' -1 empty-slot marker) invalidated and
+        clamped so the host-side alive lookup is safe."""
         st = self.store
-        in_range = cand < st.n_total
+        in_range = (cand >= 0) & (cand < st.n_total)
         safe = np.where(in_range, cand, 0)
         return safe, valid & in_range & st.alive_view[safe]
 
+    def oversampled(self, kp: int) -> int:
+        """ADC recall model: quantized filters hand k'*refine_ratio
+        candidates to the exact refine (core.adc)."""
+        return max(kp, int(np.ceil(kp * self.refine_ratio))) \
+            if self.quantization is not None else kp
+
     def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
+        if self.quantization is not None:
+            kp2 = self.oversampled(kp)
+            if self.kind == "flat":
+                return self._candidates_adc_flat(Q_sap, kp2)
+            return self._candidates_adc_ivf(Q_sap, kp2)
         if self.kind == "flat":
             return self._candidates_flat(Q_sap, kp)
         if self.kind == "ivf":
             return self._candidates_ivf(Q_sap, kp)
         return self._candidates_hnsw(Q_sap, kp, ef_search)
+
+    def _adc_code_bytes(self, rows: int) -> int:
+        # codes (+ SQ norms) plus the int32 validity stream — what the
+        # quantized scan actually touches per bucketed row
+        return rows * (self.adc_codebook.code_bytes_per_vector() + 4)
+
+    def _candidates_adc_flat(self, Q_sap: np.ndarray, kp2: int):
+        st = self.store
+        nq = Q_sap.shape[0]
+        bucket = int(self._adc_ok.shape[0])
+        kp2 = min(kp2, bucket)
+        if self.quantization == "int8":
+            q8 = self.adc_codebook.encode_query(np.asarray(Q_sap,
+                                                           np.float32))
+            _, idx = adc_ops.sq_knn(jnp.asarray(q8), self._adc_c8,
+                                    self._adc_cn, kp2, ok=self._adc_ok,
+                                    use_kernel=self._use_pallas())
+        else:
+            lut = self.adc_codebook.lut(np.asarray(Q_sap, np.float32))
+            _, idx = adc_ops.pq_knn(jnp.asarray(lut), self._adc_codes_t,
+                                    kp2, ok=self._adc_ok,
+                                    use_kernel=self._use_pallas())
+        cand = np.asarray(idx, np.int32)
+        safe, valid = self._mask_alive(cand, np.ones(cand.shape, bool))
+        self.last_filter_bytes = self._adc_code_bytes(bucket)
+        # rows present (incl. tombstones), matching the f32 flat path's
+        # main+delta accounting — evals stay comparable across
+        # quantization settings
+        return safe, valid, nq * st.n_total
+
+    def _candidates_adc_ivf(self, Q_sap: np.ndarray, kp2: int):
+        st = self.store
+        nq = Q_sap.shape[0]
+        if self.ivf is None:                  # nothing alive to probe
+            return (np.zeros((nq, kp2), np.int32),
+                    np.zeros((nq, kp2), bool), 0)
+        Q = np.asarray(Q_sap, np.float32)
+        pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        cand, valid = se.layout_pools(nq, pools, kp2,
+                                      pool_mask=lambda p: st.alive_view[p])
+        if self.quantization == "int8":
+            q8 = self.adc_codebook.encode_query(Q)
+            ids, vout = adc_ops.sq_pool_scan(
+                self._adc_c8, self._adc_cn, jnp.asarray(q8),
+                jnp.asarray(cand), jnp.asarray(valid), kp2)
+        else:
+            lut = self.adc_codebook.lut(Q)
+            ids, vout = adc_ops.pq_pool_scan(
+                self._adc_codes_t, jnp.asarray(lut), jnp.asarray(cand),
+                jnp.asarray(valid), kp2)
+        evals = sum(p.size for p in pools) \
+            + nq * self.ivf.centroids.shape[0]
+        self.last_filter_bytes = (
+            self._adc_code_bytes(sum(p.size for p in pools))
+            + self.ivf.centroids.nbytes)
+        return np.asarray(ids), np.asarray(vout), evals
 
     def _candidates_flat(self, Q_sap: np.ndarray, kp: int):
         st = self.store
@@ -381,6 +597,10 @@ class DeltaAwareBackend:
             safe, valid = self._mask_alive(cand, in_delta)
             parts.append((np.asarray(dist), safe, valid))
             evals += nq * self._delta_n
+        self.last_filter_bytes = st.d * 4 * (
+            (int(self._C_main.shape[0]) if self._C_main is not None else 0)
+            + (int(self._C_delta.shape[0]) if self._C_delta is not None
+               else 0))
         dists = np.concatenate([d for d, _, _ in parts], axis=1)
         cand = np.concatenate([c for _, c, _ in parts], axis=1)
         valid = np.concatenate([v for _, _, v in parts], axis=1)
@@ -403,10 +623,13 @@ class DeltaAwareBackend:
             self._C_all, Q, pools, kp,
             pool_mask=lambda p: st.alive_view[p])
         evals = sum(p.size for p in pools) + nq * self.ivf.centroids.shape[0]
+        self.last_filter_bytes = (sum(p.size for p in pools) * st.d * 4
+                                  + self.ivf.centroids.nbytes)
         return ids, vout, evals
 
     def _candidates_hnsw(self, Q_sap: np.ndarray, kp: int, ef_search: int):
         cand, valid, evals = se.traverse_graph_candidates(
             self.graph, Q_sap, kp, ef_search)
         safe, valid = self._mask_alive(cand, valid)
+        self.last_filter_bytes = int(evals) * self.store.d * 4
         return safe, valid, evals

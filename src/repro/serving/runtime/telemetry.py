@@ -30,6 +30,7 @@ def jit_cache_size() -> int:
     """Total cached-executable count across the runtime's jitted entry
     points.  A steady value across a traffic phase == zero recompiles."""
     from ...core import dce, dcpe
+    from ...kernels.adc_topk import ops as adc_ops
     from ...kernels.dce_comp import ops as dce_ops
     from ...kernels.l2_topk import ops as l2_ops
     from .. import search_engine as se
@@ -42,6 +43,10 @@ def jit_cache_size() -> int:
         dce_ops.batched_top_k_by_wins,
         dce._encrypt_jax_core,
         dcpe._encrypt_jax,
+        adc_ops.sq_knn,
+        adc_ops.pq_knn,
+        adc_ops.sq_pool_scan,
+        adc_ops.pq_pool_scan,
     )
     return sum(f._cache_size() for f in fns) + sharded.cache_size()
 

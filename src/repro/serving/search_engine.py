@@ -36,16 +36,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import secure_knn
+from ..core import adc, secure_knn
 from ..core.hnsw import HNSW
 from ..core.ivf import IVFIndex
+from ..kernels.adc_topk import ops as adc_ops
 from ..kernels.common import next_bucket
 from ..kernels.dce_comp import ops as dce_ops
 from ..kernels.l2_topk import ops as l2_ops
 
 __all__ = ["SearchStats", "SecureSearchEngine", "FlatScanFilter",
-           "IVFScanFilter", "HNSWGraphFilter", "refine_candidates",
-           "layout_pools", "scan_ivf_pools", "traverse_graph_candidates"]
+           "IVFScanFilter", "HNSWGraphFilter", "ADCFilter",
+           "refine_candidates", "layout_pools", "scan_ivf_pools",
+           "traverse_graph_candidates"]
 
 
 @dataclasses.dataclass
@@ -63,6 +65,11 @@ class SearchStats:
     bytes_down: int
     n_queries: int = 1
     backend: str = ""
+    # true bytes the filter touched this call: full-precision rows for
+    # the f32 backends, codes (+ norms / LUT centroids) for quantized
+    # ADC backends — the direct observable of the bandwidth win
+    # (DESIGN.md §11).  0 for an empty collection.
+    filter_bytes_scanned: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +186,7 @@ class FlatScanFilter:
         self.use_kernel = use_kernel
         self.chunk = chunk
         self._C = None
+        self.last_filter_bytes = 0
 
     def attach(self, C_sap: np.ndarray, engine: "SecureSearchEngine"):
         self._C = jnp.asarray(C_sap)
@@ -190,6 +198,7 @@ class FlatScanFilter:
                             use_kernel=self.use_kernel)
         cand = np.asarray(idx, np.int32)
         valid = np.ones(cand.shape, bool)
+        self.last_filter_bytes = int(self._C.size) * 4
         return cand, valid, Q_sap.shape[0] * n
 
 
@@ -212,6 +221,7 @@ class IVFScanFilter:
         self.seed = seed
         self.ivf: IVFIndex | None = None
         self._C = None
+        self.last_filter_bytes = 0
 
     def attach(self, C_sap: np.ndarray, engine: "SecureSearchEngine"):
         self._C = jnp.asarray(C_sap)
@@ -226,6 +236,9 @@ class IVFScanFilter:
         ids, vout = scan_ivf_pools(self._C, Q, pools, kp)
         evals = sum(p.size for p in pools) \
             + nq * self.ivf.centroids.shape[0]
+        d = Q.shape[1]
+        self.last_filter_bytes = (sum(p.size for p in pools) * d * 4
+                                  + self.ivf.centroids.nbytes)
         return ids, vout, evals
 
 
@@ -241,12 +254,143 @@ class HNSWGraphFilter:
 
     def __init__(self, index: HNSW):
         self.index = index
+        self.last_filter_bytes = 0
 
     def attach(self, C_sap: np.ndarray, engine: "SecureSearchEngine"):
         pass                      # the graph already stores its ciphertexts
 
     def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
-        return traverse_graph_candidates(self.index, Q_sap, kp, ef_search)
+        cand, valid, evals = traverse_graph_candidates(
+            self.index, Q_sap, kp, ef_search)
+        # pointer chasing re-reads per query: one full row per eval
+        self.last_filter_bytes = int(evals) * Q_sap.shape[1] * 4
+        return cand, valid, evals
+
+
+class ADCFilter:
+    """Quantized approximate-distance filter over ciphertext codes
+    (DESIGN.md §11): the flat/IVF scan at 1 byte/dim (int8) or m
+    bytes/vector (pq8) instead of 4 bytes/dim.
+
+    The backend trains its codebook *keylessly* over the DCPE filter
+    ciphertexts at attach (the server quantizes data it already holds —
+    no new leakage), scans codes through the fused adc_topk kernel
+    family, and **oversamples**: asked for k' candidates it returns
+    k' * refine_ratio of them, so the unchanged exact DCE refine
+    recovers the order that quantization blurred (`core.adc` holds the
+    recall model and the per-kind defaults).
+
+    kind="flat" streams all codes (Pallas `sq_adc_topk`/`pq_adc_topk`
+    with the in-kernel running top-k); kind="ivf" probes the same
+    coarse quantizer as `IVFScanFilter` (identical pools) and runs the
+    ADC pool scan over the probed rows.
+
+    use_kernel=True engages the Pallas path on actual TPU backends; on
+    other backends the rank-identical XLA formulation runs instead —
+    interpret-mode execution is a correctness harness, not a serving
+    path (kernels/adc_topk/ops.py).  use_kernel=False forces XLA
+    everywhere (the GSPMD-safe form the sharded backend uses).
+    """
+
+    def __init__(self, quantization: str = "int8", kind: str = "flat", *,
+                 refine_ratio: float | None = None, use_kernel: bool = True,
+                 n_partitions: int = 64, nprobe: int = 8, pq_m: int = 16,
+                 seed: int = 0):
+        if quantization not in ("int8", "pq8"):
+            raise ValueError(f"ADCFilter needs quantization int8|pq8, "
+                             f"got {quantization!r}")
+        if kind not in ("flat", "ivf"):
+            raise ValueError(f"ADCFilter kind must be flat|ivf, "
+                             f"got {kind!r}")
+        self.quantization = quantization
+        self.kind = kind
+        self.name = f"adc-{kind}-{quantization}"
+        self.refine_ratio = (adc.default_refine_ratio(quantization)
+                             if refine_ratio is None else
+                             float(refine_ratio))
+        self.use_kernel = use_kernel
+        self.n_partitions = n_partitions
+        self.nprobe = nprobe
+        self.pq_m = pq_m
+        self.seed = seed
+        self.codebook = None
+        self.ivf: IVFIndex | None = None
+        self._c8 = self._cn = self._codes_t = None
+        self._n = 0
+        self.last_filter_bytes = 0
+
+    # --------------------------------------------------------- encoding
+
+    def _use_pallas(self) -> bool:
+        return self.use_kernel and jax.default_backend() == "tpu"
+
+    def attach(self, C_sap: np.ndarray, engine: "SecureSearchEngine"):
+        self._n = C_sap.shape[0]
+        self.codebook = adc.train_codebook(
+            C_sap, self.quantization, m=self.pq_m, seed=self.seed)
+        if self.quantization == "int8":
+            codes, cn = self.codebook.encode(C_sap)
+            self._c8 = jnp.asarray(codes)
+            self._cn = jnp.asarray(cn)
+        else:
+            codes = self.codebook.encode(C_sap)
+            self._codes_t = jnp.asarray(np.ascontiguousarray(codes.T))
+        if self.kind == "ivf":
+            # the SAME coarse quantizer as IVFScanFilter — probe pools
+            # are identical, only the per-row distance math changes
+            self.ivf = IVFIndex(n_clusters=min(self.n_partitions,
+                                               C_sap.shape[0]),
+                                seed=self.seed).build(C_sap)
+
+    def _code_bytes(self) -> int:
+        return self.codebook.code_bytes_per_vector()
+
+    def oversampled(self, kp: int) -> int:
+        return max(kp, int(np.ceil(kp * self.refine_ratio)))
+
+    # ------------------------------------------------------- candidates
+
+    def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
+        Q = np.asarray(Q_sap, np.float32)
+        nq = Q.shape[0]
+        kp2 = min(self.oversampled(kp), self._n)
+        if self.kind == "flat":
+            if self.quantization == "int8":
+                q8 = self.codebook.encode_query(Q)
+                _, idx = adc_ops.sq_knn(jnp.asarray(q8), self._c8,
+                                        self._cn, kp2,
+                                        use_kernel=self._use_pallas())
+            else:
+                lut = self.codebook.lut(Q)
+                _, idx = adc_ops.pq_knn(jnp.asarray(lut), self._codes_t,
+                                        kp2,
+                                        use_kernel=self._use_pallas())
+            cand = np.asarray(idx, np.int32)
+            # -1 marks slots beyond the valid-row count (kp' > n); the
+            # refine sees them masked, never a wrapped gather index
+            valid = cand >= 0
+            cand = np.where(valid, cand, 0)
+            self.last_filter_bytes = self._n * self._code_bytes()
+            return cand, valid, nq * self._n
+
+        pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        cand, valid = layout_pools(nq, pools, kp2)
+        if self.quantization == "int8":
+            q8 = self.codebook.encode_query(Q)
+            ids, vout = adc_ops.sq_pool_scan(
+                self._c8, self._cn, jnp.asarray(q8), jnp.asarray(cand),
+                jnp.asarray(valid), kp2)
+        else:
+            lut = self.codebook.lut(Q)
+            ids, vout = adc_ops.pq_pool_scan(
+                self._codes_t, jnp.asarray(lut), jnp.asarray(cand),
+                jnp.asarray(valid), kp2)
+        evals = sum(p.size for p in pools) \
+            + nq * self.ivf.centroids.shape[0]
+        self.last_filter_bytes = (sum(p.size for p in pools)
+                                  * self._code_bytes()
+                                  + self.ivf.centroids.nbytes)
+        return np.asarray(ids), np.asarray(vout), evals
 
 
 _BACKENDS = {"flat": FlatScanFilter, "ivf": IVFScanFilter}
@@ -261,17 +405,32 @@ class SecureSearchEngine:
 
     backend: "flat" | "ivf" | a filter-backend instance (e.g.
     `HNSWGraphFilter(index)` — pass the HNSW built by the data owner).
+    quantization: None | "int8" | "pq8" — a non-None value swaps the
+    string-selected flat/ivf backend for the quantized `ADCFilter`
+    variant of the same kind (DESIGN.md §11); the refine is unchanged.
     use_kernel=False drops to the einsum refine (GSPMD-safe / debugging).
     """
 
     def __init__(self, C_sap: np.ndarray, C_dce: np.ndarray, *,
-                 backend="flat", use_kernel: bool = True, **backend_kw):
+                 backend="flat", use_kernel: bool = True,
+                 quantization: str | None = None, **backend_kw):
         if isinstance(backend, str):
             if backend == "hnsw":
                 raise ValueError(
                     "pass HNSWGraphFilter(index) explicitly: the graph is "
                     "built by the data owner, not the engine")
-            backend = _BACKENDS[backend](**backend_kw)
+            if quantization is not None:
+                if backend not in ("flat", "ivf"):
+                    raise ValueError(
+                        f"quantization applies to flat|ivf backends, "
+                        f"not {backend!r}")
+                backend = ADCFilter(quantization, kind=backend,
+                                    use_kernel=use_kernel, **backend_kw)
+            else:
+                backend = _BACKENDS[backend](**backend_kw)
+        elif quantization is not None:
+            raise ValueError("pass quantization to the backend instance, "
+                             "not the engine, when supplying one")
         self.backend = backend
         self.use_kernel = use_kernel
         self.update_database(C_sap, C_dce)
@@ -361,6 +520,8 @@ class SecureSearchEngine:
             bytes_down=ids.nbytes,          # int64 ids: 8 bytes per slot
             n_queries=nq,
             backend=self.backend.name,
+            filter_bytes_scanned=int(
+                getattr(self.backend, "last_filter_bytes", 0)),
         )
         return ids, stats
 
@@ -395,5 +556,7 @@ class SecureSearchEngine:
             bytes_down=np.asarray(ids, np.int64).nbytes,
             n_queries=1,
             backend=self.backend.name,
+            filter_bytes_scanned=int(
+                getattr(self.backend, "last_filter_bytes", 0)),
         )
         return ids, stats

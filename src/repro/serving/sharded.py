@@ -53,6 +53,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..kernels.adc_topk.ops import INT_BIG
 from ..kernels.common import next_bucket
 from ..kernels.dce_comp import ops as dce_ops
 from ..launch.mesh import make_mesh
@@ -171,11 +172,141 @@ def _sharded_refine(C_dce_sh, cand, T, valid, *, mesh, axis, k: int):
     return jnp.where(vsel, ids, -1)
 
 
+# ---------------------------------------------------------------------------
+# Quantized ADC variants (DESIGN.md §11): the same collective shapes as
+# the f32 entry points above — per-shard local work + all-gather(k') or
+# pmin merges — with distances computed from per-shard *codes* instead
+# of f32 ciphertexts.  XLA/einsum formulation throughout (the Pallas
+# adc_topk path stays single-device; a mesh-sharded pallas_call would
+# fight the partitioner, same argument as the refine, DESIGN.md §3).
+# ---------------------------------------------------------------------------
+
+_BIG_F = jnp.float32(INT_BIG)
+
+
+def _local_merge(axis, neg, idx, n_loc, kp):
+    """Shared tail of the sharded flat scans: local top-k' -> global ids
+    -> all-gather(k'/shard) -> cross-shard top-k'."""
+    gidx = idx + jax.lax.axis_index(axis) * n_loc
+    vals = jax.lax.all_gather(-neg, axis, axis=1, tiled=True)
+    gids = jax.lax.all_gather(gidx, axis, axis=1, tiled=True)
+    _, pos = jax.lax.top_k(-vals, min(kp, vals.shape[1]))
+    return jnp.take_along_axis(gids, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "kp"))
+def _sharded_sq_topk(C8_sh, cn_sh, ok_sh, Q8, *, mesh, axis, kp: int):
+    """Row-sharded int8 ADC filter: per-shard surrogate distances
+    cn - 2*(q8 . c8) over the shard's codes, then the existing
+    all-gather(k'/shard) merge."""
+
+    def body(C_loc, cn_loc, ok_loc, Q_rep):
+        n_loc = C_loc.shape[0]
+        cross = jax.lax.dot_general(
+            Q_rep.astype(jnp.float32), C_loc.astype(jnp.float32),
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        d = cn_loc.astype(jnp.float32)[None, :] - 2.0 * cross
+        d = jnp.where(ok_loc[None, :] > 0, d, _BIG_F)
+        kp_loc = min(kp, n_loc)
+        neg, idx = jax.lax.top_k(-d, kp_loc)
+        return _local_merge(axis, neg, idx, n_loc, kp)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis, None), P(axis), P(axis),
+                               P(None, None)),
+                     out_specs=P(None, None),
+                     check_rep=False)(C8_sh, cn_sh, ok_sh, Q8)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "kp"))
+def _sharded_pq_topk(codes_t_sh, ok_sh, lut, *, mesh, axis, kp: int):
+    """Row-sharded PQ ADC filter: per-shard LUT gather-accumulate over
+    the shard's code columns, then the all-gather merge.  codes_t_sh is
+    (m, n) sharded on its column axis."""
+
+    def body(ct_loc, ok_loc, lut_rep):
+        n_loc = ct_loc.shape[1]
+        cc = jnp.broadcast_to(ct_loc.astype(jnp.int32)[None],
+                              (lut_rep.shape[0],) + ct_loc.shape)
+        g = jnp.take_along_axis(lut_rep, cc, axis=2)      # (nq, m, n_loc)
+        d = jnp.where(ok_loc[None, :] > 0, g.sum(axis=1), jnp.inf)
+        kp_loc = min(kp, n_loc)
+        neg, idx = jax.lax.top_k(-d, kp_loc)
+        return _local_merge(axis, neg, idx, n_loc, kp)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, axis), P(axis), P(None, None, None)),
+                     out_specs=P(None, None),
+                     check_rep=False)(codes_t_sh, ok_sh, lut)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "kp"))
+def _sharded_sq_pool_scan(C8_sh, cn_sh, Q8, cand, valid, *, mesh, axis,
+                          kp: int):
+    """Row-sharded int8 ADC pool scan: each shard fills the (nq, L)
+    surrogate-distance entries it owns, pmin reassembles — the
+    quantized twin of `_sharded_pool_scan`."""
+
+    def body(C_loc, cn_loc, Q_rep, cand_rep, valid_rep):
+        n_loc = C_loc.shape[0]
+        base = jax.lax.axis_index(axis) * n_loc
+        loc = cand_rep - base
+        mine = (loc >= 0) & (loc < n_loc) & valid_rep
+        safe = jnp.clip(loc, 0, n_loc - 1)
+        rows = jnp.take(C_loc, safe, axis=0).astype(jnp.float32)
+        cn_rows = jnp.take(cn_loc, safe).astype(jnp.float32)
+        cross = jnp.einsum("qld,qd->ql", rows, Q_rep.astype(jnp.float32))
+        d = jnp.where(mine, cn_rows - 2.0 * cross, jnp.inf)
+        d = jax.lax.pmin(d, axis)                         # (nq, L) full
+        kp_out = min(kp, d.shape[1])
+        _, pos = jax.lax.top_k(-d, kp_out)
+        return (jnp.take_along_axis(cand_rep, pos, axis=1),
+                jnp.take_along_axis(valid_rep, pos, axis=1))
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis, None), P(axis), P(None, None),
+                               P(None, None), P(None, None)),
+                     out_specs=(P(None, None), P(None, None)),
+                     check_rep=False)(C8_sh, cn_sh, Q8, cand, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "kp"))
+def _sharded_pq_pool_scan(codes_t_sh, lut, cand, valid, *, mesh, axis,
+                          kp: int):
+    """Row-sharded PQ ADC pool scan (LUT gather over owned pool rows +
+    pmin)."""
+
+    def body(ct_loc, lut_rep, cand_rep, valid_rep):
+        n_loc = ct_loc.shape[1]
+        base = jax.lax.axis_index(axis) * n_loc
+        loc = cand_rep - base
+        mine = (loc >= 0) & (loc < n_loc) & valid_rep
+        safe = jnp.clip(loc, 0, n_loc - 1)
+        cc = jnp.take(ct_loc, safe, axis=1)               # (m, nq, L)
+        cc = jnp.transpose(cc, (1, 0, 2)).astype(jnp.int32)
+        g = jnp.take_along_axis(lut_rep, cc, axis=2)      # (nq, m, L)
+        d = jnp.where(mine, g.sum(axis=1), jnp.inf)
+        d = jax.lax.pmin(d, axis)
+        kp_out = min(kp, d.shape[1])
+        _, pos = jax.lax.top_k(-d, kp_out)
+        return (jnp.take_along_axis(cand_rep, pos, axis=1),
+                jnp.take_along_axis(valid_rep, pos, axis=1))
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, axis), P(None, None, None),
+                               P(None, None), P(None, None)),
+                     out_specs=(P(None, None), P(None, None)),
+                     check_rep=False)(codes_t_sh, lut, cand, valid)
+
+
 def cache_size() -> int:
     """Compiled-executable count of the sharded entry points (summed
     into `runtime.telemetry.jit_cache_size` for the recompile audit)."""
     return sum(f._cache_size() for f in
-               (_sharded_flat_topk, _sharded_pool_scan, _sharded_refine))
+               (_sharded_flat_topk, _sharded_pool_scan, _sharded_refine,
+                _sharded_sq_topk, _sharded_pq_topk,
+                _sharded_sq_pool_scan, _sharded_pq_pool_scan))
 
 
 # ---------------------------------------------------------------------------
@@ -206,10 +337,12 @@ class ShardedBackend(DeltaAwareBackend):
         self.n_shards = int(n_shards)
         self.axis = data_axis
         self.mesh = sharded_mesh(self.n_shards, data_axis)
-        self.name = f"sharded-{kind}"
+        self.name = f"sharded-{self.name}"   # sharded-<kind | adc-...>
         self.use_kernel = False       # einsum refine under the mesh
         self._sh_sap = NamedSharding(self.mesh, P(data_axis, None))
         self._sh_dce = NamedSharding(self.mesh, P(data_axis, None, None))
+        self._sh_row = NamedSharding(self.mesh, P(data_axis))
+        self._sh_codes_t = NamedSharding(self.mesh, P(None, data_axis))
 
     # ------------------------------------------------------------ layout
 
@@ -270,7 +403,25 @@ class ShardedBackend(DeltaAwareBackend):
             self._C_all = jax.device_put(buf, self._sh_sap)
         self._scan_snapshot = snapshot
 
+    # sharded residency for the ADC code arrays (parent attach logic,
+    # these placement hooks): codes row-sharded like the f32 scan
+    # array, (m, n) PQ codes sharded on their column axis, per-row
+    # norms/validity sharded 1-D — every shard streams only its codes
+    def _put_codes(self, buf: np.ndarray):
+        return jax.device_put(buf, self._sh_sap)
+
+    def _put_codes_t(self, buf: np.ndarray):
+        return jax.device_put(buf, self._sh_codes_t)
+
+    def _put_rowvec(self, buf: np.ndarray):
+        return jax.device_put(buf, self._sh_row)
+
     def attach(self, C_sap: np.ndarray, engine):
+        if self.quantization is not None:
+            if self.kind == "ivf":
+                self._attach_ivf_index(C_sap)   # same pools as single
+            self._attach_adc(C_sap)             # codes via our hooks
+            return
         if self.kind == "ivf":
             self._attach_ivf(C_sap)       # parent logic; calls our
         else:                             # _refresh_scan_array override
@@ -301,9 +452,66 @@ class ShardedBackend(DeltaAwareBackend):
     # ------------------------------------------------------- candidates
 
     def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
+        if self.quantization is not None:
+            kp2 = self.oversampled(kp)
+            if self.kind == "flat":
+                return self._candidates_adc_flat(Q_sap, kp2)
+            return self._candidates_adc_ivf(Q_sap, kp2)
         if self.kind == "flat":
             return self._candidates_flat(Q_sap, kp)
         return self._candidates_ivf(Q_sap, kp)
+
+    def _candidates_adc_flat(self, Q_sap: np.ndarray, kp2: int):
+        st = self.store
+        nq = Q_sap.shape[0]
+        bucket = int(self._adc_ok.shape[0])
+        kp_eff = min(kp2, bucket)
+        Q = np.asarray(Q_sap, np.float32)
+        if self.quantization == "int8":
+            q8 = self.adc_codebook.encode_query(Q)
+            cand = _sharded_sq_topk(
+                self._adc_c8, self._adc_cn, self._adc_ok,
+                jnp.asarray(q8), mesh=self.mesh, axis=self.axis,
+                kp=kp_eff)
+        else:
+            lut = self.adc_codebook.lut(Q)
+            cand = _sharded_pq_topk(
+                self._adc_codes_t, self._adc_ok, jnp.asarray(lut),
+                mesh=self.mesh, axis=self.axis, kp=kp_eff)
+        cand = np.asarray(cand, np.int32)
+        safe, valid = self._mask_alive(cand, np.ones(cand.shape, bool))
+        self.last_filter_bytes = self._adc_code_bytes(bucket)
+        return safe, valid, nq * st.n_total     # same accounting as the
+        # f32 paths: rows present, incl. tombstones
+
+    def _candidates_adc_ivf(self, Q_sap: np.ndarray, kp2: int):
+        st = self.store
+        nq = Q_sap.shape[0]
+        if self.ivf is None:                  # nothing alive to probe
+            return (np.zeros((nq, kp2), np.int32),
+                    np.zeros((nq, kp2), bool), 0)
+        Q = np.asarray(Q_sap, np.float32)
+        pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        cand, valid = layout_pools(nq, pools, kp2,
+                                   pool_mask=lambda p: st.alive_view[p])
+        if self.quantization == "int8":
+            q8 = self.adc_codebook.encode_query(Q)
+            ids, vout = _sharded_sq_pool_scan(
+                self._adc_c8, self._adc_cn, jnp.asarray(q8),
+                jnp.asarray(cand), jnp.asarray(valid),
+                mesh=self.mesh, axis=self.axis, kp=kp2)
+        else:
+            lut = self.adc_codebook.lut(Q)
+            ids, vout = _sharded_pq_pool_scan(
+                self._adc_codes_t, jnp.asarray(lut), jnp.asarray(cand),
+                jnp.asarray(valid), mesh=self.mesh, axis=self.axis,
+                kp=kp2)
+        evals = sum(p.size for p in pools) \
+            + nq * self.ivf.centroids.shape[0]
+        self.last_filter_bytes = (
+            self._adc_code_bytes(sum(p.size for p in pools))
+            + self.ivf.centroids.nbytes)
+        return np.asarray(ids), np.asarray(vout), evals
 
     def _candidates_flat(self, Q_sap: np.ndarray, kp: int):
         st = self.store
@@ -313,6 +521,7 @@ class ShardedBackend(DeltaAwareBackend):
             self._C_all, jnp.asarray(np.asarray(Q_sap, np.float32)),
             mesh=self.mesh, axis=self.axis, kp=kp_eff), np.int32)
         safe, valid = self._mask_alive(cand, np.ones(cand.shape, bool))
+        self.last_filter_bytes = int(self._C_all.size) * 4
         return safe, valid, nq * st.n_total
 
     def _candidates_ivf(self, Q_sap: np.ndarray, kp: int):
@@ -330,6 +539,8 @@ class ShardedBackend(DeltaAwareBackend):
             jnp.asarray(valid), mesh=self.mesh, axis=self.axis, kp=kp)
         evals = sum(p.size for p in pools) \
             + nq * self.ivf.centroids.shape[0]
+        self.last_filter_bytes = (sum(p.size for p in pools) * st.d * 4
+                                  + self.ivf.centroids.nbytes)
         return np.asarray(ids), np.asarray(vout), evals
 
     # ----------------------------------------------------------- refine

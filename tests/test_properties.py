@@ -105,3 +105,82 @@ def test_z_matrix_property(n, d, seed):
     want = dce_ref.z_matrix(C, T)
     np.testing.assert_allclose(got, want, rtol=1e-4,
                                atol=1e-3 * float(np.abs(want).max() + 1))
+
+
+# ---------------------------------------------------------------------------
+# Quantized ADC filter (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+
+from repro.core import adc  # noqa: E402
+from repro.kernels.adc_topk import ops as adc_ops  # noqa: E402
+from repro.kernels.adc_topk import ref as adc_ref  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(20, 400), d=st.integers(4, 48),
+       kp=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_sq_adc_kernel_property(n, d, kp, seed):
+    """Hypothesis sweep: the fused int8 scan is bit-exact against the
+    int32 oracle for arbitrary shapes/seeds."""
+    rng = np.random.default_rng(seed)
+    C = rng.standard_normal((n, d)).astype(np.float32) * 2.0
+    Q = rng.standard_normal((3, d)).astype(np.float32) * 2.0
+    cb = adc.SQCodebook.train(C)
+    c8, cn = cb.encode(C)
+    q8 = cb.encode_query(Q)
+    dk, ik = adc_ops.sq_knn(jnp.asarray(q8), jnp.asarray(c8),
+                            jnp.asarray(cn), kp, interpret=True,
+                            use_kernel=True)
+    dr, ir = adc_ref.sq_knn(q8, c8, cn, kp)
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_clusters=st.integers(4, 12), seed=st.integers(0, 2**31 - 1),
+       quant=st.sampled_from(["int8", "pq8"]))
+def test_adc_filter_recall_property(n_clusters, seed, quant):
+    """ADCFilter + exact refine holds recall@k >= 0.95 vs the exact
+    engine on synthetic clustered data at the default refine_ratio
+    (the ADC recall-oversampling model, core.adc)."""
+    from repro.core import dcpe as dcpe_mod, ppanns
+    from repro.serving.search_engine import SecureSearchEngine
+
+    d, n, nq, k = 24, 800, 6, 10
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_clusters, d)) * 3.0
+    base = (centers[rng.integers(0, n_clusters, n)]
+            + rng.standard_normal((n, d)) * 0.2).astype(np.float32)
+    queries = (centers[rng.integers(0, n_clusters, nq)]
+               + rng.standard_normal((nq, d)) * 0.2).astype(np.float32)
+    owner = ppanns.DataOwner(
+        d=d, sap_beta=dcpe_mod.suggest_beta(base, fraction=0.03),
+        sap_s=1024.0, seed=seed % 1000)
+    C_sap, C_dce = owner.encrypt_vectors(base)
+    user = ppanns.User(owner.share_keys(), seed=seed % 997)
+    enc = [user.encrypt_query(q) for q in queries]
+    Q = np.stack([c for c, _ in enc])
+    T = np.stack([t for _, t in enc])
+    exact = SecureSearchEngine(C_sap, C_dce, backend="flat")
+    ids0, _ = exact.search_batch(Q, T, k, ratio_k=8.0)
+    eng = SecureSearchEngine(C_sap, C_dce, backend="flat",
+                             quantization=quant, seed=1)
+    ids, _ = eng.search_batch(Q, T, k, ratio_k=8.0)
+    recall = np.mean([len(set(ids0[i][ids0[i] >= 0])
+                          & set(ids[i][ids[i] >= 0])) / k
+                      for i in range(nq)])
+    assert recall >= 0.95, (quant, recall)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(10, 300), nq=st.integers(1, 6),
+       kp=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+def test_adc_exact_id_parity_when_unquantized(n, nq, kp, seed):
+    """quantization=None must stay on the PR 4 f32 path bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((n, 16)), jnp.float32)
+    Q = jnp.asarray(rng.standard_normal((nq, 16)), jnp.float32)
+    k = min(kp, n)
+    d1, i1 = l2_ops.knn(Q, X, k, chunk=128, use_kernel=False)
+    d2, i2 = l2_ref.knn(Q, X, k)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))

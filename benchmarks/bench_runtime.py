@@ -17,11 +17,24 @@ exits non-zero if occupancy <= 1, recompiles != 0, or throughput
 regresses egregiously (< 0.5x the per-query baseline; the raw speedup
 is reported but not gated tightly — wall-clock ratios are noise-prone
 on shared CI runners) — the CI smoke gate.
+
+Scheduler sweep (DESIGN.md §12): Poisson open-loop arrival-rate sweep of
+the continuous slot loop against the flush micro-batcher, p50/p99
+sojourn + slot occupancy + recompile audit per (rate, scheduler) cell;
+writes the repo-root `BENCH_runtime.json` trajectory record.
+
+  PYTHONPATH=src python -m benchmarks.bench_runtime --sweep [--smoke]
+with --smoke additionally gates: zero slot-loop recompiles in steady
+state, high slot occupancy at the highest rate, and slot-loop p99 no
+worse than the flush batcher at the highest rate (with CI-noise slack)
+— the continuous-smoke CI job.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import threading
 import time
@@ -30,10 +43,14 @@ import numpy as np
 
 from repro.api import (DataOwnerClient, IndexSpec, SecureAnnService,
                        suggest_beta)
+from repro.core import dce
 from repro.data import synth
-from repro.serving.runtime import MicroBatcher, jit_cache_size
+from repro.serving.runtime import (CollectionTelemetry, MicroBatcher,
+                                   SlotLoop, jit_cache_size)
 
 from .common import row
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 K = 10
 EF = 96
@@ -93,13 +110,19 @@ def _open_loop(col, policy: tuple[float, int], enc, rate_qps: float,
     """Poisson arrivals at rate_qps through a fresh batcher with the given
     (max_wait_ms, max_batch) policy; returns (p50, p99, achieved_qps)."""
     max_wait_ms, max_batch = policy
+    batcher = MicroBatcher(col._run_batch, max_batch=max_batch,
+                           max_wait_ms=max_wait_ms, max_queue=4096,
+                           name="openloop")
+    return _open_loop_on(batcher, enc, rate_qps, n_requests)
+
+
+def _open_loop_on(batcher, enc, rate_qps: float, n_requests: int):
+    """Drive a ready scheduler (flush or continuous) with Poisson
+    arrivals; closes it afterwards.  Returns (p50, p99, achieved_qps)."""
     rng = np.random.default_rng(1)
     gaps = rng.exponential(1.0 / rate_qps, size=n_requests)
     lat: list[float] = []
     lock = threading.Lock()
-    batcher = MicroBatcher(col._run_batch, max_batch=max_batch,
-                           max_wait_ms=max_wait_ms, max_queue=4096,
-                           name="openloop")
     try:
         batcher.warmup(enc[0][0], enc[0][1], K, ratio_k=RATIO_K,
                        ef_search=EF)
@@ -195,14 +218,163 @@ def run(n: int = 20_000, d: int = 64, n_clients: int = 16,
     return rows
 
 
+def _sweep_scheduler(kind: str, col, telemetry, max_batch: int):
+    """A fresh scheduler of the given kind over the collection's engine,
+    with its own telemetry (occupancy / sojourn / reject accounting)."""
+    if kind == "flush":
+        return MicroBatcher(col._run_batch, max_batch=max_batch,
+                            max_wait_ms=2.0, max_queue=8192,
+                            telemetry=telemetry, name=f"sweep-{kind}")
+    return SlotLoop(col._run_batch, max_batch=max_batch, max_queue=8192,
+                    d=col.d, cdim=dce.ciphertext_dim(col.d),
+                    telemetry=telemetry, name=f"sweep-{kind}")
+
+
+def run_sweep(n: int = 20_000, d: int = 64, smoke: bool = False,
+              write_root_json: bool = True) -> list[str]:
+    """Poisson open-loop sweep: flush vs continuous at several arrival
+    rates (fractions of the measured per-query capacity, highest above
+    it).  Smoke gates (CI): the slot loop recompiles nothing in steady
+    state, fills its table at the highest rate, and its p99 sojourn is
+    no worse than the flush batcher's there (modulo CI-noise slack)."""
+    max_batch = 16
+    if smoke:
+        n, d = 4000, 48
+    fracs = (0.5, 1.3) if smoke else (0.25, 0.5, 0.9, 1.3)
+    n_req = 96 if smoke else 192
+    _, svc, col, enc = _build_service(n, d, n_queries=32)
+    rows, cells = [], []
+    try:
+        # per-query capacity proxy: batch-of-one engine calls
+        col.search_batch(enc[0][0][None], enc[0][1][None], K,
+                         ratio_k=RATIO_K, ef_search=EF)        # warm
+        t0 = time.perf_counter()
+        n_base = 64
+        for i in range(n_base):
+            c, t = enc[i % len(enc)]
+            col.search_batch(c[None], t[None], K, ratio_k=RATIO_K,
+                             ef_search=EF)
+        qps_base = n_base / (time.perf_counter() - t0)
+        rows.append(row("runtime_sweep/per_query_capacity", 1e6 / qps_base,
+                        f"qps={qps_base:.1f}"))
+
+        # batched capacity: one slot-table step serves up to max_batch
+        # rows, so arrival rates must be set against the FULL-TABLE step
+        # rate (per-query capacity would never fill the table)
+        Qb = np.stack([enc[i % len(enc)][0] for i in range(max_batch)])
+        Tb = np.stack([enc[i % len(enc)][1] for i in range(max_batch)])
+        col.search_batch(Qb, Tb, K, ratio_k=RATIO_K, ef_search=EF)  # warm
+        reps = 8
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            col.search_batch(Qb, Tb, K, ratio_k=RATIO_K, ef_search=EF)
+        qps_batched = reps * max_batch / (time.perf_counter() - t0)
+        rows.append(row("runtime_sweep/batched_capacity",
+                        1e6 / qps_batched, f"qps={qps_batched:.1f} "
+                        f"max_batch={max_batch}"))
+
+        for frac in fracs:
+            rate = frac * qps_batched
+            for kind in ("flush", "continuous"):
+                tel = CollectionTelemetry()
+                sched = _sweep_scheduler(kind, col, tel, max_batch)
+                sched.warmup(enc[0][0], enc[0][1], K, ratio_k=RATIO_K,
+                             ef_search=EF)
+                cache_before = jit_cache_size()
+                p50, p99, aqps = _open_loop_on(sched, enc, rate, n_req)
+                recompiles = jit_cache_size() - cache_before
+                snap = tel.snapshot()
+                occ = (snap["slot_occupancy"] if kind == "continuous"
+                       else snap["batch_occupancy"] / max_batch)
+                cells.append({"frac": frac, "rate_qps": round(rate, 1),
+                              "scheduler": kind,
+                              "p50_ms": round(1e3 * p50, 3),
+                              "p99_ms": round(1e3 * p99, 3),
+                              "achieved_qps": round(aqps, 1),
+                              "occupancy": round(occ, 3),
+                              "recompiles": recompiles,
+                              "n_rejected": snap["n_rejected"]})
+                rows.append(row(
+                    f"runtime_sweep/rate={frac:.2f}x/{kind}", 1e6 / aqps,
+                    f"qps={aqps:.1f} p50_ms={1e3 * p50:.1f} "
+                    f"p99_ms={1e3 * p99:.1f} occupancy={occ:.2f} "
+                    f"recompiles={recompiles}"))
+
+        top = {c["scheduler"]: c for c in cells
+               if c["frac"] == max(fracs)}
+        slot, flush = top["continuous"], top["flush"]
+        gates = {
+            # ONE executable serves the whole sweep: any recompile in
+            # steady state breaks the slot-table contract
+            "slot_zero_recompiles": all(
+                c["recompiles"] == 0 for c in cells
+                if c["scheduler"] == "continuous"),
+            # above capacity the table must actually fill
+            "slot_occupancy_at_top_rate": slot["occupancy"],
+            "slot_occupancy_ok": slot["occupancy"] >= 0.5,
+            # the headline: continuous batching does not lose tail
+            # latency to the flush deadline where it matters most
+            # (1.2x + 10ms slack for shared-runner noise)
+            "slot_p99_ok": (slot["p99_ms"]
+                            <= 1.2 * flush["p99_ms"] + 10.0),
+        }
+        rows.append(row(
+            "runtime_sweep/gate", 0.0,
+            f"ok={all(v for k, v in gates.items() if k.endswith('ok') or k == 'slot_zero_recompiles')} "
+            f"slot_recompiles_zero={gates['slot_zero_recompiles']} "
+            f"occupancy={slot['occupancy']:.2f} "
+            f"p99_slot_ms={slot['p99_ms']:.1f} "
+            f"p99_flush_ms={flush['p99_ms']:.1f}"))
+        if write_root_json:
+            _write_sweep_json(cells, gates, qps_base, qps_batched, n, d,
+                              max_batch, n_req, smoke)
+        if smoke:
+            failed = [k for k in ("slot_zero_recompiles",
+                                  "slot_occupancy_ok", "slot_p99_ok")
+                      if not gates[k]]
+            if failed:
+                raise AssertionError(
+                    f"continuous-smoke gate failed: {failed}; "
+                    f"slot={slot} flush={flush}")
+    finally:
+        svc.close()
+    return rows
+
+
+def _write_sweep_json(cells, gates, qps_base, qps_batched, n, d,
+                      max_batch, n_req, smoke):
+    """Repo-root BENCH_runtime.json: the runtime-suite trajectory record
+    sessions diff against (the harness also writes its own copy under
+    results/bench)."""
+    from .run import provenance
+    payload = {
+        "suite": "runtime_sweep",
+        "unix_time": time.time(),
+        "config": {"n": n, "d": d, "k": K, "ratio_k": RATIO_K,
+                   "ef_search": EF, "max_batch": max_batch,
+                   "n_requests_per_cell": n_req, "smoke": smoke,
+                   "per_query_capacity_qps": round(qps_base, 1),
+                   "batched_capacity_qps": round(qps_batched, 1)},
+        "provenance": provenance(),
+        "sweep": cells,
+        "gates": gates,
+    }
+    (_ROOT / "BENCH_runtime.json").write_text(
+        json.dumps(payload, indent=2) + "\n")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes + hard gate (CI)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="flush-vs-continuous Poisson arrival-rate sweep")
     ap.add_argument("--n", type=int, default=20_000)
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
-    for r in run(n=args.n, smoke=args.smoke):
+    rows = (run_sweep(n=args.n, smoke=args.smoke) if args.sweep
+            else run(n=args.n, smoke=args.smoke))
+    for r in rows:
         print(r, flush=True)
     return 0
 

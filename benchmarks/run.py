@@ -125,6 +125,12 @@ def main() -> None:
         # lives in `python -m benchmarks.bench_runtime --smoke` (CI)
         "runtime": lambda: bench_runtime.run(
             n=20000 if args.full else 6000, smoke=False),
+        # flush vs continuous slot-table scheduler under Poisson arrivals
+        # (DESIGN.md §12); also writes the repo-root BENCH_runtime.json
+        # trajectory record.  The hard gate lives in
+        # `python -m benchmarks.bench_runtime --sweep --smoke` (CI)
+        "runtime_sweep": lambda: bench_runtime.run_sweep(
+            n=20000 if args.full else 6000, smoke=False),
         "sec3_attacks": lambda: bench_attacks.run(),
         "kernels": lambda: bench_kernels.run(),
         "roofline": lambda: bench_roofline.run(),

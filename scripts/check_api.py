@@ -42,7 +42,8 @@ BANNED_MODULES = (
 BANNED_NAMES = {
     "ppanns", "SecureSearchEngine", "SearchStats", "FlatScanFilter",
     "IVFScanFilter", "HNSWGraphFilter", "CollectionManager", "Collection",
-    "MicroBatcher", "MutableEncryptedStore", "DeltaAwareBackend",
+    "MicroBatcher", "SlotLoop", "Scheduler",
+    "MutableEncryptedStore", "DeltaAwareBackend",
     "DistributedSecureANN", "ShardedBackend", "QueueFullError",
     "TenantIsolationError", "build_secure_scan_step", "secure_scan",
 }

@@ -44,6 +44,7 @@ PROTOCOL_VERSION = 1
 _BACKENDS = ("flat", "ivf", "hnsw")
 _PLACEMENT_KINDS = ("single", "sharded")
 _QUANTIZATIONS = (None, "int8", "pq8")
+_SCHEDULERS = ("flush", "continuous")
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +144,13 @@ class IndexSpec:
     `None` means fresh entropy (the service records the effective seed
     when persisting, so a reloaded collection rebuilds identically).
 
+    `scheduler` picks how the service shares engine calls between
+    concurrent requests (DESIGN.md §12): "flush" is the deadline/size
+    micro-batcher over bucketed shapes; "continuous" is the
+    slot-table serving loop — no deadline, one compiled shape,
+    better open-loop p99.  Wire-versioned additively: payloads from
+    before the field default to "flush".
+
     `quantization` compresses the *filter* ciphertexts server-side
     (DESIGN.md §11): None scans f32 DCPE ciphertexts; "int8"/"pq8"
     scan 1-byte/dim scalar-quantized or m-byte/vector product-
@@ -168,9 +176,10 @@ class IndexSpec:
     quantization: str | None = None
     refine_ratio: float | None = None
     pq_m: int = 16
-    # micro-batcher / runtime
+    # request scheduler / runtime
+    scheduler: str = "flush"
     max_batch: int = 32
-    max_wait_ms: float = 2.0
+    max_wait_ms: float = 2.0          # flush scheduler only
     max_queue: int = 256
     compact_every: int = 4096
 
@@ -200,6 +209,9 @@ class IndexSpec:
                                  f"{self.refine_ratio}")
         if self.pq_m < 1:
             raise ValueError(f"pq_m must be >= 1, got {self.pq_m}")
+        if self.scheduler not in _SCHEDULERS:
+            raise ValueError(f"unknown scheduler {self.scheduler!r} "
+                             f"(have {_SCHEDULERS})")
 
     @property
     def cdim(self) -> int:
@@ -211,6 +223,7 @@ class IndexSpec:
         return dict(
             backend=self.backend, sap_beta=self.sap_beta,
             sap_s=self.sap_s, seed=self.seed, use_kernel=self.use_kernel,
+            scheduler=self.scheduler,
             max_batch=self.max_batch, max_wait_ms=self.max_wait_ms,
             max_queue=self.max_queue, compact_every=self.compact_every,
             n_partitions=self.n_partitions, nprobe=self.nprobe,

@@ -206,8 +206,10 @@ class SecureAnnService:
     Collections created through this API are *keyless* — the service
     stores ciphertexts, filter state, and specs, never keys; plaintext
     ingestion is structurally impossible (the runtime raises).  The
-    micro-batcher, tenant isolation, live ingestion, and telemetry of
-    the serving runtime (DESIGN.md §8) all ride underneath unchanged.
+    request scheduler (`IndexSpec.scheduler`: flush micro-batcher or
+    continuous slot loop — DESIGN.md §12), tenant isolation, live
+    ingestion, and telemetry of the serving runtime (DESIGN.md §8) all
+    ride underneath unchanged.
     """
 
     def __init__(self, *, result_timeout: float = 120.0, **default_kw):

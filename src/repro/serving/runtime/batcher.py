@@ -1,20 +1,24 @@
-"""Dynamic micro-batcher: coalesce concurrent requests into bucketed
-batches (DESIGN.md §8).
+"""Request scheduling: the `Scheduler` interface and the flush-based
+dynamic micro-batcher (DESIGN.md §8, §12).
 
-Concurrently submitted single-query requests land in a bounded queue; a
-scheduler thread drains them into one `search_batch` call per flush.  A
-flush fires when `max_batch` compatible requests are waiting or when the
-oldest request has waited `max_wait_ms` — the classic
-throughput/latency dial.  Requests batch together only when their search
-parameters `(k, ratio_k, ef_search)` agree (the jitted executables are
-specialized on them); mixed traffic is served FIFO by the head request's
-parameter group.
+`Scheduler` owns everything both serving schedulers share — the bounded
+request queue with admission control, per-request futures, parameter-
+group extraction, the worker thread, close/drain semantics, and the
+injected `Clock` (DESIGN.md §12: schedulers never read wall time
+directly, so tests drive them on virtual time).  Two implementations:
 
-Shape bucketing: the real batch is padded (by replicating the first
-request's query) up to the next power of two, capped at `max_batch`, so
-every arrival pattern maps onto a handful of compiled executables —
-zero recompiles after `warmup()` has touched each bucket.  Padded-row
-results are discarded; real results scatter back to per-request futures.
+  * `MicroBatcher` (this module) — the classic deadline/size flush:
+    a flush fires when `max_batch` compatible requests wait or the
+    oldest has waited `max_wait_ms`; the real batch pads up to the next
+    power-of-two bucket, so arrivals map onto a handful of compiled
+    executables.
+  * `SlotLoop` (`slot_loop.py`) — continuous batching over one fixed
+    slot table: no deadline, no buckets, one compiled shape.
+
+Requests batch together only when their search parameters
+`(k, ratio_k, ef_search)` agree (the jitted executables are specialized
+on them); mixed traffic is served FIFO by the head request's parameter
+group.
 
 Admission control: when `max_queue` requests are already waiting the
 submit raises `QueueFullError` instead of growing an unbounded backlog
@@ -23,22 +27,24 @@ submit raises `QueueFullError` instead of growing an unbounded backlog
 
 from __future__ import annotations
 
+import abc
 import collections
 import contextlib
 import dataclasses
 import threading
-import time
 from concurrent.futures import Future, InvalidStateError
+from concurrent.futures import TimeoutError as FutureTimeoutError
 
 import numpy as np
 
 from ...kernels.common import next_bucket
+from .clock import Clock, SystemClock
 
-__all__ = ["MicroBatcher", "QueueFullError", "batch_buckets"]
+__all__ = ["Scheduler", "MicroBatcher", "QueueFullError", "batch_buckets"]
 
 
 class QueueFullError(RuntimeError):
-    """Raised by submit() when the collection's queue is at max_queue."""
+    """Raised by submit() when the scheduler's queue is at max_queue."""
 
 
 def batch_buckets(max_batch: int) -> list[int]:
@@ -52,45 +58,45 @@ def batch_buckets(max_batch: int) -> list[int]:
     return sizes
 
 
-@dataclasses.dataclass
-class _Request:
+@dataclasses.dataclass(eq=False)      # identity compare: numpy fields
+class _Request:                        # make generated __eq__ ambiguous
     Q: np.ndarray                 # (d,) DCPE query ciphertext
     T: np.ndarray                 # (2d+16,) DCE trapdoor
     group: tuple                  # (k, ratio_k, ef_search)
     future: Future
     t_enq: float
     want_stats: bool = False      # future resolves to (ids, flush stats)
+    t_insert: float = 0.0         # slot loop: when the row entered a slot
 
 
-class MicroBatcher:
-    """Request queue + scheduler around one `run_batch` callable.
+class Scheduler(abc.ABC):
+    """Request queue + worker thread around one `run_batch` callable.
 
     run_batch(Q (B, d), T (B, D), k, ratio_k=..., ef_search=...) must
     return (ids (B, k), stats) — in the runtime this is the collection's
-    locked `SecureSearchEngine.search_batch`.
+    locked `SecureSearchEngine.search_batch`.  Subclasses implement
+    `_loop` (the scheduling policy) and `warmup` (which shapes to
+    compile); everything client-facing lives here so both schedulers
+    present one contract to the collection and the API.
     """
 
+    kind = "abstract"
+
     def __init__(self, run_batch, *, max_batch: int = 32,
-                 max_wait_ms: float = 2.0, max_queue: int = 256,
-                 telemetry=None, verify_parity: bool = False,
-                 verify_lock=None, name: str = "collection"):
+                 max_queue: int = 256, telemetry=None,
+                 clock: Clock | None = None, name: str = "collection"):
         if max_batch < 1 or max_queue < 1:
             raise ValueError("max_batch and max_queue must be >= 1")
         self._run_batch = run_batch
         self.max_batch = int(max_batch)
-        self.max_wait_s = float(max_wait_ms) / 1e3
         self.max_queue = int(max_queue)
         self.telemetry = telemetry
-        self.verify_parity = verify_parity
-        # held across the batched call AND the parity re-runs, so a
-        # concurrent mutation cannot change the database between the two
-        # and fail the assert spuriously (pass the collection's RLock)
-        self.verify_lock = verify_lock
+        self.clock = clock if clock is not None else SystemClock()
         self._pending: collections.deque[_Request] = collections.deque()
         self._cv = threading.Condition()
         self._closed = False
         self._worker = threading.Thread(
-            target=self._loop, daemon=True, name=f"microbatcher-{name}")
+            target=self._loop, daemon=True, name=f"{self.kind}-{name}")
         self._worker.start()
 
     # ------------------------------------------------------------- client
@@ -99,17 +105,18 @@ class MicroBatcher:
                ratio_k: float = 8.0, ef_search: int = 96,
                want_stats: bool = False) -> Future:
         """Enqueue one query; resolves to its (k,) id vector — or, with
-        want_stats, to (ids, SearchStats of the enclosing flush), so a
-        protocol-level caller can report the engine's uniform accounting
-        (stats.n_queries tells it how many requests coalesced)."""
+        want_stats, to (ids, SearchStats of the enclosing batched call),
+        so a protocol-level caller can report the engine's uniform
+        accounting (stats.n_queries tells it how many requests rode the
+        same engine call)."""
         req = _Request(
             Q=np.asarray(C_sap_q), T=np.asarray(T_q),
             group=(int(k), float(ratio_k), int(ef_search)),
-            future=Future(), t_enq=time.monotonic(),
+            future=Future(), t_enq=self.clock.now(),
             want_stats=want_stats)
         with self._cv:
             if self._closed:
-                raise RuntimeError("batcher is closed")
+                raise RuntimeError(f"{self.kind} is closed")
             if len(self._pending) >= self.max_queue:
                 if self.telemetry is not None:
                     self.telemetry.record_reject()
@@ -123,20 +130,36 @@ class MicroBatcher:
 
     def search(self, C_sap_q, T_q, k, *, ratio_k: float = 8.0,
                ef_search: int = 96, timeout: float | None = 30.0):
-        """Synchronous single query through the batching path."""
-        return self.submit(C_sap_q, T_q, k, ratio_k=ratio_k,
-                           ef_search=ef_search).result(timeout=timeout)
+        """Synchronous single query through the scheduling path.
 
+        A timeout *discards* the request: if it is still queued it is
+        removed (freeing its admission-control slot) and its future is
+        cancelled, so the scheduler never burns a batched engine call
+        computing into a future nobody will read."""
+        fut = self.submit(C_sap_q, T_q, k, ratio_k=ratio_k,
+                          ef_search=ef_search)
+        try:
+            return fut.result(timeout=timeout)
+        except FutureTimeoutError:
+            self.discard(fut)
+            raise
+
+    def discard(self, future: Future) -> bool:
+        """Withdraw a submitted request: drop it from the queue if still
+        pending and cancel its future.  Returns True when the future was
+        cancelled (False = it already completed; the result stands)."""
+        with self._cv:
+            for r in self._pending:
+                if r.future is future:
+                    self._pending.remove(r)
+                    break
+        return future.cancel()
+
+    @abc.abstractmethod
     def warmup(self, example_q: np.ndarray, example_t: np.ndarray,
                k: int = 10, *, ratio_k: float = 8.0, ef_search: int = 96):
-        """Compile every bucketed batch shape once, bypassing the queue.
-        Call after (re)ingesting, before steady-state traffic."""
-        for b in batch_buckets(self.max_batch):
-            Q = np.broadcast_to(np.asarray(example_q), (b,) +
-                                np.asarray(example_q).shape).copy()
-            T = np.broadcast_to(np.asarray(example_t), (b,) +
-                                np.asarray(example_t).shape).copy()
-            self._run_batch(Q, T, k, ratio_k=ratio_k, ef_search=ef_search)
+        """Compile every batch shape this policy will run, bypassing the
+        queue.  Call after (re)ingesting, before steady-state traffic."""
 
     def close(self, wait: bool = True):
         """Stop accepting requests; drain what is queued, then exit.  If
@@ -153,7 +176,8 @@ class MicroBatcher:
                     self._pending = collections.deque()
                 for r in stranded:
                     self._resolve(r.future, exc=RuntimeError(
-                        "batcher closed before this request was served"))
+                        f"{self.kind} closed before this request was "
+                        f"served"))
 
     def __enter__(self):
         return self
@@ -163,24 +187,93 @@ class MicroBatcher:
 
     # ---------------------------------------------------------- scheduler
 
+    @abc.abstractmethod
+    def _loop(self):
+        """Worker thread body: drain `_pending` into batched engine
+        calls until closed-and-drained."""
+
     def _n_matching_locked(self, group: tuple) -> int:
         return sum(r.group == group for r in self._pending)
 
-    def _take_group_locked(self, group: tuple) -> list[_Request]:
+    def _take_group_locked(self, group: tuple,
+                           limit: int | None = None) -> list[_Request]:
+        limit = self.max_batch if limit is None else limit
         took, rest = [], collections.deque()
         for r in self._pending:
-            if r.group == group and len(took) < self.max_batch:
+            if r.group == group and len(took) < limit:
                 took.append(r)
             else:
                 rest.append(r)
         self._pending = rest
         return took
 
+    @staticmethod
+    def _resolve(future: Future, result=None, exc=None):
+        """Deliver a result/exception, tolerating a client cancel() that
+        lands between our check and the set_* call — an InvalidStateError
+        here must never escape into (and kill) the scheduler thread."""
+        try:
+            if future.cancelled():
+                return
+            if exc is not None:
+                future.set_exception(exc)
+            else:
+                future.set_result(result)
+        except InvalidStateError:
+            pass
+
+
+class MicroBatcher(Scheduler):
+    """Flush-based dynamic micro-batcher (DESIGN.md §8).
+
+    Concurrently submitted single-query requests land in the bounded
+    queue; the worker drains them into one `search_batch` call per
+    flush.  A flush fires when `max_batch` compatible requests are
+    waiting or when the oldest request has waited `max_wait_ms` — the
+    classic throughput/latency dial.
+
+    Shape bucketing: the real batch is padded (by replicating the first
+    request's query) up to the next power of two, capped at `max_batch`,
+    so every arrival pattern maps onto a handful of compiled executables
+    — zero recompiles after `warmup()` has touched each bucket.
+    Padded-row results are discarded; real results scatter back to
+    per-request futures.
+    """
+
+    kind = "microbatcher"
+
+    def __init__(self, run_batch, *, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, max_queue: int = 256,
+                 telemetry=None, verify_parity: bool = False,
+                 verify_lock=None, clock: Clock | None = None,
+                 name: str = "collection"):
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        self.verify_parity = verify_parity
+        # held across the batched call AND the parity re-runs, so a
+        # concurrent mutation cannot change the database between the two
+        # and fail the assert spuriously (pass the collection's RLock)
+        self.verify_lock = verify_lock
+        super().__init__(run_batch, max_batch=max_batch,
+                         max_queue=max_queue, telemetry=telemetry,
+                         clock=clock, name=name)
+
+    def warmup(self, example_q: np.ndarray, example_t: np.ndarray,
+               k: int = 10, *, ratio_k: float = 8.0, ef_search: int = 96):
+        """Compile every bucketed batch shape once, bypassing the queue."""
+        for b in batch_buckets(self.max_batch):
+            Q = np.broadcast_to(np.asarray(example_q), (b,) +
+                                np.asarray(example_q).shape).copy()
+            T = np.broadcast_to(np.asarray(example_t), (b,) +
+                                np.asarray(example_t).shape).copy()
+            self._run_batch(Q, T, k, ratio_k=ratio_k, ef_search=ef_search)
+
+    # ---------------------------------------------------------- scheduler
+
     def _loop(self):
         while True:
             with self._cv:
                 while not self._pending and not self._closed:
-                    self._cv.wait()
+                    self.clock.wait(self._cv, None)
                 if not self._pending:
                     return                       # closed and drained
                 head = self._pending[0]
@@ -188,13 +281,14 @@ class MicroBatcher:
                 while (not self._closed
                        and self._n_matching_locked(head.group)
                        < self.max_batch):
-                    remaining = deadline - time.monotonic()
+                    remaining = deadline - self.clock.now()
                     if remaining <= 0:
                         break
-                    self._cv.wait(timeout=remaining)
+                    self.clock.wait(self._cv, remaining)
                 batch = self._take_group_locked(head.group)
                 depth = len(self._pending)
-            self._flush(batch, depth)
+            if batch:                            # all discarded mid-wait?
+                self._flush(batch, depth)
 
     def _flush(self, batch: list[_Request], queue_depth: int):
         """Any failure lands on the batch's futures, never on the
@@ -214,7 +308,7 @@ class MicroBatcher:
                                              ef_search=ef_search)
                 # sojourn latency ends when results are computed — before
                 # the (debug-only) parity sweep, which would inflate p99
-                now = time.monotonic()
+                now = self.clock.now()
                 if self.verify_parity:           # engine parity, per request
                     for i, r in enumerate(batch):
                         single, _ = self._run_batch(
@@ -233,18 +327,3 @@ class MicroBatcher:
             self.telemetry.record_flush(
                 B, [now - r.t_enq for r in batch], stats.backend,
                 queue_depth)
-
-    @staticmethod
-    def _resolve(future: Future, result=None, exc=None):
-        """Deliver a result/exception, tolerating a client cancel() that
-        lands between our check and the set_* call — an InvalidStateError
-        here must never escape into (and kill) the scheduler thread."""
-        try:
-            if future.cancelled():
-                return
-            if exc is not None:
-                future.set_exception(exc)
-            else:
-                future.set_result(result)
-        except InvalidStateError:
-            pass

@@ -29,9 +29,16 @@ from ...core.ivf import IVFIndex
 from ..search_engine import SearchStats, SecureSearchEngine
 from .batcher import MicroBatcher
 from .ingest import DeltaAwareBackend, MutableEncryptedStore
+from .slot_loop import SlotLoop
 from .telemetry import CollectionTelemetry
 
-__all__ = ["Collection", "CollectionManager", "TenantIsolationError"]
+__all__ = ["Collection", "CollectionManager", "TenantIsolationError",
+           "SCHEDULERS"]
+
+# The serving schedulers a collection can run its request queue on
+# (DESIGN.md §12): "flush" = deadline/size micro-batching over bucketed
+# shapes; "continuous" = the slot-table loop (no deadline, one shape).
+SCHEDULERS = ("flush", "continuous")
 
 
 class TenantIsolationError(KeyError):
@@ -42,7 +49,8 @@ class TenantIsolationError(KeyError):
 
 class Collection:
     """One tenant's encrypted corpus: keys + store + index + engine +
-    micro-batcher + telemetry."""
+    request scheduler (flush micro-batcher or continuous slot loop) +
+    telemetry."""
 
     def __init__(self, tenant: str, name: str, d: int, *,
                  backend: str = "flat", sap_beta: float = 1.0,
@@ -50,7 +58,8 @@ class Collection:
                  use_kernel: bool = True, max_batch: int = 32,
                  max_wait_ms: float = 2.0, max_queue: int = 256,
                  compact_every: int = 4096, verify_parity: bool = False,
-                 keyless: bool = False, placement=None, **backend_kw):
+                 keyless: bool = False, placement=None,
+                 scheduler: str = "flush", clock=None, **backend_kw):
         self.tenant = tenant
         self.name = name
         self.d = d
@@ -89,11 +98,27 @@ class Collection:
         self._lock = threading.RLock()
         self.compact_every = int(compact_every)
         self.telemetry = CollectionTelemetry()
-        self.batcher = MicroBatcher(
-            self._run_batch, max_batch=max_batch, max_wait_ms=max_wait_ms,
-            max_queue=max_queue, telemetry=self.telemetry,
-            verify_parity=verify_parity, verify_lock=self._lock,
-            name=f"{tenant}/{name}")
+        # scheduler chooses HOW concurrent requests share engine calls
+        # (DESIGN.md §12) — orthogonal to placement, which chooses WHERE
+        # the engine executes; `self.batcher` keeps its name as the
+        # client-facing Scheduler handle either way.
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {scheduler!r} "
+                             f"(have {SCHEDULERS})")
+        self.scheduler = scheduler
+        if scheduler == "continuous":
+            self.batcher = SlotLoop(
+                self._run_batch, max_batch=max_batch, max_queue=max_queue,
+                d=d, cdim=dce.ciphertext_dim(d), telemetry=self.telemetry,
+                verify_parity=verify_parity, verify_lock=self._lock,
+                clock=clock, name=f"{tenant}/{name}")
+        else:
+            self.batcher = MicroBatcher(
+                self._run_batch, max_batch=max_batch,
+                max_wait_ms=max_wait_ms, max_queue=max_queue,
+                telemetry=self.telemetry, verify_parity=verify_parity,
+                verify_lock=self._lock, clock=clock,
+                name=f"{tenant}/{name}")
 
     # ------------------------------------------------------------ keys
 
@@ -360,6 +385,7 @@ class Collection:
     def stats(self) -> dict:
         snap = self.telemetry.snapshot()
         snap.update(tenant=self.tenant, collection=self.name,
+                    scheduler=self.scheduler,
                     n_total=self.store.n_total, n_alive=self.store.n_alive,
                     n_delta=self.store.delta_size)
         return snap

@@ -1,0 +1,186 @@
+"""Continuous-batching slot-table serving loop (DESIGN.md §12).
+
+The flush batcher's deadline is the p99 floor under open-loop traffic:
+a lone request waits `max_wait_ms` hoping for company, and mixed
+parameter groups head-of-line block behind the head group's deadline.
+`SlotLoop` removes the flush entirely, the way an LLM decode engine
+treats prefill/insert/generate: one persistent step over a fixed
+`(max_batch,)` **slot table** whose rows hold query/trapdoor data plus
+an active-slot validity mask.
+
+  insert   new requests are written into free slot rows the moment the
+           loop observes them — no deadline, no waiting for company;
+  step     one batched engine call over the WHOLE table, every step,
+           at the one compiled `(max_batch, d)` shape (inactive rows
+           carry stale/zero queries whose results are simply never
+           read — validity is data, not shape, exactly the `ok`
+           row-validity convention of the adc_topk kernels);
+  emit     completed rows scatter to their futures and the slots free.
+
+Because an ANN search completes in a single engine call (unlike
+iterative LLM decode), every active slot completes every step; the
+continuous structure still pays off exactly where the flush batcher
+hurts: a lone arrival is served immediately at the already-compiled
+full-table shape, and under load the table refills to occupancy ≈ 1
+with **zero** steady-state recompiles after a single `warmup()` — one
+executable per parameter group, not one per bucket.
+
+Requests sharing a step must agree on `(k, ratio_k, ef_search)` (the
+executables specialize on them); the loop admits the head group each
+step, FIFO, same as the flush batcher — so both schedulers serve any
+request stream with bit-identical per-request ids (engine parity:
+batched ids == per-query ids, independent of batch composition).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+from .batcher import Scheduler
+from .clock import Clock
+
+__all__ = ["SlotLoop"]
+
+
+class SlotLoop(Scheduler):
+    """Continuous-batching scheduler over one fixed slot table.
+
+    Same client contract as `MicroBatcher` (submit/search/warmup/close,
+    bounded-queue admission, futures, injected clock); the scheduling
+    policy is the difference: no deadline, no buckets, one shape.
+
+    `d`/`cdim` pre-allocate the table at construction (the runtime
+    knows its collection's dims); left None, the table is allocated
+    lazily from the first request's shapes — convenient for benches and
+    tests driving the loop standalone.
+    """
+
+    kind = "slotloop"
+
+    def __init__(self, run_batch, *, max_batch: int = 32,
+                 max_queue: int = 256, d: int | None = None,
+                 cdim: int | None = None, telemetry=None,
+                 verify_parity: bool = False, verify_lock=None,
+                 clock: Clock | None = None, name: str = "collection"):
+        self._Q = self._T = None
+        self._ok = np.zeros(int(max_batch), bool)
+        self._slots = [None] * int(max_batch)        # _Request per row
+        if d is not None and cdim is not None:
+            self._alloc(int(d), int(cdim))
+        self.verify_parity = verify_parity
+        self.verify_lock = verify_lock
+        super().__init__(run_batch, max_batch=max_batch,
+                         max_queue=max_queue, telemetry=telemetry,
+                         clock=clock, name=name)
+
+    # ---------------------------------------------------------- the table
+
+    def _alloc(self, d: int, cdim: int):
+        self._Q = np.zeros((self._ok.size, d), np.float32)
+        self._T = np.zeros((self._ok.size, cdim), np.float32)
+
+    @property
+    def capacity(self) -> int:
+        return self._ok.size
+
+    @property
+    def n_active(self) -> int:
+        return int(self._ok.sum())
+
+    def _insert(self, batch):
+        """Write requests into free slot rows; validity flips to True.
+        Rows of freed slots keep their stale queries — already-compiled
+        data the step computes and the emit never reads."""
+        if self._Q is None:
+            self._alloc(np.asarray(batch[0].Q).shape[-1],
+                        np.asarray(batch[0].T).shape[-1])
+        free = np.flatnonzero(~self._ok)
+        now = self.clock.now()
+        for slot, req in zip(free, batch):
+            self._Q[slot] = req.Q
+            self._T[slot] = req.T
+            self._ok[slot] = True
+            self._slots[slot] = req
+            req.t_insert = now
+
+    # ---------------------------------------------------------- scheduler
+
+    def warmup(self, example_q: np.ndarray, example_t: np.ndarray,
+               k: int = 10, *, ratio_k: float = 8.0, ef_search: int = 96):
+        """One full-table step per parameter group is the ENTIRE warmup:
+        the slot loop only ever runs the `(max_batch, d)` shape."""
+        eq = np.asarray(example_q)
+        et = np.asarray(example_t)
+        if self._Q is None:
+            self._alloc(eq.shape[-1], et.shape[-1])
+        Q = np.broadcast_to(eq, self._Q.shape).copy()
+        T = np.broadcast_to(et, self._T.shape).copy()
+        self._run_batch(Q, T, k, ratio_k=ratio_k, ef_search=ef_search)
+
+    def _loop(self):
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self.clock.wait(self._cv, None)
+                if not self._pending:
+                    return                       # closed and drained
+                # no deadline: launch the step with whatever is waiting.
+                # Head parameter group only — the executables specialize
+                # on (k, ratio_k, ef_search); other groups keep their
+                # queue position for the next step (steps are the unit
+                # of progress, so head-of-line blocking is one step, not
+                # one deadline).
+                group = self._pending[0].group
+                n_free = int((~self._ok).sum())
+                batch = self._take_group_locked(group, limit=n_free)
+                depth = len(self._pending)
+            if batch:                            # all discarded mid-wait?
+                self._insert(batch)
+                self._step(group, depth)
+
+    def _step(self, group: tuple, queue_depth: int):
+        """One batched engine call over the whole table; emit every
+        active row.  Any failure lands on the active slots' futures —
+        never on the loop thread — and the slots free either way."""
+        k, ratio_k, ef_search = group
+        active = np.flatnonzero(self._ok)
+        try:
+            lock = (self.verify_lock if self.verify_parity
+                    and self.verify_lock is not None
+                    else contextlib.nullcontext())
+            with lock:
+                ids, stats = self._run_batch(self._Q, self._T, k,
+                                             ratio_k=ratio_k,
+                                             ef_search=ef_search)
+                now = self.clock.now()
+                if self.verify_parity:           # engine parity, per slot
+                    for slot in active:
+                        r = self._slots[slot]
+                        single, _ = self._run_batch(
+                            r.Q[None], r.T[None], k, ratio_k=ratio_k,
+                            ef_search=ef_search)
+                        np.testing.assert_array_equal(ids[slot], single[0])
+        except Exception as exc:                 # noqa: BLE001 — to futures
+            for slot in active:
+                self._resolve(self._slots[slot].future, exc=exc)
+                self._free(slot)
+            return
+        sojourn, insert_to_emit = [], []
+        for slot in active:
+            r = self._slots[slot]
+            row = np.asarray(ids[slot])
+            self._resolve(r.future,
+                          result=(row, stats) if r.want_stats else row)
+            sojourn.append(now - r.t_enq)
+            insert_to_emit.append(now - r.t_insert)
+            self._free(slot)
+        if self.telemetry is not None:
+            self.telemetry.record_step(
+                len(active), self.capacity, sojourn, insert_to_emit,
+                stats.backend, queue_depth)
+
+    def _free(self, slot: int):
+        self._ok[slot] = False
+        self._slots[slot] = None

@@ -9,12 +9,17 @@ Counters and gauges per collection:
   * QPS over a sliding window;
   * batch occupancy (real requests per flushed batch — the coalescing
     win; > 1 means the micro-batcher is actually batching);
+  * slot occupancy (continuous scheduler, DESIGN.md §12: active slots /
+    table capacity per step, rolling mean — ≈ 1 at high arrival rate
+    means the slot table refills as fast as it emits) and step counts;
   * p50 / p99 request sojourn latency (enqueue -> result) from a bounded
-    reservoir of recent requests;
-  * queue depth gauge (set by the batcher on every transition);
+    reservoir of recent requests, plus insert -> emit sojourn for the
+    slot loop (time a request actually occupied a slot row);
+  * queue depth gauge (set by the scheduler on every transition);
   * jit recompile tracking: `jit_cache_size()` sums the executable-cache
     sizes of the jitted search/encrypt entry points, so a bench or test
-    can assert "zero recompiles after warmup across bucketed shapes".
+    can assert "zero recompiles after warmup across bucketed shapes"
+    (flush) or "zero recompiles after one warmup step" (continuous).
 """
 
 from __future__ import annotations
@@ -60,9 +65,12 @@ class CollectionTelemetry:
         self._lock = threading.Lock()
         self._latencies = collections.deque(maxlen=reservoir)
         self._flushes = collections.deque()        # (t, n_real_requests)
+        self._insert_to_emit = collections.deque(maxlen=reservoir)
+        self._slot_occ = collections.deque(maxlen=reservoir)
         self.n_requests = 0
         self.n_rejected = 0
         self.n_batches = 0
+        self.n_steps = 0
         self.n_batched_requests = 0
         self.n_inserts = 0
         self.n_deletes = 0
@@ -91,6 +99,24 @@ class CollectionTelemetry:
             self.last_backend = backend
             self._flushes.append((now, n_real))
             self._latencies.extend(float(x) for x in latencies_s)
+            horizon = now - self.window_s
+            while self._flushes and self._flushes[0][0] < horizon:
+                self._flushes.popleft()
+
+    def record_step(self, n_active: int, capacity: int, sojourn_s,
+                    insert_to_emit_s, backend: str, queue_depth: int):
+        """One slot-table step (DESIGN.md §12): n_active of capacity
+        slots held requests; both sojourn streams feed the reservoirs."""
+        now = time.monotonic()
+        with self._lock:
+            self.n_steps += 1
+            self.n_batched_requests += n_active
+            self.queue_depth = queue_depth
+            self.last_backend = backend
+            self._slot_occ.append(n_active / capacity if capacity else 0.0)
+            self._flushes.append((now, n_active))
+            self._latencies.extend(float(x) for x in sojourn_s)
+            self._insert_to_emit.extend(float(x) for x in insert_to_emit_s)
             horizon = now - self.window_s
             while self._flushes and self._flushes[0][0] < horizon:
                 self._flushes.popleft()
@@ -124,19 +150,26 @@ class CollectionTelemetry:
             # single fresh flush must not read as thousands of QPS
             span = min(self.window_s, now - self._t0)
             lat = sorted(self._latencies)
+            ins = sorted(self._insert_to_emit)
             occupancy = (self.n_batched_requests / self.n_batches
                          if self.n_batches else 0.0)
+            slot_occ = (sum(self._slot_occ) / len(self._slot_occ)
+                        if self._slot_occ else 0.0)
             return {
                 "backend": self.last_backend,
                 "n_requests": self.n_requests,
                 "n_rejected": self.n_rejected,
                 "n_batches": self.n_batches,
+                "n_steps": self.n_steps,
                 "n_inserts": self.n_inserts,
                 "n_deletes": self.n_deletes,
                 "n_compactions": self.n_compactions,
                 "queue_depth": self.queue_depth,
                 "qps": served / span if span > 0 else 0.0,
                 "batch_occupancy": occupancy,
+                "slot_occupancy": slot_occ,
                 "p50_latency_s": self._percentile(lat, 0.50),
                 "p99_latency_s": self._percentile(lat, 0.99),
+                "p50_insert_to_emit_s": self._percentile(ins, 0.50),
+                "p99_insert_to_emit_s": self._percentile(ins, 0.99),
             }

@@ -1,8 +1,16 @@
-"""Online serving runtime: micro-batcher scheduling, bucketed shapes,
-multi-tenant routing, telemetry, and admission control (DESIGN.md §8)."""
+"""Online serving runtime: scheduler unit behaviour (flush micro-batcher
++ continuous slot loop) on virtual time, bucketed shapes, multi-tenant
+routing, telemetry, and admission control (DESIGN.md §8, §12).
+
+Every scheduler test here drives time through the injected
+`VirtualClock` — no wall-clock sleeps, no timing-dependent assertions:
+a deadline fires exactly when the test `advance()`s past it, and
+`wait_for_waiters()` is the deterministic "the scheduler is parked on
+its deadline" sync point.
+"""
 
 import threading
-import time
+from concurrent.futures import TimeoutError as FutureTimeoutError
 
 import numpy as np
 import pytest
@@ -10,7 +18,8 @@ import pytest
 from repro.core import dcpe
 from repro.data import synth
 from repro.serving.runtime import (CollectionManager, MicroBatcher,
-                                   QueueFullError, TenantIsolationError,
+                                   QueueFullError, SlotLoop,
+                                   TenantIsolationError, VirtualClock,
                                    batch_buckets, jit_cache_size)
 from repro.serving.search_engine import SearchStats
 
@@ -25,21 +34,21 @@ def _fake_stats(nq):
 
 
 class FakeEngine:
-    """Deterministic run_batch: ids[i] = round(Q[i, 0]) .. +k, recorded."""
+    """Deterministic run_batch: ids[i] = round(Q[i, 0]) .. +k, recorded.
+    The gate is the only synchronization — no sleeps anywhere."""
 
-    def __init__(self, delay_s: float = 0.0):
+    def __init__(self):
         self.calls = []            # (batch_shape, k)
-        self.delay_s = delay_s
+        self.seen_bases = []       # every request value ever computed
         self.gate = threading.Event()
         self.gate.set()
 
     def __call__(self, Q, T, k, ratio_k=8.0, ef_search=96):
         self.gate.wait(timeout=10.0)
-        if self.delay_s:
-            time.sleep(self.delay_s)
         Q = np.atleast_2d(Q)
         self.calls.append((Q.shape, k))
         base = np.round(Q[:, 0]).astype(np.int64)
+        self.seen_bases.extend(int(b) for b in base)
         ids = base[:, None] + np.arange(k)[None, :]
         return ids, _fake_stats(Q.shape[0])
 
@@ -60,8 +69,10 @@ def test_batch_buckets_shapes():
 def test_coalesces_concurrent_requests_and_pads_to_bucket():
     eng = FakeEngine()
     eng.gate.clear()                       # hold the worker at the gate
-    with MicroBatcher(eng, max_batch=8, max_wait_ms=40.0) as mb:
+    vc = VirtualClock()
+    with MicroBatcher(eng, max_batch=8, max_wait_ms=40.0, clock=vc) as mb:
         futs = [mb.submit(*_req(i), K) for i in range(5)]
+        vc.advance(0.041)                  # virtual deadline passes
         eng.gate.set()
         res = [f.result(timeout=10) for f in futs]
     for i, ids in enumerate(res):          # results scatter to the right
@@ -72,32 +83,47 @@ def test_coalesces_concurrent_requests_and_pads_to_bucket():
 
 
 def test_full_batch_flushes_without_waiting_deadline():
+    """max_batch compatible requests flush by SIZE: virtual time never
+    advances, so any result proves the deadline was not involved."""
     eng = FakeEngine()
     eng.gate.clear()
-    with MicroBatcher(eng, max_batch=4, max_wait_ms=10_000.0) as mb:
+    vc = VirtualClock()
+    with MicroBatcher(eng, max_batch=4, max_wait_ms=10_000.0,
+                      clock=vc) as mb:
         futs = [mb.submit(*_req(i), K) for i in range(4)]
         eng.gate.set()
-        t0 = time.monotonic()
         for f in futs:
-            f.result(timeout=10)
-        assert time.monotonic() - t0 < 5.0     # did not sit out 10 s
+            f.result(timeout=10)           # resolves at t=0 virtual
+    assert vc.now() == 0.0
     assert eng.calls[0][0] == (4, D)
 
 
 def test_deadline_flush_for_lone_request():
+    """A lone request waits exactly until the virtual deadline: not
+    flushed before the advance, flushed right after."""
     eng = FakeEngine()
-    with MicroBatcher(eng, max_batch=32, max_wait_ms=30.0) as mb:
-        ids = mb.search(*_req(3), K, timeout=10)
-    np.testing.assert_array_equal(ids, 3 + np.arange(K))
-    assert eng.calls[0][0] == (1, D)           # bucket 1, no padding waste
+    vc = VirtualClock()
+    with MicroBatcher(eng, max_batch=32, max_wait_ms=30.0, clock=vc) as mb:
+        fut = mb.submit(*_req(3), K)
+        vc.wait_for_waiters(1)             # parked on the deadline
+        assert not fut.done()
+        vc.advance(0.029)                  # 29 ms: not yet due
+        vc.wait_for_waiters(1)
+        assert not fut.done()
+        vc.advance(0.002)                  # past 30 ms: flush
+        np.testing.assert_array_equal(fut.result(timeout=10),
+                                      3 + np.arange(K))
+    assert eng.calls[0][0] == (1, D)       # bucket 1, no padding waste
 
 
 def test_mixed_k_requests_flush_as_separate_groups():
     eng = FakeEngine()
     eng.gate.clear()
-    with MicroBatcher(eng, max_batch=8, max_wait_ms=30.0) as mb:
+    vc = VirtualClock()
+    with MicroBatcher(eng, max_batch=8, max_wait_ms=30.0, clock=vc) as mb:
         f1 = [mb.submit(*_req(i), 5) for i in range(3)]
         f2 = [mb.submit(*_req(10 + i), 7) for i in range(3)]
+        vc.advance(1.0)
         eng.gate.set()
         r1 = [f.result(timeout=10) for f in f1]
         r2 = [f.result(timeout=10) for f in f2]
@@ -109,7 +135,9 @@ def test_mixed_k_requests_flush_as_separate_groups():
 def test_backpressure_rejects_when_queue_full():
     eng = FakeEngine()
     eng.gate.clear()                       # wedge the worker
-    mb = MicroBatcher(eng, max_batch=2, max_wait_ms=5.0, max_queue=3)
+    vc = VirtualClock()
+    mb = MicroBatcher(eng, max_batch=2, max_wait_ms=5.0, max_queue=3,
+                      clock=vc)
     try:
         accepted = []
         with pytest.raises(QueueFullError):
@@ -117,10 +145,55 @@ def test_backpressure_rejects_when_queue_full():
                 accepted.append(mb.submit(*_req(i), K))
         assert len(accepted) >= 3          # queue capacity was usable
         eng.gate.set()
+        vc.advance(1.0)
         for f in accepted:
             f.result(timeout=10)           # backlog drains after release
     finally:
         mb.close()
+
+
+def test_search_timeout_discards_queued_request():
+    """Regression: `search()` timing out used to leave the request
+    queued — a dead future the scheduler later computed into, holding an
+    admission-control slot the whole time.  The timeout must cancel the
+    future AND free the queue slot."""
+    eng = FakeEngine()
+    eng.gate.clear()                       # worker wedges on request A
+    vc = VirtualClock()
+    mb = MicroBatcher(eng, max_batch=1, max_wait_ms=0.0, max_queue=2,
+                      clock=vc)
+    try:
+        fut_a = mb.submit(*_req(1), K)     # taken by the worker (size=1)
+        with pytest.raises(FutureTimeoutError):  # B stays queued behind A
+            mb.search(*_req(2), K, timeout=0.05)
+        # the timed-out request left the queue: both slots are free again
+        with mb._cv:
+            assert len(mb._pending) == 0
+        fut_c = mb.submit(*_req(3), K)
+        fut_d = mb.submit(*_req(4), K)     # full max_queue=2 available
+        eng.gate.set()
+        np.testing.assert_array_equal(fut_a.result(timeout=10),
+                                      1 + np.arange(K))
+        np.testing.assert_array_equal(fut_c.result(timeout=10),
+                                      3 + np.arange(K))
+        np.testing.assert_array_equal(fut_d.result(timeout=10),
+                                      4 + np.arange(K))
+        # the discarded request was never computed: only A, C, D flushed
+        assert len(eng.calls) == 3
+        assert 2 not in eng.seen_bases
+    finally:
+        mb.close()
+
+
+def test_discard_after_completion_keeps_result():
+    eng = FakeEngine()
+    with MicroBatcher(eng, max_batch=1, max_wait_ms=0.0) as mb:
+        fut = mb.submit(*_req(5), K)
+        np.testing.assert_array_equal(fut.result(timeout=10),
+                                      5 + np.arange(K))
+        assert mb.discard(fut) is False    # too late: result stands
+        np.testing.assert_array_equal(fut.result(timeout=0),
+                                      5 + np.arange(K))
 
 
 def test_malformed_request_fails_its_flush_not_the_scheduler():
@@ -128,16 +201,19 @@ def test_malformed_request_fails_its_flush_not_the_scheduler():
     survives and keeps serving later requests (liveness regression)."""
     eng = FakeEngine()
     eng.gate.clear()
-    with MicroBatcher(eng, max_batch=8, max_wait_ms=20.0) as mb:
+    vc = VirtualClock()
+    with MicroBatcher(eng, max_batch=8, max_wait_ms=20.0, clock=vc) as mb:
         good1 = mb.submit(*_req(1), K)
         bad = mb.submit(np.zeros(D + 3, np.float32),
                         np.zeros(2 * D + 16, np.float32), K)  # ragged Q
+        vc.advance(0.021)
         eng.gate.set()
         with pytest.raises(ValueError):          # np.stack shape mismatch
             bad.result(timeout=10)
         with pytest.raises(ValueError):
             good1.result(timeout=10)             # same doomed flush
         good2 = mb.submit(*_req(2), K)           # scheduler still alive
+        vc.advance(0.021)
         np.testing.assert_array_equal(good2.result(timeout=10),
                                       2 + np.arange(K))
 
@@ -147,14 +223,17 @@ def test_cancelled_future_does_not_kill_scheduler():
     or the scheduler thread (InvalidStateError race regression)."""
     eng = FakeEngine()
     eng.gate.clear()
-    with MicroBatcher(eng, max_batch=4, max_wait_ms=10.0) as mb:
+    vc = VirtualClock()
+    with MicroBatcher(eng, max_batch=4, max_wait_ms=10.0, clock=vc) as mb:
         f1 = mb.submit(*_req(1), K)
         f2 = mb.submit(*_req(2), K)
         assert f1.cancel()                     # still pending: cancellable
+        vc.advance(0.011)
         eng.gate.set()
         np.testing.assert_array_equal(f2.result(timeout=10),
                                       2 + np.arange(K))
         f3 = mb.submit(*_req(3), K)            # scheduler still alive
+        vc.advance(0.011)
         np.testing.assert_array_equal(f3.result(timeout=10),
                                       3 + np.arange(K))
 
@@ -163,21 +242,120 @@ def test_engine_exception_propagates_to_futures():
     def boom(Q, T, k, **kw):
         raise RuntimeError("engine down")
 
-    with MicroBatcher(boom, max_batch=4, max_wait_ms=5.0) as mb:
-        fut = mb.submit(*_req(0), K)
+    with MicroBatcher(boom, max_batch=1, max_wait_ms=5.0) as mb:
+        fut = mb.submit(*_req(0), K)           # size-1 flush: no deadline
         with pytest.raises(RuntimeError, match="engine down"):
             fut.result(timeout=10)
 
 
 def test_close_drains_pending_then_rejects():
-    eng = FakeEngine(delay_s=0.01)
-    mb = MicroBatcher(eng, max_batch=4, max_wait_ms=2.0)
+    eng = FakeEngine()
+    eng.gate.clear()                           # hold the first flush
+    vc = VirtualClock()
+    mb = MicroBatcher(eng, max_batch=4, max_wait_ms=2.0, clock=vc)
     futs = [mb.submit(*_req(i), K) for i in range(6)]
-    mb.close()
+    eng.gate.set()
+    mb.close()                                 # close drains, no deadline
     for f in futs:
         assert f.result(timeout=10) is not None
     with pytest.raises(RuntimeError):
         mb.submit(*_req(0), K)
+
+
+# --------------------------------------------------- slot loop (continuous)
+
+
+def test_slot_loop_serves_lone_request_with_no_deadline():
+    """The continuous scheduler's whole point: a lone arrival is served
+    immediately — virtual time stays at 0, nothing waits on a clock."""
+    eng = FakeEngine()
+    vc = VirtualClock()
+    with SlotLoop(eng, max_batch=8, clock=vc) as sl:
+        fut = sl.submit(*_req(3), K)
+        np.testing.assert_array_equal(fut.result(timeout=10),
+                                      3 + np.arange(K))
+    assert vc.now() == 0.0
+    assert eng.calls[0][0] == (8, D)           # the one table shape
+
+
+def test_slot_loop_runs_one_shape_only():
+    """Every step — lone request or full table — runs the (max_batch, d)
+    slot-table shape: one executable, zero recompiles by construction."""
+    eng = FakeEngine()
+    eng.gate.clear()
+    with SlotLoop(eng, max_batch=4, clock=VirtualClock()) as sl:
+        futs = [sl.submit(*_req(i), K) for i in range(7)]
+        eng.gate.set()
+        for i, f in enumerate(futs):
+            np.testing.assert_array_equal(f.result(timeout=10),
+                                          i + np.arange(K))
+    assert all(shape == (4, D) for shape, _ in eng.calls)
+    assert len(eng.calls) >= 2                 # 7 requests > one table
+
+
+def test_slot_loop_inserts_into_free_slots_and_emits():
+    """Requests admitted while the table is partly full land in free
+    rows; emitted rows free their slots for the next step."""
+    eng = FakeEngine()
+    eng.gate.clear()
+    with SlotLoop(eng, max_batch=2, clock=VirtualClock()) as sl:
+        futs = [sl.submit(*_req(i), K) for i in range(5)]
+        eng.gate.set()
+        res = [f.result(timeout=10) for f in futs]
+        assert sl.n_active == 0                # all slots freed
+    for i, ids in enumerate(res):
+        np.testing.assert_array_equal(ids, i + np.arange(K))
+
+
+def test_slot_loop_mixed_groups_step_separately():
+    eng = FakeEngine()
+    eng.gate.clear()
+    with SlotLoop(eng, max_batch=8, clock=VirtualClock()) as sl:
+        f1 = [sl.submit(*_req(i), 5) for i in range(3)]
+        f2 = [sl.submit(*_req(10 + i), 7) for i in range(3)]
+        eng.gate.set()
+        r1 = [f.result(timeout=10) for f in f1]
+        r2 = [f.result(timeout=10) for f in f2]
+    assert all(r.shape == (5,) for r in r1)
+    assert all(r.shape == (7,) for r in r2)
+    assert sorted(set(k for _, k in eng.calls)) == [5, 7]
+
+
+def test_slot_loop_backpressure_and_close():
+    eng = FakeEngine()
+    eng.gate.clear()
+    sl = SlotLoop(eng, max_batch=2, max_queue=3, clock=VirtualClock())
+    try:
+        accepted = []
+        with pytest.raises(QueueFullError):
+            for i in range(20):
+                accepted.append(sl.submit(*_req(i), K))
+        assert len(accepted) >= 3
+        eng.gate.set()
+        for f in accepted:
+            f.result(timeout=10)
+    finally:
+        sl.close()
+    with pytest.raises(RuntimeError):
+        sl.submit(*_req(0), K)
+
+
+def test_slot_loop_telemetry_occupancy_and_sojourn():
+    from repro.serving.runtime import CollectionTelemetry
+    eng = FakeEngine()
+    eng.gate.clear()
+    tel = CollectionTelemetry()
+    with SlotLoop(eng, max_batch=4, telemetry=tel,
+                  clock=VirtualClock()) as sl:
+        futs = [sl.submit(*_req(i), K) for i in range(4)]
+        eng.gate.set()
+        for f in futs:
+            f.result(timeout=10)
+    snap = tel.snapshot()
+    assert snap["n_steps"] >= 1
+    assert 0.0 < snap["slot_occupancy"] <= 1.0
+    assert snap["n_requests"] == 4
+    assert snap["p99_insert_to_emit_s"] >= 0.0
 
 
 # --------------------------------------------------------- tenancy routing
@@ -229,6 +407,11 @@ def test_default_seeds_yield_distinct_tenant_keys(mgr):
     assert not np.allclose(a.owner.keys.dce_key.M3, b.owner.keys.dce_key.M3)
 
 
+def test_unknown_scheduler_rejected(mgr):
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        mgr.create_collection("acme", "bad-sched", D, scheduler="nope")
+
+
 def test_submit_rejects_wrong_dimension_query(mgr, ds):
     col = mgr.create_collection("acme", "dims", D)
     col.insert(ds.base[:50])
@@ -269,6 +452,13 @@ def test_empty_collection_returns_sentinels(mgr):
     assert (ids == -1).all()
 
 
+def test_empty_collection_continuous_returns_sentinels(mgr):
+    mgr.create_collection("acme", "fresh-slot", D, scheduler="continuous")
+    q, t = _req(0)
+    ids = mgr.search("acme", "fresh-slot", q, t, K)
+    assert (ids == -1).all()
+
+
 def test_drop_collection(mgr, ds):
     mgr.create_collection("acme", "tmp", D)
     mgr.drop_collection("acme", "tmp")
@@ -297,6 +487,29 @@ def test_concurrent_clients_results_match_direct_engine(mgr, ds):
     assert snap["p99_latency_s"] >= snap["p50_latency_s"] > 0
     assert snap["n_alive"] == ds.n
     assert synth.recall_at_k(via_batcher, ds.gt, K) >= 0.8
+
+
+def test_continuous_collection_matches_direct_engine(mgr, ds):
+    """The slot loop through the full Collection path: parity-verified
+    per slot against the engine, occupancy + sojourn telemetry."""
+    col = mgr.create_collection("acme", "slot-main", D, seed=3,
+                                scheduler="continuous", max_batch=8,
+                                verify_parity=True)
+    col.insert(ds.base)
+    col.compact()
+    user = col.new_user()
+    enc = [user.encrypt_query(q) for q in ds.queries]
+    futs = [col.submit(c, t, K, ef_search=96) for c, t in enc]
+    via_slots = np.stack([f.result(timeout=30) for f in futs])
+    Q = np.stack([c for c, _ in enc])
+    T = np.stack([t for _, t in enc])
+    direct, _ = col.search_batch(Q, T, K, ef_search=96)
+    np.testing.assert_array_equal(via_slots, direct)
+    snap = col.stats()
+    assert snap["scheduler"] == "continuous"
+    assert snap["n_steps"] >= 1
+    assert snap["slot_occupancy"] > 0.0
+    assert synth.recall_at_k(via_slots, ds.gt, K) >= 0.8
 
 
 def test_zero_recompiles_across_bucketed_batch_sizes(mgr, ds):
@@ -332,21 +545,42 @@ def test_zero_recompiles_across_bucketed_batch_sizes(mgr, ds):
     assert jit_cache_size() == settled
 
 
+def test_slot_loop_zero_recompiles_after_single_warmup(mgr, ds):
+    """The continuous scheduler's compile story: ONE warmup step, then
+    ragged arrival patterns all hit the one (max_batch, d) executable."""
+    col = mgr.create_collection("acme", "slot-warm", D, seed=4,
+                                scheduler="continuous", max_batch=8)
+    col.insert(ds.base)
+    col.compact()
+    col.warmup(K, ratio_k=8.0, ef_search=96)   # one full-table step
+    user = col.new_user()
+    enc = [user.encrypt_query(q) for q in ds.queries]
+    before = jit_cache_size()
+    for burst in (1, 5, 2, 6, 1, 3):           # ragged arrival patterns
+        futs = [col.submit(*enc[i % len(enc)], K, ef_search=96)
+                for i in range(burst)]
+        for f in futs:
+            f.result(timeout=30)
+    assert jit_cache_size() == before          # zero steady-state compiles
+
+
 def test_telemetry_counts_rejects(ds):
     beta = dcpe.suggest_beta(ds.base, fraction=0.03)
     col = None
     try:
         from repro.serving.runtime import Collection
+        vc = VirtualClock()
         col = Collection("t", "c", D, sap_beta=beta, max_queue=1,
-                         max_wait_ms=200.0)
+                         max_wait_ms=200.0, clock=vc)
         col.insert(ds.base[:50])
         user = col.new_user()
         q, t = user.encrypt_query(ds.queries[0])
-        # requests sit in the queue during the deadline wait, so with
-        # max_queue=1 the second concurrent submit is shed immediately
+        # the request sits in the queue until the (virtual) deadline, so
+        # with max_queue=1 the second submit is shed deterministically
         fut = col.submit(q, t, K)
         with pytest.raises(QueueFullError):
             col.submit(q, t, K)
+        vc.advance(0.21)                       # fire the deadline flush
         assert fut.result(timeout=30) is not None
         assert col.telemetry.snapshot()["n_rejected"] == 1
     finally:

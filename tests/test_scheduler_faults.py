@@ -1,0 +1,214 @@
+"""Fault injection against both serving schedulers (DESIGN.md §12).
+
+The liveness contract: a fault — the engine raising mid-step, a client
+cancelling a request that is already being computed, `close()` landing
+while a drain is in flight — fails ONLY the affected futures.  The
+scheduler thread survives (or exits cleanly on close), later requests
+are served correctly, and nothing wedges.  Exercised on the fake engine
+for both schedulers, and on real engines under single and sharded
+placement via an injected `_run_batch` wrapper.
+"""
+
+import threading
+from concurrent.futures import CancelledError
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import dcpe
+from repro.data import synth
+from repro.serving.runtime import Collection, MicroBatcher, SlotLoop
+from repro.serving.search_engine import SearchStats
+
+D = 18
+K = 5
+KINDS = ("flush", "continuous")
+
+
+class FaultyEngine:
+    """Deterministic ids (base = round(Q[i,0]), +arange(k)) with two
+    fault hooks: `fail_next` raises once mid-step; `in_call`/`gate`
+    expose the window while a step is being computed."""
+
+    def __init__(self):
+        self.fail_next = False
+        self.in_call = threading.Event()
+        self.gate = threading.Event()
+        self.gate.set()
+        self.n_calls = 0
+
+    def __call__(self, Q, T, k, ratio_k=8.0, ef_search=96):
+        self.in_call.set()
+        try:
+            self.gate.wait(timeout=10.0)
+            self.n_calls += 1
+            if self.fail_next:
+                self.fail_next = False
+                raise RuntimeError("injected engine fault")
+            Q = np.atleast_2d(Q)
+            base = np.round(Q[:, 0]).astype(np.int64)
+            ids = base[:, None] + np.arange(k)[None, :]
+            return ids, SearchStats(latency_s=0.0, filter_dist_evals=0,
+                                    refine_comparisons=0, bytes_up=0,
+                                    bytes_down=0, n_queries=Q.shape[0],
+                                    backend="faulty")
+        finally:
+            self.in_call.clear()
+
+
+def _mk(kind, eng, **kw):
+    # real clock on purpose: these tests assert resolution and liveness,
+    # never timing, and the flush deadline must fire on its own here
+    kw.setdefault("max_batch", 4)
+    if kind == "flush":
+        return MicroBatcher(eng, max_wait_ms=5.0, **kw)
+    return SlotLoop(eng, **kw)
+
+
+def _req(i):
+    return np.full(D, float(i), np.float32), np.zeros(2 * D + 16, np.float32)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_engine_fault_fails_only_that_step(kind):
+    """A raising step fails exactly the futures riding it; the worker
+    survives and the very next step succeeds (slots/buckets freed)."""
+    eng = FaultyEngine()
+    eng.gate.clear()
+    with _mk(kind, eng) as sched:
+        eng.fail_next = True
+        doomed = [sched.submit(*_req(i), K) for i in (1, 2)]
+        eng.gate.set()
+        for fut in doomed:
+            with pytest.raises(RuntimeError, match="injected engine fault"):
+                fut.result(timeout=10)
+        ok = sched.submit(*_req(3), K)          # scheduler still alive,
+        np.testing.assert_array_equal(ok.result(timeout=10),
+                                      3 + np.arange(K))
+        if kind == "continuous":                # and its slots were freed
+            assert sched.n_active == 0
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_repeated_faults_never_wedge_the_scheduler(kind):
+    eng = FaultyEngine()
+    with _mk(kind, eng) as sched:
+        for i in range(1, 6):
+            eng.fail_next = True
+            with pytest.raises(RuntimeError):
+                sched.submit(*_req(i), K).result(timeout=10)
+            good = sched.submit(*_req(10 + i), K).result(timeout=10)
+            np.testing.assert_array_equal(good, 10 + i + np.arange(K))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_cancel_racing_emission(kind):
+    """cancel() landing while the request's step is mid-computation: the
+    emission path hits an already-cancelled future and must shrug it off
+    — no InvalidStateError escapes, the next request is served."""
+    eng = FaultyEngine()
+    with _mk(kind, eng) as sched:
+        for i in range(1, 8):                   # repeat: widen the race
+            eng.gate.clear()
+            fut = sched.submit(*_req(i), K)
+            assert eng.in_call.wait(timeout=10)  # step is computing NOW
+            fut.cancel()                         # race the emission
+            eng.gate.set()
+            ok = sched.submit(*_req(100 + i), K)
+            np.testing.assert_array_equal(ok.result(timeout=10),
+                                          100 + i + np.arange(K))
+            assert fut.done()                    # cancelled or resolved,
+            if not fut.cancelled():              # never leaked pending
+                assert fut.result(timeout=0).shape == (K,)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_close_during_drain_serves_or_fails_never_wedges(kind):
+    """close() while a step is wedged in the engine: the drain finishes
+    once the engine returns, every accepted future resolves, close()
+    returns, and later submits are rejected cleanly."""
+    eng = FaultyEngine()
+    eng.gate.clear()
+    sched = _mk(kind, eng)
+    futs = [sched.submit(*_req(i), K) for i in range(1, 7)]
+    closer = threading.Thread(target=sched.close)
+    closer.start()
+    assert eng.in_call.wait(timeout=10)         # close raced a live step
+    eng.gate.set()
+    closer.join(timeout=30)
+    assert not closer.is_alive(), "close() wedged during drain"
+    for i, fut in enumerate(futs, start=1):
+        assert fut.done()
+        np.testing.assert_array_equal(fut.result(timeout=0),
+                                      i + np.arange(K))
+    with pytest.raises(RuntimeError):
+        sched.submit(*_req(99), K)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_cancelled_requests_dropped_by_close(kind):
+    """Requests still queued when close() lands are drained; requests a
+    client discarded first stay cancelled — exactly-once either way."""
+    eng = FaultyEngine()
+    eng.gate.clear()
+    sched = _mk(kind, eng, max_batch=1)
+    kept = sched.submit(*_req(1), K)
+    dropped = sched.submit(*_req(2), K)
+    sched.discard(dropped)
+    eng.gate.set()
+    sched.close()
+    np.testing.assert_array_equal(kept.result(timeout=0), 1 + np.arange(K))
+    assert dropped.cancelled()
+    with pytest.raises(CancelledError):
+        dropped.result(timeout=0)
+
+
+# ---------------------------------------------------------------------------
+# Real engines, single + sharded placement: inject a one-shot fault into
+# the collection's _run_batch and require full recovery with exact ids.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ds():
+    return synth.make_dataset("sift1m", n=250, n_queries=5, k_gt=10,
+                              seed=4, d=D)
+
+
+@pytest.mark.parametrize("placement_kind", ["single", "sharded"])
+@pytest.mark.parametrize("kind", KINDS)
+def test_real_engine_fault_recovery(ds, kind, placement_kind):
+    placement = None
+    if placement_kind == "sharded":
+        from repro.api import PlacementSpec
+        placement = PlacementSpec(kind="sharded",
+                                  n_shards=min(2, jax.device_count()))
+    beta = dcpe.suggest_beta(ds.base, fraction=0.03)
+    col = Collection("t", f"flt-{kind}-{placement_kind}", D, sap_beta=beta,
+                     seed=9, scheduler=kind, max_batch=4, max_wait_ms=2.0,
+                     placement=placement)
+    try:
+        col.insert(ds.base)
+        col.compact()
+        user = col.new_user()
+        enc = [user.encrypt_query(q) for q in ds.queries]
+        baseline = [col.search(*e, K) for e in enc]
+
+        real = col.batcher._run_batch
+        state = {"armed": True}
+
+        def faulty(Q, T, k, **kw):
+            if state["armed"]:
+                state["armed"] = False
+                raise RuntimeError("injected mid-stream fault")
+            return real(Q, T, k, **kw)
+
+        col.batcher._run_batch = faulty
+        with pytest.raises(RuntimeError, match="injected mid-stream"):
+            col.search(*enc[0], K)
+        # the scheduler recovered: the whole stream still answers with
+        # ids bit-identical to the pre-fault baseline
+        for e, want in zip(enc, baseline):
+            np.testing.assert_array_equal(col.search(*e, K), want)
+    finally:
+        col.close()

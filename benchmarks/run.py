@@ -93,8 +93,8 @@ def main() -> None:
 
     from . import (bench_attacks, bench_baselines, bench_batched,
                    bench_beta, bench_encrypt, bench_filter, bench_kernels,
-                   bench_ratio_k, bench_refine, bench_roofline,
-                   bench_runtime, bench_scalability)
+                   bench_profile, bench_ratio_k, bench_refine,
+                   bench_roofline, bench_runtime, bench_scalability)
 
     suites = {
         "fig4_beta": lambda: bench_beta.run(
@@ -117,6 +117,14 @@ def main() -> None:
         # quantized ADC filter path: f32 vs int8 vs pq8 (DESIGN.md §11);
         # also writes the repo-root BENCH_filter.json trajectory record
         "filter": lambda: bench_filter.run(
+            sizes=(10_000, 100_000, 200_000) if args.full
+            else (10_000, 100_000)),
+        # span-level filter/refine stage timing + kernel-level op timing
+        # per backend (DESIGN.md §13); also writes the repo-root
+        # BENCH_profile.json trajectory record.  The hard gate (obs
+        # overhead <= 5%) lives in
+        # `python -m benchmarks.bench_profile --smoke` (CI)
+        "profile": lambda: bench_profile.run(
             sizes=(10_000, 100_000, 200_000) if args.full
             else (10_000, 100_000)),
         "batched_engine": lambda: bench_batched.run(

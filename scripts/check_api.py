@@ -113,6 +113,7 @@ def check_api_exports() -> list[str]:
         errors.append(f"repro.api must export {name} (placement-aware "
                       f"surface contract, DESIGN.md §10)")
     errors.extend(check_quantization_surface(api))
+    errors.extend(check_obs_surface(api))
     return errors
 
 
@@ -146,6 +147,43 @@ def check_quantization_surface(api) -> list[str]:
             errors.append(f"IndexSpec must reject {bad}")
         except ValueError:
             pass
+    return errors
+
+
+# Names that MUST stay exported by repro.obs — the observability
+# surface contract (DESIGN.md §13).
+REQUIRED_OBS_EXPORTS = {
+    "Observability", "TraceRecorder", "NullRecorder", "NULL_RECORDER",
+    "Span", "child_span", "child_complete", "current",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "KernelProfiler", "profile_kernels", "instrument", "active_profiler",
+    "start_metrics_server",
+}
+
+
+def check_obs_surface(api) -> list[str]:
+    """The observability surface contract (DESIGN.md §13): repro.obs
+    exports the tracing/metrics/profiling entry points, the service
+    exposes the export methods, and SearchRequest carries trace_id over
+    the wire."""
+    import dataclasses
+    errors = []
+    try:
+        import repro.obs as obs
+    except Exception as e:                          # noqa: BLE001
+        return [f"import repro.obs failed: {type(e).__name__}: {e}"]
+    for name in sorted(REQUIRED_OBS_EXPORTS):
+        if not hasattr(obs, name):
+            errors.append(f"repro.obs must export {name} (observability "
+                          f"surface contract, DESIGN.md §13)")
+    for meth in ("metrics_text", "trace_events", "export_chrome_trace"):
+        if not callable(getattr(api.SecureAnnService, meth, None)):
+            errors.append(f"SecureAnnService must expose {meth}() "
+                          f"(DESIGN.md §13)")
+    fields = {f.name for f in dataclasses.fields(api.SearchRequest)}
+    if "trace_id" not in fields:
+        errors.append("SearchRequest must carry trace_id "
+                      "(client-propagated correlation id, DESIGN.md §13)")
     return errors
 
 

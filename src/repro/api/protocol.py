@@ -406,20 +406,30 @@ class SearchRequest:
     coalesce=True lets a single-query request ride the service's
     micro-batcher (throughput under concurrency); batch requests and
     coalesce=False go straight to one locked engine call.
+
+    trace_id (optional) names the request's trace when the service runs
+    with observability on (DESIGN.md §13) — a client-propagated
+    correlation id, carried additively on the wire (old payloads decode
+    with trace_id=None, same pattern as coalesce).  It never influences
+    the search result.
     """
     tenant: str
     collection: str
     query: EncryptedQuery
     params: SearchParams = dataclasses.field(default_factory=SearchParams)
     coalesce: bool = True
+    trace_id: str | None = None
 
     def to_bytes(self) -> bytes:
+        meta = {"tenant": self.tenant,
+                "collection": self.collection,
+                "params": self.params.to_dict(),
+                "coalesce": bool(self.coalesce)}
+        if self.trace_id is not None:
+            meta["trace_id"] = str(self.trace_id)
         return pack("search-request", PROTOCOL_VERSION,
                     arrays={"C_sap": self.query.C_sap, "T": self.query.T},
-                    meta={"tenant": self.tenant,
-                          "collection": self.collection,
-                          "params": self.params.to_dict(),
-                          "coalesce": bool(self.coalesce)})
+                    meta=meta)
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "SearchRequest":
@@ -429,7 +439,8 @@ class SearchRequest:
                        query=EncryptedQuery(C_sap=arrays["C_sap"],
                                             T=arrays["T"]),
                        params=SearchParams.from_dict(meta["params"]),
-                       coalesce=bool(meta.get("coalesce", True)))
+                       coalesce=bool(meta.get("coalesce", True)),
+                       trace_id=meta.get("trace_id"))
         except (KeyError, TypeError, ValueError) as e:
             raise WireFormatError(f"bad search-request payload: {e}") from e
 

@@ -31,6 +31,7 @@ import numpy as np
 
 from ..core import ppanns
 from ..core.wireformat import WireFormatError, pack, unpack
+from ..obs import Observability
 from ..serving.runtime import CollectionManager, QueueFullError  # noqa: F401
 from ..serving.runtime import TenantIsolationError               # noqa: F401
 from ..serving.runtime.collections import Collection
@@ -210,9 +211,25 @@ class SecureAnnService:
     continuous slot loop — DESIGN.md §12), tenant isolation, live
     ingestion, and telemetry of the serving runtime (DESIGN.md §8) all
     ride underneath unchanged.
+
+    Observability (DESIGN.md §13): `obs=True` (or a pre-built
+    `repro.obs.Observability`) turns on per-request tracing and the
+    cross-collection Prometheus metrics registry for every collection
+    this service creates — exposed through `metrics_text()`,
+    `export_chrome_trace()`, and `trace_events()`.  Default off: no
+    recorder exists and the runtime records nothing.
     """
 
-    def __init__(self, *, result_timeout: float = 120.0, **default_kw):
+    def __init__(self, *, result_timeout: float = 120.0, obs=None,
+                 **default_kw):
+        if obs is True:
+            obs = Observability(clock=default_kw.get("clock"))
+        self.obs: Observability | None = obs
+        if obs is not None:
+            # every collection inherits the service-wide recorder and
+            # registry unless the caller overrides per collection
+            default_kw.setdefault("tracer", obs.recorder)
+            default_kw.setdefault("metrics", obs.metrics)
         self._mgr = CollectionManager(**default_kw)
         self._specs: dict[tuple[str, str], IndexSpec] = {}
         self._placements: dict[tuple[str, str], PlacementSpec] = {}
@@ -314,7 +331,7 @@ class SecureAnnService:
         if req.coalesce and req.query.nq == 1 and p.refine == "tournament":
             fut = col.submit(req.query.C_sap[0], req.query.T[0], p.k,
                              ratio_k=p.ratio_k, ef_search=p.ef_search,
-                             want_stats=True)
+                             want_stats=True, trace_id=req.trace_id)
             ids_row, stats = fut.result(timeout=self.result_timeout)
             return SearchResult(ids=ids_row[None], stats=stats)
         ids, stats = col.search_batch(
@@ -404,6 +421,29 @@ class SecureAnnService:
                 graph_arrays=graph_arrays, ivf_state=ivf_state,
                 adc_state=adc_state)
         return svc
+
+    # ---------------------------------------------------- observability
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the service-wide registry
+        (DESIGN.md §13).  With observability off, a parseable
+        comment-only document — a scrape target that is wired up but
+        dark, rather than an error."""
+        if self.obs is None:
+            return ("# observability disabled "
+                    "(construct SecureAnnService with obs=True)\n")
+        return self.obs.metrics_text()
+
+    def trace_events(self) -> list[dict]:
+        """The recorder's structured event log ([] with obs off)."""
+        return [] if self.obs is None else self.obs.events()
+
+    def export_chrome_trace(self, path: str | os.PathLike) -> str:
+        """Write the recorded spans as Chrome-trace/Perfetto JSON."""
+        if self.obs is None:
+            raise RuntimeError("observability is off: construct "
+                               "SecureAnnService with obs=True")
+        return self.obs.export_chrome_trace(path)
 
     # ------------------------------------------------------------- misc
 

@@ -40,6 +40,12 @@ def main(argv=None):
                     help="row-shard the ANN collection over this many "
                          "devices (0 = single-device placement; -1 = "
                          "every local device) — DESIGN.md §10")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="serve Prometheus metrics for the ANN sidecar on "
+                         "this port (0 = disabled) — DESIGN.md §13")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace JSON of the ANN sidecar's "
+                         "request spans to this path on exit")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).smoke()
@@ -78,7 +84,15 @@ def main(argv=None):
             placement = PlacementSpec(
                 kind="sharded",
                 n_shards=None if args.ann_shards < 0 else args.ann_shards)
-        with SecureAnnService() as svc:
+        want_obs = bool(args.metrics_port or args.trace_out)
+        with SecureAnnService(obs=want_obs or None) as svc:
+            metrics_server = None
+            if args.metrics_port:
+                from repro.obs import start_metrics_server
+                metrics_server = start_metrics_server(
+                    svc, args.metrics_port)
+                print("[serve] metrics at http://localhost:"
+                      f"{metrics_server.server_address[1]}/metrics")
             svc.create_collection(spec, placement=placement)
             owner = DataOwnerClient(spec)       # keys stay client-side
             t0 = time.time()
@@ -102,6 +116,11 @@ def main(argv=None):
                   f"recall@10={rec:.3f} in {dt:.2f}s "
                   f"(occupancy={snap['batch_occupancy']:.1f}, "
                   f"p99={1e3 * snap['p99_latency_s']:.1f}ms)")
+            if args.trace_out:
+                svc.export_chrome_trace(args.trace_out)
+                print(f"[serve] wrote Chrome trace to {args.trace_out}")
+            if metrics_server is not None:
+                metrics_server.shutdown()
     return out
 
 

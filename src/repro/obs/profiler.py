@@ -1,0 +1,138 @@
+"""Opt-in timed wrappers around the Pallas/XLA kernel entry points.
+
+The three kernel families (`l2_topk`, `dce_comp`, `adc_topk`) expose
+jitted module-level functions; each `ops.py` rebinds them through
+`instrument(name, fn)` at import time.  The wrapper is a strict
+passthrough — zero recording, one module-global read — unless a
+`KernelProfiler` has been activated via `profile_kernels()`.
+
+When active, each call is fenced with `jax.block_until_ready` and
+timed on the host (on CPU/single-stream TPU this equals device time;
+with async dispatch it is an upper bound that includes dispatch), and
+the positional-argument `.nbytes` sum is recorded as bytes touched.
+Two correctness subtleties the wrapper must preserve:
+
+  * `batched_top_k_by_wins` is ALSO called inside jitted engine code
+    (`refine_candidates`, `_sharded_refine`).  During tracing its args
+    are `jax.core.Tracer`s and blocking would be meaningless — the
+    wrapper detects tracer args and passes straight through, so only
+    genuine op-level (host-initiated) calls are recorded.
+  * `jit_cache_size()` introspects `fn._cache_size` on these entry
+    points for the recompile audit — the wrapper copies it through.
+
+`profile_kernels()` also opens a `jax.profiler.TraceAnnotation` around
+each recorded call so the ops show up named in a `jax.profiler` deep
+dive when one is being captured.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+import time
+
+__all__ = ["KernelProfiler", "profile_kernels", "instrument",
+           "active_profiler"]
+
+# The single active profiler (None = disabled). One module-global read
+# on the hot path; writes only via profile_kernels().
+_ACTIVE: "KernelProfiler | None" = None
+_ACTIVE_LOCK = threading.Lock()
+
+
+class KernelProfiler:
+    """Per-kernel call/time/bytes accumulator."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stats: dict[str, dict] = {}
+
+    def record(self, name: str, seconds: float, nbytes: int):
+        with self._lock:
+            s = self._stats.setdefault(
+                name, {"calls": 0, "total_s": 0.0, "total_bytes": 0})
+            s["calls"] += 1
+            s["total_s"] += seconds
+            s["total_bytes"] += nbytes
+
+    def summary(self) -> dict[str, dict]:
+        """{kernel name: {calls, total_s, total_bytes}} snapshot."""
+        with self._lock:
+            return {k: dict(v) for k, v in self._stats.items()}
+
+    def reset(self):
+        with self._lock:
+            self._stats.clear()
+
+    def total_seconds(self, prefix: str = "") -> float:
+        return sum(v["total_s"] for k, v in self.summary().items()
+                   if k.startswith(prefix))
+
+    def total_bytes(self, prefix: str = "") -> int:
+        return sum(v["total_bytes"] for k, v in self.summary().items()
+                   if k.startswith(prefix))
+
+
+def active_profiler() -> KernelProfiler | None:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def profile_kernels(profiler: KernelProfiler | None = None):
+    """Activate kernel profiling for the dynamic extent of the block.
+
+        with profile_kernels() as prof:
+            engine.search_batch(Q, T, k)
+        prof.summary()  # {"adc_topk.sq_knn": {...}, "dce_comp...": ...}
+
+    Not reentrant across threads by design: one global profiler keeps
+    the disabled path to a single load; nested activations stack.
+    """
+    global _ACTIVE
+    prof = profiler if profiler is not None else KernelProfiler()
+    with _ACTIVE_LOCK:
+        prev = _ACTIVE
+        _ACTIVE = prof
+    try:
+        yield prof
+    finally:
+        with _ACTIVE_LOCK:
+            _ACTIVE = prev
+
+
+def _args_nbytes(args) -> int:
+    total = 0
+    for a in args:
+        nb = getattr(a, "nbytes", None)
+        if nb is not None:
+            total += int(nb)
+    return total
+
+
+def instrument(name: str, fn):
+    """Wrap a jitted kernel entry point with the opt-in timer."""
+    import jax
+
+    tracer_cls = jax.core.Tracer
+    annotation = getattr(jax.profiler, "TraceAnnotation", None)
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        prof = _ACTIVE
+        if prof is None or any(isinstance(a, tracer_cls) for a in args):
+            return fn(*args, **kwargs)
+        ctx = annotation(name) if annotation is not None \
+            else contextlib.nullcontext()
+        t0 = time.perf_counter()
+        with ctx:
+            out = jax.block_until_ready(fn(*args, **kwargs))
+        prof.record(name, time.perf_counter() - t0, _args_nbytes(args))
+        return out
+
+    # jit_cache_size() (telemetry.py) audits recompiles through this
+    # attribute — it must survive the wrap.
+    if hasattr(fn, "_cache_size"):
+        wrapper._cache_size = fn._cache_size
+    wrapper.__wrapped__ = fn
+    return wrapper

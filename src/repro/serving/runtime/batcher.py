@@ -67,6 +67,17 @@ class _Request:                        # make generated __eq__ ambiguous
     t_enq: float
     want_stats: bool = False      # future resolves to (ids, flush stats)
     t_insert: float = 0.0         # slot loop: when the row entered a slot
+    span: object = None           # open obs "request" span (tracing on)
+    trace_id: str = ""
+
+
+def _stats_attrs(stats) -> dict:
+    """SearchStats -> span attributes (paper §V-C cost counters)."""
+    return {"backend": stats.backend, "n_queries": stats.n_queries,
+            "filter_dist_evals": stats.filter_dist_evals,
+            "refine_comparisons": stats.refine_comparisons,
+            "filter_bytes_scanned": stats.filter_bytes_scanned,
+            "bytes_up": stats.bytes_up, "bytes_down": stats.bytes_down}
 
 
 class Scheduler(abc.ABC):
@@ -84,7 +95,8 @@ class Scheduler(abc.ABC):
 
     def __init__(self, run_batch, *, max_batch: int = 32,
                  max_queue: int = 256, telemetry=None,
-                 clock: Clock | None = None, name: str = "collection"):
+                 clock: Clock | None = None, name: str = "collection",
+                 tracer=None):
         if max_batch < 1 or max_queue < 1:
             raise ValueError("max_batch and max_queue must be >= 1")
         self._run_batch = run_batch
@@ -92,6 +104,13 @@ class Scheduler(abc.ABC):
         self.max_queue = int(max_queue)
         self.telemetry = telemetry
         self.clock = clock if clock is not None else SystemClock()
+        self.name = name
+        # obs (DESIGN.md §13): a repro.obs.TraceRecorder, or None = off.
+        # Every recording call below is guarded on `is not None`, so the
+        # disabled path costs one attribute read per flush.
+        self.tracer = tracer
+        self._req_seq = 0             # request trace ids  {name}:rN
+        self._batch_seq = 0           # batch  trace ids  {name}:bN / :sN
         self._pending: collections.deque[_Request] = collections.deque()
         self._cv = threading.Condition()
         self._closed = False
@@ -103,12 +122,17 @@ class Scheduler(abc.ABC):
 
     def submit(self, C_sap_q: np.ndarray, T_q: np.ndarray, k: int, *,
                ratio_k: float = 8.0, ef_search: int = 96,
-               want_stats: bool = False) -> Future:
+               want_stats: bool = False,
+               trace_id: str | None = None) -> Future:
         """Enqueue one query; resolves to its (k,) id vector — or, with
         want_stats, to (ids, SearchStats of the enclosing batched call),
         so a protocol-level caller can report the engine's uniform
         accounting (stats.n_queries tells it how many requests rode the
-        same engine call)."""
+        same engine call).
+
+        trace_id names the request's trace when tracing is on (a client-
+        propagated id, DESIGN.md §13); None autogenerates `{name}:rN`.
+        """
         req = _Request(
             Q=np.asarray(C_sap_q), T=np.asarray(T_q),
             group=(int(k), float(ratio_k), int(ef_search)),
@@ -122,6 +146,15 @@ class Scheduler(abc.ABC):
                     self.telemetry.record_reject()
                 raise QueueFullError(
                     f"queue at max_queue={self.max_queue}; shed load")
+            if self.tracer is not None:
+                # the root span opens at admission and closes at emit;
+                # queue/flush/slot/emit children are stamped by the
+                # scheduler from clock readings it takes anyway
+                req.trace_id = trace_id or f"{self.name}:r{self._req_seq}"
+                self._req_seq += 1
+                req.span = self.tracer.start_span(
+                    "request", req.trace_id, collection=self.name,
+                    scheduler=self.kind, k=int(k))
             self._pending.append(req)
             if self.telemetry is not None:
                 self.telemetry.record_submit(len(self._pending))
@@ -148,12 +181,17 @@ class Scheduler(abc.ABC):
         """Withdraw a submitted request: drop it from the queue if still
         pending and cancel its future.  Returns True when the future was
         cancelled (False = it already completed; the result stands)."""
+        removed = None
         with self._cv:
             for r in self._pending:
                 if r.future is future:
+                    removed = r
                     self._pending.remove(r)
                     break
-        return future.cancel()
+        cancelled = future.cancel()
+        if removed is not None and removed.span is not None:
+            self.tracer.end_span(removed.span, cancelled=True)
+        return cancelled
 
     @abc.abstractmethod
     def warmup(self, example_q: np.ndarray, example_t: np.ndarray,
@@ -178,6 +216,8 @@ class Scheduler(abc.ABC):
                     self._resolve(r.future, exc=RuntimeError(
                         f"{self.kind} closed before this request was "
                         f"served"))
+                    if r.span is not None:
+                        self.tracer.end_span(r.span, error="stranded")
 
     def __enter__(self):
         return self
@@ -246,7 +286,7 @@ class MicroBatcher(Scheduler):
                  max_wait_ms: float = 2.0, max_queue: int = 256,
                  telemetry=None, verify_parity: bool = False,
                  verify_lock=None, clock: Clock | None = None,
-                 name: str = "collection"):
+                 name: str = "collection", tracer=None):
         self.max_wait_s = float(max_wait_ms) / 1e3
         self.verify_parity = verify_parity
         # held across the batched call AND the parity re-runs, so a
@@ -255,7 +295,7 @@ class MicroBatcher(Scheduler):
         self.verify_lock = verify_lock
         super().__init__(run_batch, max_batch=max_batch,
                          max_queue=max_queue, telemetry=telemetry,
-                         clock=clock, name=name)
+                         clock=clock, name=name, tracer=tracer)
 
     def warmup(self, example_q: np.ndarray, example_t: np.ndarray,
                k: int = 10, *, ratio_k: float = 8.0, ef_search: int = 96):
@@ -295,6 +335,9 @@ class MicroBatcher(Scheduler):
         scheduler thread — one bad request must not wedge the queue."""
         k, ratio_k, ef_search = batch[0].group
         B = len(batch)
+        tracer = self.tracer
+        t_take = self.clock.now()      # queue wait ends, assembly begins
+        batch_tid = ""
         try:
             bucket = next_bucket(B, minimum=1, maximum=self.max_batch)
             Q = np.stack([r.Q for r in batch]
@@ -304,11 +347,26 @@ class MicroBatcher(Scheduler):
                     and self.verify_lock is not None
                     else contextlib.nullcontext())
             with lock:
-                ids, stats = self._run_batch(Q, T, k, ratio_k=ratio_k,
-                                             ef_search=ef_search)
-                # sojourn latency ends when results are computed — before
-                # the (debug-only) parity sweep, which would inflate p99
-                now = self.clock.now()
+                if tracer is not None:
+                    # the batch trace: one "flush" root over the engine
+                    # call; the engine's filter/refine child spans attach
+                    # under it through the ambient context
+                    batch_tid = f"{self.name}:b{self._batch_seq}"
+                    self._batch_seq += 1
+                    bspan = tracer.span(
+                        "flush", batch_tid, collection=self.name,
+                        n_real=B, bucket=int(bucket), k=k)
+                else:
+                    bspan = contextlib.nullcontext()
+                with bspan:
+                    ids, stats = self._run_batch(Q, T, k, ratio_k=ratio_k,
+                                                 ef_search=ef_search)
+                    # sojourn latency ends when results are computed —
+                    # before the (debug-only) parity sweep below, which
+                    # would inflate p99
+                    now = self.clock.now()
+                    if tracer is not None:
+                        bspan.set(**_stats_attrs(stats))
                 if self.verify_parity:           # engine parity, per request
                     for i, r in enumerate(batch):
                         single, _ = self._run_batch(
@@ -318,12 +376,28 @@ class MicroBatcher(Scheduler):
         except Exception as exc:                 # noqa: BLE001 — to futures
             for r in batch:
                 self._resolve(r.future, exc=exc)
+                if r.span is not None:
+                    tracer.end_span(r.span, error=repr(exc))
             return
         for i, r in enumerate(batch):
             row = np.asarray(ids[i])
             self._resolve(r.future,
                           result=(row, stats) if r.want_stats else row)
+        if tracer is not None:
+            t_emit = self.clock.now()
+            stats_attrs = _stats_attrs(stats)
+            for r in batch:
+                if r.span is None:
+                    continue
+                tracer.add_span("queue", r.trace_id, r.t_enq, t_take,
+                                parent=r.span)
+                tracer.add_span("flush", r.trace_id, t_take, now,
+                                parent=r.span, batch=batch_tid,
+                                n_real=B, backend=stats.backend)
+                tracer.add_span("emit", r.trace_id, now, t_emit,
+                                parent=r.span)
+                tracer.end_span(r.span, **stats_attrs)
         if self.telemetry is not None:
             self.telemetry.record_flush(
-                B, [now - r.t_enq for r in batch], stats.backend,
-                queue_depth)
+                B, [now - r.t_enq for r in batch], stats,
+                queue_depth, shape=Q.shape)

@@ -26,6 +26,7 @@ import numpy as np
 
 from ...core import dce, hnsw as hnsw_mod, ppanns
 from ...core.ivf import IVFIndex
+from ...obs.trace import NULL_RECORDER
 from ..search_engine import SearchStats, SecureSearchEngine
 from .batcher import MicroBatcher
 from .ingest import DeltaAwareBackend, MutableEncryptedStore
@@ -59,10 +60,16 @@ class Collection:
                  max_wait_ms: float = 2.0, max_queue: int = 256,
                  compact_every: int = 4096, verify_parity: bool = False,
                  keyless: bool = False, placement=None,
-                 scheduler: str = "flush", clock=None, **backend_kw):
+                 scheduler: str = "flush", clock=None, tracer=None,
+                 metrics=None, **backend_kw):
         self.tenant = tenant
         self.name = name
         self.d = d
+        # obs (DESIGN.md §13): tracer = repro.obs.TraceRecorder (request/
+        # batch/ingest span trees), metrics = repro.obs.MetricsRegistry
+        # (cross-collection Prometheus instruments).  Both default off.
+        self.tracer = tracer
+        self._ingest_seq = 0
         if seed is None:
             # fresh entropy per collection: two tenants must never derive
             # the same key pair just because neither passed a seed
@@ -97,7 +104,11 @@ class Collection:
         self._engine: SecureSearchEngine | None = None
         self._lock = threading.RLock()
         self.compact_every = int(compact_every)
-        self.telemetry = CollectionTelemetry()
+        # telemetry runs on the same injected clock as the scheduler, so
+        # its QPS windows / sojourns live on one (virtual) timeline
+        self.telemetry = CollectionTelemetry(
+            clock=clock, metrics=metrics,
+            labels={"tenant": tenant, "collection": name})
         # scheduler chooses HOW concurrent requests share engine calls
         # (DESIGN.md §12) — orthogonal to placement, which chooses WHERE
         # the engine executes; `self.batcher` keeps its name as the
@@ -111,14 +122,14 @@ class Collection:
                 self._run_batch, max_batch=max_batch, max_queue=max_queue,
                 d=d, cdim=dce.ciphertext_dim(d), telemetry=self.telemetry,
                 verify_parity=verify_parity, verify_lock=self._lock,
-                clock=clock, name=f"{tenant}/{name}")
+                clock=clock, name=f"{tenant}/{name}", tracer=tracer)
         else:
             self.batcher = MicroBatcher(
                 self._run_batch, max_batch=max_batch,
                 max_wait_ms=max_wait_ms, max_queue=max_queue,
                 telemetry=self.telemetry, verify_parity=verify_parity,
                 verify_lock=self._lock, clock=clock,
-                name=f"{tenant}/{name}")
+                name=f"{tenant}/{name}", tracer=tracer)
 
     # ------------------------------------------------------------ keys
 
@@ -131,6 +142,17 @@ class Collection:
         return ppanns.User(self.owner.share_keys())
 
     # ------------------------------------------------------- ingestion
+
+    def _ingest_span(self, op: str):
+        """One trace per ingest operation (DESIGN.md §13): a root span
+        the store's compaction hook attaches under via the ambient
+        context.  A shared no-op span when tracing is off."""
+        if self.tracer is None:
+            return NULL_RECORDER.span(op, "")
+        tid = f"{self.tenant}/{self.name}:i{self._ingest_seq}"
+        self._ingest_seq += 1
+        return self.tracer.span(
+            op, tid, collection=f"{self.tenant}/{self.name}")
 
     def insert(self, P: np.ndarray) -> np.ndarray:
         """Owner-side API: batch-encrypt plaintext vectors (jitted DCPE +
@@ -145,7 +167,7 @@ class Collection:
     def insert_encrypted(self, C_sap: np.ndarray,
                          C_dce: np.ndarray) -> np.ndarray:
         """Server-side API: append pre-encrypted rows (wire format)."""
-        with self._lock:
+        with self._ingest_span("insert") as sp, self._lock:
             rows = self.store.append(C_sap, C_dce)
             self._backend.on_insert(rows, C_sap)
             compacted = False
@@ -153,6 +175,7 @@ class Collection:
                 self.store.compact()
                 compacted = True
             self._refresh_engine()
+            sp.set(n_rows=len(rows), compacted=compacted)
         self.telemetry.record_ingest(n_inserted=len(rows),
                                      compacted=compacted)
         return rows
@@ -163,7 +186,8 @@ class Collection:
         so a bad id cannot leave the batch half-applied (and the engine
         is re-marked dirty even if a backend hook fails mid-way)."""
         rows = [int(r) for r in np.atleast_1d(np.asarray(ids, np.int64))]
-        with self._lock:
+        with self._ingest_span("delete") as sp, self._lock:
+            sp.set(n_rows=len(rows))
             seen: set[int] = set()
             for row in rows:
                 if row in seen or not (0 <= row < self.store.n_total) \
@@ -181,7 +205,7 @@ class Collection:
         return len(rows)
 
     def compact(self):
-        with self._lock:
+        with self._ingest_span("compact"), self._lock:
             self.store.compact()
             self._refresh_engine()
         self.telemetry.record_ingest(compacted=True)
@@ -207,7 +231,8 @@ class Collection:
             alive = np.ones(n, bool)
         if n_main < 0:
             n_main = n            # an uploaded corpus is all main region
-        with self._lock:
+        with self._ingest_span("load_snapshot") as sp, self._lock:
+            sp.set(n_rows=n)
             self.store.restore(C_sap, C_dce, alive, n_main, main_gen)
             if self._backend.kind == "hnsw":
                 if graph_arrays is None:
@@ -349,7 +374,8 @@ class Collection:
                                              refine=refine)
 
     def submit(self, C_sap_q, T_q, k, *, ratio_k: float = 8.0,
-               ef_search: int = 96, want_stats: bool = False):
+               ef_search: int = 96, want_stats: bool = False,
+               trace_id: str | None = None):
         """Async single query through the micro-batcher -> Future[(k,) ids]
         (or Future[(ids, flush SearchStats)] with want_stats)."""
         C_sap_q = np.asarray(C_sap_q)
@@ -361,7 +387,8 @@ class Collection:
                 f"collection (d={self.d}, cdim={dce.ciphertext_dim(self.d)})")
         return self.batcher.submit(C_sap_q, T_q, k, ratio_k=ratio_k,
                                    ef_search=ef_search,
-                                   want_stats=want_stats)
+                                   want_stats=want_stats,
+                                   trace_id=trace_id)
 
     def search(self, C_sap_q, T_q, k, *, ratio_k: float = 8.0,
                ef_search: int = 96, timeout: float | None = 30.0):

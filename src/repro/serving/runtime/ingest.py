@@ -38,6 +38,7 @@ from ...core.ivf import IVFIndex
 from ...kernels.adc_topk import ops as adc_ops
 from ...kernels.common import next_bucket
 from ...kernels.l2_topk import ops as l2_ops
+from ...obs.trace import child_complete
 from .. import search_engine as se
 
 __all__ = ["MutableEncryptedStore", "DeltaAwareBackend", "SENTINEL"]
@@ -134,8 +135,13 @@ class MutableEncryptedStore:
     def compact(self):
         """Promote delta -> main.  Ids are stable (tombstones persist);
         only per-backend acceleration state is rebuilt, on next attach."""
+        n_delta = self.delta_size
         self.n_main = self.n_total
         self.main_gen += 1
+        # obs (DESIGN.md §13): attaches under the collection's ambient
+        # ingest span when tracing is on; no-op otherwise
+        child_complete("compact", n_promoted=n_delta,
+                       main_gen=self.main_gen, n_total=self.n_total)
 
     def restore(self, C_sap: np.ndarray, C_dce: np.ndarray,
                 alive: np.ndarray, n_main: int, main_gen: int):

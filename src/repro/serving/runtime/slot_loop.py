@@ -38,7 +38,7 @@ import contextlib
 
 import numpy as np
 
-from .batcher import Scheduler
+from .batcher import Scheduler, _stats_attrs
 from .clock import Clock
 
 __all__ = ["SlotLoop"]
@@ -63,7 +63,8 @@ class SlotLoop(Scheduler):
                  max_queue: int = 256, d: int | None = None,
                  cdim: int | None = None, telemetry=None,
                  verify_parity: bool = False, verify_lock=None,
-                 clock: Clock | None = None, name: str = "collection"):
+                 clock: Clock | None = None, name: str = "collection",
+                 tracer=None):
         self._Q = self._T = None
         self._ok = np.zeros(int(max_batch), bool)
         self._slots = [None] * int(max_batch)        # _Request per row
@@ -73,7 +74,7 @@ class SlotLoop(Scheduler):
         self.verify_lock = verify_lock
         super().__init__(run_batch, max_batch=max_batch,
                          max_queue=max_queue, telemetry=telemetry,
-                         clock=clock, name=name)
+                         clock=clock, name=name, tracer=tracer)
 
     # ---------------------------------------------------------- the table
 
@@ -104,6 +105,11 @@ class SlotLoop(Scheduler):
             self._ok[slot] = True
             self._slots[slot] = req
             req.t_insert = now
+            if req.span is not None:
+                # queue wait ends the moment the row enters a slot; the
+                # "slot" occupancy span is stamped at emit (_step)
+                self.tracer.add_span("queue", req.trace_id, req.t_enq,
+                                     now, parent=req.span)
 
     # ---------------------------------------------------------- scheduler
 
@@ -146,15 +152,31 @@ class SlotLoop(Scheduler):
         never on the loop thread — and the slots free either way."""
         k, ratio_k, ef_search = group
         active = np.flatnonzero(self._ok)
+        tracer = self.tracer
+        step_tid = ""
         try:
             lock = (self.verify_lock if self.verify_parity
                     and self.verify_lock is not None
                     else contextlib.nullcontext())
             with lock:
-                ids, stats = self._run_batch(self._Q, self._T, k,
-                                             ratio_k=ratio_k,
-                                             ef_search=ef_search)
-                now = self.clock.now()
+                if tracer is not None:
+                    # the step trace: one "step" root over the full-table
+                    # engine call; filter/refine children attach under it
+                    step_tid = f"{self.name}:s{self._batch_seq}"
+                    self._batch_seq += 1
+                    sspan = tracer.span(
+                        "step", step_tid, collection=self.name,
+                        n_active=int(active.size),
+                        capacity=int(self.capacity), k=k)
+                else:
+                    sspan = contextlib.nullcontext()
+                with sspan:
+                    ids, stats = self._run_batch(self._Q, self._T, k,
+                                                 ratio_k=ratio_k,
+                                                 ef_search=ef_search)
+                    now = self.clock.now()
+                    if tracer is not None:
+                        sspan.set(**_stats_attrs(stats))
                 if self.verify_parity:           # engine parity, per slot
                     for slot in active:
                         r = self._slots[slot]
@@ -164,10 +186,15 @@ class SlotLoop(Scheduler):
                         np.testing.assert_array_equal(ids[slot], single[0])
         except Exception as exc:                 # noqa: BLE001 — to futures
             for slot in active:
-                self._resolve(self._slots[slot].future, exc=exc)
+                r = self._slots[slot]
+                self._resolve(r.future, exc=exc)
+                if r.span is not None:
+                    tracer.end_span(r.span, error=repr(exc))
                 self._free(slot)
             return
         sojourn, insert_to_emit = [], []
+        t_emit = self.clock.now() if tracer is not None else now
+        stats_attrs = _stats_attrs(stats) if tracer is not None else None
         for slot in active:
             r = self._slots[slot]
             row = np.asarray(ids[slot])
@@ -175,11 +202,18 @@ class SlotLoop(Scheduler):
                           result=(row, stats) if r.want_stats else row)
             sojourn.append(now - r.t_enq)
             insert_to_emit.append(now - r.t_insert)
+            if r.span is not None:
+                tracer.add_span("slot", r.trace_id, r.t_insert, now,
+                                parent=r.span, slot=int(slot),
+                                batch=step_tid, backend=stats.backend)
+                tracer.add_span("emit", r.trace_id, now, t_emit,
+                                parent=r.span)
+                tracer.end_span(r.span, **stats_attrs)
             self._free(slot)
         if self.telemetry is not None:
             self.telemetry.record_step(
                 len(active), self.capacity, sojourn, insert_to_emit,
-                stats.backend, queue_depth)
+                stats, queue_depth, shape=self._Q.shape)
 
     def _free(self, slot: int):
         self._ok[slot] = False

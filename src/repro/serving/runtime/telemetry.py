@@ -1,4 +1,4 @@
-"""Per-collection serving telemetry (DESIGN.md §8).
+"""Per-collection serving telemetry (DESIGN.md §8, §13).
 
 Every number the runtime reports is derived from the engine's uniform
 `SearchStats` plus batcher-side timestamps — there is no second
@@ -6,6 +6,9 @@ accounting path to drift from the engine's.
 
 Counters and gauges per collection:
   * request / reject / batch counts, insert / delete / compaction counts;
+  * the accumulated `SearchStats` cost counters (paper §V-C: ciphertext
+    distance evaluations, DCE comparisons, filter bytes scanned, bytes
+    up/down) — the engine's communication/work model, operator-visible;
   * QPS over a sliding window;
   * batch occupancy (real requests per flushed batch — the coalescing
     win; > 1 means the micro-batcher is actually batching);
@@ -20,6 +23,16 @@ Counters and gauges per collection:
     sizes of the jitted search/encrypt entry points, so a bench or test
     can assert "zero recompiles after warmup across bucketed shapes"
     (flush) or "zero recompiles after one warmup step" (continuous).
+
+Time comes from the injected `Clock` (DESIGN.md §12) — telemetry never
+reads wall time directly, so QPS windows, pruning, and sojourn math are
+assertable on `VirtualClock` like everything else in the runtime.
+
+When a `repro.obs.MetricsRegistry` is attached (DESIGN.md §13), every
+record_* call additionally feeds the cross-collection Prometheus
+instruments (fixed-bucket latency histograms, labelled counters/gauges,
+first-class recompile events with the triggering batch shape).  With no
+registry attached — the default — none of that code runs.
 """
 
 from __future__ import annotations
@@ -56,12 +69,25 @@ def jit_cache_size() -> int:
     return sum(f._cache_size() for f in fns) + sharded.cache_size()
 
 
-class CollectionTelemetry:
-    """Thread-safe rolling metrics for one collection."""
+class _ClockShim:
+    """Wrap a bare clock-less default so the class body reads uniformly."""
+    now = staticmethod(time.monotonic)
 
-    def __init__(self, window_s: float = 60.0, reservoir: int = 1024):
+
+class CollectionTelemetry:
+    """Thread-safe rolling metrics for one collection.
+
+    clock: the runtime `Clock` the collection's scheduler runs on (the
+    seam PR 6 added); None = wall time.  metrics/labels: an optional
+    `repro.obs.MetricsRegistry` plus the label values ({"tenant": ...,
+    "collection": ...}) this collection exports under.
+    """
+
+    def __init__(self, window_s: float = 60.0, reservoir: int = 1024,
+                 clock=None, metrics=None, labels=None):
         self.window_s = float(window_s)
-        self._t0 = time.monotonic()
+        self.clock = clock if clock is not None else _ClockShim()
+        self._t0 = self.clock.now()
         self._lock = threading.Lock()
         self._latencies = collections.deque(maxlen=reservoir)
         self._flushes = collections.deque()        # (t, n_real_requests)
@@ -77,6 +103,78 @@ class CollectionTelemetry:
         self.n_compactions = 0
         self.queue_depth = 0
         self.last_backend = ""
+        # accumulated SearchStats counters (paper §V-C): summed over
+        # every batched engine call this collection served
+        self.filter_dist_evals = 0
+        self.refine_comparisons = 0
+        self.filter_bytes_scanned = 0
+        self.bytes_up = 0
+        self.bytes_down = 0
+        self._wire_metrics(metrics, labels or {})
+
+    # ------------------------------------------------- metrics exposition
+
+    def _wire_metrics(self, metrics, labels: dict):
+        """Register this collection's label-set on the shared registry.
+        All _m_* handles stay None when no registry is attached, and the
+        record_* paths skip exposition entirely."""
+        self._labels = dict(labels)
+        if metrics is None:
+            self._m_requests = None
+            return
+        names = tuple(self._labels)
+        c = lambda n, h: metrics.counter(n, h, names)        # noqa: E731
+        self._m_requests = c("ann_requests_total",
+                             "Requests admitted to the queue")
+        self._m_rejected = c("ann_rejected_total",
+                             "Requests shed by admission control")
+        self._m_batches = c("ann_batches_total", "Flushed micro-batches")
+        self._m_steps = c("ann_steps_total", "Slot-table steps")
+        self._m_batched = c("ann_batched_requests_total",
+                            "Requests served through batched engine calls")
+        self._m_inserts = c("ann_inserts_total", "Rows inserted")
+        self._m_deletes = c("ann_deletes_total", "Rows tombstoned")
+        self._m_compactions = c("ann_compactions_total",
+                                "Store compactions")
+        self._m_dist = c("ann_filter_dist_evals_total",
+                         "Ciphertext distance evaluations (filter stage)")
+        self._m_cmp = c("ann_refine_comparisons_total",
+                        "DCE comparison sign evaluations (refine stage)")
+        self._m_scanned = c("ann_filter_bytes_scanned_total",
+                            "Bytes the filter stage touched")
+        self._m_up = c("ann_bytes_up_total",
+                       "Serialized request bytes, client to server")
+        self._m_down = c("ann_bytes_down_total",
+                         "Serialized result bytes, server to client")
+        self._m_queue = metrics.gauge(
+            "ann_queue_depth", "Requests waiting in the scheduler queue",
+            names)
+        self._m_slot_occ = metrics.gauge(
+            "ann_slot_occupancy",
+            "Active slots / table capacity, last step", names)
+        self._m_latency = metrics.histogram(
+            "ann_request_latency_seconds",
+            "Request sojourn latency, enqueue to result", names)
+        self._m_sojourn = metrics.histogram(
+            "ann_insert_to_emit_seconds",
+            "Slot occupancy time, insert to emit", names)
+        # recompiles as first-class events with the triggering shape:
+        # the jit caches are global, so deltas are attributed to the
+        # collection (and batch shape) whose engine call grew them
+        self._m_recompiles = metrics.counter(
+            "ann_recompiles_total",
+            "Jitted-executable cache growth events", names + ("shape",))
+        self._cache_size_seen = jit_cache_size()
+
+    def _record_compiles(self, shape):
+        """Counter increment per newly compiled executable, labelled with
+        the batch shape of the engine call that triggered it."""
+        size = jit_cache_size()
+        grew = size - self._cache_size_seen
+        self._cache_size_seen = size
+        if grew > 0:
+            self._m_recompiles.inc(
+                grew, shape=str(tuple(shape or ())), **self._labels)
 
     # ------------------------------------------------------------ recording
 
@@ -84,42 +182,83 @@ class CollectionTelemetry:
         with self._lock:
             self.n_requests += 1
             self.queue_depth = queue_depth
+        if self._m_requests is not None:
+            self._m_requests.inc(**self._labels)
+            self._m_queue.set(queue_depth, **self._labels)
 
     def record_reject(self):
         with self._lock:
             self.n_rejected += 1
+        if self._m_requests is not None:
+            self._m_rejected.inc(**self._labels)
 
-    def record_flush(self, n_real: int, latencies_s, backend: str,
-                     queue_depth: int):
-        now = time.monotonic()
+    def _accumulate_stats_locked(self, stats):
+        self.last_backend = stats.backend
+        self.filter_dist_evals += stats.filter_dist_evals
+        self.refine_comparisons += stats.refine_comparisons
+        self.filter_bytes_scanned += stats.filter_bytes_scanned
+        self.bytes_up += stats.bytes_up
+        self.bytes_down += stats.bytes_down
+
+    def _export_stats(self, stats, latencies_s):
+        self._m_dist.inc(stats.filter_dist_evals, **self._labels)
+        self._m_cmp.inc(stats.refine_comparisons, **self._labels)
+        self._m_scanned.inc(stats.filter_bytes_scanned, **self._labels)
+        self._m_up.inc(stats.bytes_up, **self._labels)
+        self._m_down.inc(stats.bytes_down, **self._labels)
+        for x in latencies_s:
+            self._m_latency.observe(float(x), **self._labels)
+
+    def record_flush(self, n_real: int, latencies_s, stats,
+                     queue_depth: int, shape=None):
+        """One micro-batch flush: n_real real requests rode one engine
+        call whose uniform accounting is `stats` (a SearchStats)."""
+        now = self.clock.now()
         with self._lock:
             self.n_batches += 1
             self.n_batched_requests += n_real
             self.queue_depth = queue_depth
-            self.last_backend = backend
+            self._accumulate_stats_locked(stats)
             self._flushes.append((now, n_real))
             self._latencies.extend(float(x) for x in latencies_s)
             horizon = now - self.window_s
             while self._flushes and self._flushes[0][0] < horizon:
                 self._flushes.popleft()
+        if self._m_requests is not None:
+            self._m_batches.inc(**self._labels)
+            self._m_batched.inc(n_real, **self._labels)
+            self._m_queue.set(queue_depth, **self._labels)
+            self._export_stats(stats, latencies_s)
+            self._record_compiles(shape)
 
     def record_step(self, n_active: int, capacity: int, sojourn_s,
-                    insert_to_emit_s, backend: str, queue_depth: int):
+                    insert_to_emit_s, stats, queue_depth: int,
+                    shape=None):
         """One slot-table step (DESIGN.md §12): n_active of capacity
         slots held requests; both sojourn streams feed the reservoirs."""
-        now = time.monotonic()
+        now = self.clock.now()
+        occ = n_active / capacity if capacity else 0.0
         with self._lock:
             self.n_steps += 1
             self.n_batched_requests += n_active
             self.queue_depth = queue_depth
-            self.last_backend = backend
-            self._slot_occ.append(n_active / capacity if capacity else 0.0)
+            self._accumulate_stats_locked(stats)
+            self._slot_occ.append(occ)
             self._flushes.append((now, n_active))
             self._latencies.extend(float(x) for x in sojourn_s)
             self._insert_to_emit.extend(float(x) for x in insert_to_emit_s)
             horizon = now - self.window_s
             while self._flushes and self._flushes[0][0] < horizon:
                 self._flushes.popleft()
+        if self._m_requests is not None:
+            self._m_steps.inc(**self._labels)
+            self._m_batched.inc(n_active, **self._labels)
+            self._m_queue.set(queue_depth, **self._labels)
+            self._m_slot_occ.set(occ, **self._labels)
+            self._export_stats(stats, sojourn_s)
+            for x in insert_to_emit_s:
+                self._m_sojourn.observe(float(x), **self._labels)
+            self._record_compiles(shape)
 
     def record_ingest(self, n_inserted: int = 0, n_deleted: int = 0,
                       compacted: bool = False):
@@ -127,6 +266,13 @@ class CollectionTelemetry:
             self.n_inserts += n_inserted
             self.n_deletes += n_deleted
             self.n_compactions += int(compacted)
+        if self._m_requests is not None:
+            if n_inserted:
+                self._m_inserts.inc(n_inserted, **self._labels)
+            if n_deleted:
+                self._m_deletes.inc(n_deleted, **self._labels)
+            if compacted:
+                self._m_compactions.inc(**self._labels)
 
     # ------------------------------------------------------------- reading
 
@@ -138,7 +284,7 @@ class CollectionTelemetry:
         return sorted_xs[i]
 
     def snapshot(self) -> dict:
-        now = time.monotonic()
+        now = self.clock.now()
         with self._lock:
             horizon = now - self.window_s
             # prune here too: record_flush-only pruning would leave span
@@ -165,6 +311,11 @@ class CollectionTelemetry:
                 "n_deletes": self.n_deletes,
                 "n_compactions": self.n_compactions,
                 "queue_depth": self.queue_depth,
+                "filter_dist_evals": self.filter_dist_evals,
+                "refine_comparisons": self.refine_comparisons,
+                "filter_bytes_scanned": self.filter_bytes_scanned,
+                "bytes_up": self.bytes_up,
+                "bytes_down": self.bytes_down,
                 "qps": served / span if span > 0 else 0.0,
                 "batch_occupancy": occupancy,
                 "slot_occupancy": slot_occ,

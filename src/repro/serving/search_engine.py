@@ -43,6 +43,7 @@ from ..kernels.adc_topk import ops as adc_ops
 from ..kernels.common import next_bucket
 from ..kernels.dce_comp import ops as dce_ops
 from ..kernels.l2_topk import ops as l2_ops
+from ..obs.trace import child_span
 
 __all__ = ["SearchStats", "SecureSearchEngine", "FlatScanFilter",
            "IVFScanFilter", "HNSWGraphFilter", "ADCFilter",
@@ -483,34 +484,44 @@ class SecureSearchEngine:
         T_q = np.atleast_2d(np.asarray(T_q))
         nq = Q_sap.shape[0]
         kp = int(max(k, round(ratio_k * k)))
-        cand, valid, dist_evals = self.backend.candidates(
-            Q_sap, kp, ef_search)
+        # obs (DESIGN.md §13): when a scheduler's batch span is ambient,
+        # filter/refine become its children; no-op spans otherwise
+        with child_span("filter", backend=self.backend.name,
+                        kp=kp, nq=nq) as fsp:
+            cand, valid, dist_evals = self.backend.candidates(
+                Q_sap, kp, ef_search)
+            fsp.set(dist_evals=int(dist_evals),
+                    bytes_scanned=int(
+                        getattr(self.backend, "last_filter_bytes", 0)))
         if cand.shape[1] < k:       # uniform (nq, k) contract: -1 fill
             pad = ((0, 0), (0, k - cand.shape[1]))
             cand = np.pad(cand, pad)
             valid = np.pad(valid, pad)
 
-        if refine == "tournament":
-            # a backend may supply its own batched refine (the sharded
-            # backend's tournament runs the candidate gather under the
-            # mesh, serving/sharded.py); semantics are identical
-            refine_fn = getattr(self.backend, "refine_batch", None)
-            if refine_fn is not None:
-                out = refine_fn(self._C_dce_dev, jnp.asarray(cand),
-                                jnp.asarray(T_q), jnp.asarray(valid), k)
+        with child_span("refine", mode=refine) as rsp:
+            if refine == "tournament":
+                # a backend may supply its own batched refine (the sharded
+                # backend's tournament runs the candidate gather under the
+                # mesh, serving/sharded.py); semantics are identical
+                refine_fn = getattr(self.backend, "refine_batch", None)
+                if refine_fn is not None:
+                    out = refine_fn(self._C_dce_dev, jnp.asarray(cand),
+                                    jnp.asarray(T_q), jnp.asarray(valid), k)
+                else:
+                    out = refine_candidates(
+                        self._C_dce_dev, jnp.asarray(cand), jnp.asarray(T_q),
+                        jnp.asarray(valid), k, self.use_kernel)
+                ids = np.asarray(out, np.int64)
+                nv = valid.sum(axis=1)
+                ncmp = int((nv * (nv - 1)).sum())
+            elif refine == "none":          # filter-only baseline
+                ids = np.where(valid[:, :k], cand[:, :k], -1)\
+                    .astype(np.int64)
+                ncmp = 0
             else:
-                out = refine_candidates(
-                    self._C_dce_dev, jnp.asarray(cand), jnp.asarray(T_q),
-                    jnp.asarray(valid), k, self.use_kernel)
-            ids = np.asarray(out, np.int64)
-            nv = valid.sum(axis=1)
-            ncmp = int((nv * (nv - 1)).sum())
-        elif refine == "none":          # filter-only baseline
-            ids = np.where(valid[:, :k], cand[:, :k], -1).astype(np.int64)
-            ncmp = 0
-        else:
-            raise ValueError(f"batched refine must be 'tournament' or "
-                             f"'none', got {refine!r}")
+                raise ValueError(f"batched refine must be 'tournament' or "
+                                 f"'none', got {refine!r}")
+            rsp.set(comparisons=ncmp)
 
         stats = SearchStats(
             latency_s=time.perf_counter() - t0,

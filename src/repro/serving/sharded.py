@@ -57,6 +57,7 @@ from ..kernels.adc_topk.ops import INT_BIG
 from ..kernels.common import next_bucket
 from ..kernels.dce_comp import ops as dce_ops
 from ..launch.mesh import make_mesh
+from ..obs.trace import child_complete, current as obs_current
 from .runtime.ingest import SENTINEL, DeltaAwareBackend
 from .search_engine import layout_pools
 
@@ -455,11 +456,25 @@ class ShardedBackend(DeltaAwareBackend):
         if self.quantization is not None:
             kp2 = self.oversampled(kp)
             if self.kind == "flat":
-                return self._candidates_adc_flat(Q_sap, kp2)
-            return self._candidates_adc_ivf(Q_sap, kp2)
-        if self.kind == "flat":
-            return self._candidates_flat(Q_sap, kp)
-        return self._candidates_ivf(Q_sap, kp)
+                out = self._candidates_adc_flat(Q_sap, kp2)
+            else:
+                out = self._candidates_adc_ivf(Q_sap, kp2)
+        elif self.kind == "flat":
+            out = self._candidates_flat(Q_sap, kp)
+        else:
+            out = self._candidates_ivf(Q_sap, kp)
+        if obs_current() is not None:
+            # obs (DESIGN.md §13): one completed child span per shard
+            # under the ambient filter span.  The collective computed all
+            # shards' work inside one host call, so the per-shard spans
+            # share the filter interval and carry the row partition each
+            # shard scanned — attribution, not independent timing.
+            for m in self.shard_manifest():
+                child_complete(f"shard{m['shard']}", shard=m["shard"],
+                               row_start=m["row_start"],
+                               row_stop=m["row_stop"],
+                               n_alive=m["n_alive"])
+        return out
 
     def _candidates_adc_flat(self, Q_sap: np.ndarray, kp2: int):
         st = self.store

@@ -1,0 +1,159 @@
+"""CollectionTelemetry unit behaviour on VirtualClock (DESIGN.md §8, §13).
+
+Telemetry never reads wall time — every window/percentile/sojourn figure
+is driven here through the injected clock and asserted exactly.  The
+metrics-registry exposition path is covered separately in test_obs.py;
+these tests pin the snapshot math itself.
+"""
+
+from repro.obs import MetricsRegistry
+from repro.serving.runtime import CollectionTelemetry, VirtualClock
+from repro.serving.search_engine import SearchStats
+
+
+def _stats(nq=1, dist=0, cmp=0, scanned=0, up=0, down=0, backend="fake"):
+    return SearchStats(latency_s=0.0, filter_dist_evals=dist,
+                       refine_comparisons=cmp, bytes_up=up,
+                       bytes_down=down, n_queries=nq, backend=backend,
+                       filter_bytes_scanned=scanned)
+
+
+# ---------------------------------------------------------- percentiles
+
+
+def test_percentile_empty_reservoir_is_zero():
+    assert CollectionTelemetry._percentile([], 0.50) == 0.0
+    assert CollectionTelemetry._percentile([], 0.99) == 0.0
+
+
+def test_percentile_single_sample_is_that_sample():
+    assert CollectionTelemetry._percentile([0.25], 0.50) == 0.25
+    assert CollectionTelemetry._percentile([0.25], 0.99) == 0.25
+
+
+def test_percentile_interior_rank():
+    xs = sorted(float(i) for i in range(101))      # 0..100
+    assert CollectionTelemetry._percentile(xs, 0.50) == 50.0
+    assert CollectionTelemetry._percentile(xs, 0.99) == 99.0
+    assert CollectionTelemetry._percentile(xs, 1.00) == 100.0
+
+
+# ----------------------------------------------------------- QPS window
+
+
+def test_qps_counts_only_requests_inside_window():
+    vc = VirtualClock()
+    tel = CollectionTelemetry(window_s=10.0, clock=vc)
+    tel.record_flush(4, [0.01] * 4, _stats(nq=4), queue_depth=0)
+    vc.advance(5.0)
+    tel.record_flush(2, [0.01] * 2, _stats(nq=2), queue_depth=0)
+    # span is capped at the observed lifetime (5 s), not the window
+    snap = tel.snapshot()
+    assert snap["qps"] == (4 + 2) / 5.0
+
+
+def test_qps_window_prunes_after_quiet_gap():
+    """A long quiet gap must age old flushes out of the window even when
+    no record_flush runs afterwards — snapshot() prunes on read."""
+    vc = VirtualClock()
+    tel = CollectionTelemetry(window_s=10.0, clock=vc)
+    tel.record_flush(8, [0.01] * 8, _stats(nq=8), queue_depth=0)
+    vc.advance(100.0)                      # far past the 10 s window
+    snap = tel.snapshot()
+    assert snap["qps"] == 0.0
+    assert len(tel._flushes) == 0          # actually pruned, not masked
+    # fresh traffic after the gap counts alone, over the full window
+    tel.record_flush(3, [0.01] * 3, _stats(nq=3), queue_depth=0)
+    assert tel.snapshot()["qps"] == 3 / 10.0
+
+
+def test_fresh_collection_single_flush_does_not_explode_qps():
+    vc = VirtualClock()
+    tel = CollectionTelemetry(window_s=60.0, clock=vc)
+    vc.advance(0.5)
+    tel.record_flush(1, [0.001], _stats(), queue_depth=0)
+    assert tel.snapshot()["qps"] == 1 / 0.5
+
+
+# ------------------------------------------------------- snapshot math
+
+
+def test_snapshot_accumulates_search_stats_counters():
+    """record_flush/record_step must SUM the engine's SearchStats cost
+    counters across calls — not just remember the last backend."""
+    vc = VirtualClock()
+    tel = CollectionTelemetry(clock=vc)
+    tel.record_flush(2, [0.01, 0.02],
+                     _stats(nq=2, dist=100, cmp=50, scanned=4096,
+                            up=10, down=20, backend="flat"),
+                     queue_depth=1)
+    tel.record_step(3, 8, [0.03] * 3, [0.01] * 3,
+                    _stats(nq=3, dist=7, cmp=5, scanned=512,
+                           up=1, down=2, backend="ivf"),
+                    queue_depth=0)
+    snap = tel.snapshot()
+    assert snap["backend"] == "ivf"                # last engine call wins
+    assert snap["filter_dist_evals"] == 107
+    assert snap["refine_comparisons"] == 55
+    assert snap["filter_bytes_scanned"] == 4608
+    assert snap["bytes_up"] == 11
+    assert snap["bytes_down"] == 22
+    assert snap["n_batches"] == 1 and snap["n_steps"] == 1
+
+
+def test_snapshot_latency_and_sojourn_reservoirs():
+    vc = VirtualClock()
+    tel = CollectionTelemetry(clock=vc)
+    tel.record_flush(3, [0.01, 0.02, 0.03], _stats(nq=3), queue_depth=0)
+    tel.record_step(2, 4, [0.5], [0.1, 0.2], _stats(nq=2),
+                    queue_depth=0)
+    # merged latency reservoir sorted: [0.01, 0.02, 0.03, 0.5]
+    snap = tel.snapshot()
+    assert snap["p50_latency_s"] == 0.03           # nearest-rank, n=4
+    assert snap["p99_latency_s"] == 0.5            # step sojourns merge in
+    assert snap["p50_insert_to_emit_s"] == 0.1
+    assert snap["slot_occupancy"] == 0.5
+    assert snap["batch_occupancy"] == 5 / 1        # batched reqs / flushes
+
+
+def test_snapshot_counts_ingest_and_rejects():
+    tel = CollectionTelemetry(clock=VirtualClock())
+    tel.record_submit(queue_depth=3)
+    tel.record_reject()
+    tel.record_ingest(n_inserted=10)
+    tel.record_ingest(n_deleted=2, compacted=True)
+    snap = tel.snapshot()
+    assert snap["n_requests"] == 1 and snap["n_rejected"] == 1
+    assert snap["n_inserts"] == 10 and snap["n_deletes"] == 2
+    assert snap["n_compactions"] == 1 and snap["queue_depth"] == 3
+
+
+def test_telemetry_without_clock_uses_wall_time():
+    tel = CollectionTelemetry()                    # no injected clock
+    tel.record_flush(1, [0.01], _stats(), queue_depth=0)
+    assert tel.snapshot()["n_batches"] == 1
+
+
+# ----------------------------------------------- metrics registry wiring
+
+
+def test_metrics_registry_mirrors_counters():
+    vc = VirtualClock()
+    reg = MetricsRegistry()
+    tel = CollectionTelemetry(clock=vc, metrics=reg,
+                              labels={"tenant": "t", "collection": "c"})
+    tel.record_submit(queue_depth=2)
+    tel.record_flush(2, [0.01, 0.02],
+                     _stats(nq=2, dist=9, cmp=4, scanned=256, up=3,
+                            down=6), queue_depth=0)
+    lbl = {"tenant": "t", "collection": "c"}
+    assert reg.get("ann_requests_total").value(**lbl) == 1
+    assert reg.get("ann_batched_requests_total").value(**lbl) == 2
+    assert reg.get("ann_filter_dist_evals_total").value(**lbl) == 9
+    assert reg.get("ann_bytes_down_total").value(**lbl) == 6
+    assert reg.get("ann_queue_depth").value(**lbl) == 0
+    hist = reg.get("ann_request_latency_seconds")
+    _, _, count = hist.snapshot(**lbl)
+    assert count == 2
+    text = reg.prometheus_text()
+    assert 'ann_requests_total{tenant="t",collection="c"} 1' in text

@@ -139,7 +139,13 @@ def main() -> None:
         # `python -m benchmarks.bench_runtime --sweep --smoke` (CI)
         "runtime_sweep": lambda: bench_runtime.run_sweep(
             n=20000 if args.full else 6000, smoke=False),
-        "sec3_attacks": lambda: bench_attacks.run(),
+        # normalized ASPE KPA rows + the security-profile
+        # leakage-vs-QPS frontier (DESIGN.md §14); also writes the
+        # repo-root BENCH_attacks.json trajectory record.  The hard
+        # gate (hardened at-chance, balanced <= 25% QPS cost) lives
+        # in `python -m benchmarks.bench_attacks --smoke` (CI)
+        "attacks": lambda: bench_attacks.run(
+            n=32_768 if args.full else 16_384),
         "kernels": lambda: bench_kernels.run(),
         "roofline": lambda: bench_roofline.run(),
     }

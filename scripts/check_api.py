@@ -114,6 +114,7 @@ def check_api_exports() -> list[str]:
                       f"surface contract, DESIGN.md §10)")
     errors.extend(check_quantization_surface(api))
     errors.extend(check_obs_surface(api))
+    errors.extend(check_sec_surface(api))
     return errors
 
 
@@ -184,6 +185,54 @@ def check_obs_surface(api) -> list[str]:
     if "trace_id" not in fields:
         errors.append("SearchRequest must carry trace_id "
                       "(client-propagated correlation id, DESIGN.md §13)")
+    return errors
+
+
+# Names that MUST stay exported by repro.sec — the security-profile +
+# leakage-harness surface contract (DESIGN.md §14).
+REQUIRED_SEC_EXPORTS = {
+    "SecurityProfile", "PROFILES", "SECURITY_PROFILE_NAMES",
+    "DEFAULT_PROFILE", "get_profile",
+    "AttackResult", "ServerView", "capture_server_view",
+    "aspe_kpa_attack", "dce_kpa_attack", "adc_code_attack",
+    "access_pattern_attack", "evaluate_profile",
+}
+
+
+def check_sec_surface(api) -> list[str]:
+    """The security-profile surface contract (DESIGN.md §14): repro.sec
+    exports the profile registry + leakage harness, and IndexSpec
+    carries (validates, round-trips) `security_profile`."""
+    import dataclasses
+    errors = []
+    try:
+        import repro.sec as sec
+    except Exception as e:                          # noqa: BLE001
+        return [f"import repro.sec failed: {type(e).__name__}: {e}"]
+    for name in sorted(REQUIRED_SEC_EXPORTS):
+        if not hasattr(sec, name):
+            errors.append(f"repro.sec must export {name} (security "
+                          f"surface contract, DESIGN.md §14)")
+    fields = {f.name for f in dataclasses.fields(api.IndexSpec)}
+    if "security_profile" not in fields:
+        return errors + ["IndexSpec must carry security_profile "
+                         "(DESIGN.md §14)"]
+    try:
+        spec = api.IndexSpec(tenant="_gate", name="_gate", d=8,
+                             security_profile="hardened")
+        if api.IndexSpec.from_bytes(spec.to_bytes()) != spec:
+            errors.append("IndexSpec.security_profile does not survive "
+                          "a wire round-trip")
+    except Exception as e:                          # noqa: BLE001
+        errors.append(f"IndexSpec(security_profile='hardened') must "
+                      f"construct and round-trip: {type(e).__name__}: {e}")
+    for bad in ({"security_profile": "bogus"},
+                {"security_profile": "hardened", "backend": "hnsw"}):
+        try:
+            api.IndexSpec(tenant="_gate", name="_gate", d=8, **bad)
+            errors.append(f"IndexSpec must reject {bad}")
+        except ValueError:
+            pass
     return errors
 
 

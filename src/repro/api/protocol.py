@@ -45,6 +45,8 @@ _BACKENDS = ("flat", "ivf", "hnsw")
 _PLACEMENT_KINDS = ("single", "sharded")
 _QUANTIZATIONS = (None, "int8", "pq8")
 _SCHEDULERS = ("flush", "continuous")
+_SECURITY_PROFILES = ("perf", "balanced", "hardened", "oblivious-sketch")
+_OBLIVIOUS_PROFILES = ("hardened", "oblivious-sketch")
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +159,13 @@ class IndexSpec:
     quantized codes through the fused adc_topk path, oversampling
     k' by `refine_ratio` (None = the per-kind default, core.adc)
     into the unchanged exact DCE refine.  flat/ivf backends only.
+
+    `security_profile` picks the leakage tier (repro.sec, DESIGN.md
+    §14): "perf" serves the engine unflattened; "balanced" adds
+    dummy-query batch padding + fixed-shape results; "hardened" /
+    "oblivious-sketch" additionally pad every flush to `max_batch` and
+    run scan-oblivious full-bucket filters (flat/ivf only).  Returned
+    real ids are identical under every profile.
     """
     tenant: str
     name: str
@@ -182,6 +191,9 @@ class IndexSpec:
     max_wait_ms: float = 2.0          # flush scheduler only
     max_queue: int = 256
     compact_every: int = 4096
+    # leakage tier (repro.sec, DESIGN.md §14).  Wire-versioned
+    # additively: payloads from before the field default to "perf".
+    security_profile: str = "perf"
 
     def __post_init__(self):
         self.validate()
@@ -212,6 +224,17 @@ class IndexSpec:
         if self.scheduler not in _SCHEDULERS:
             raise ValueError(f"unknown scheduler {self.scheduler!r} "
                              f"(have {_SCHEDULERS})")
+        if self.security_profile not in _SECURITY_PROFILES:
+            raise ValueError(
+                f"unknown security_profile {self.security_profile!r} "
+                f"(have {_SECURITY_PROFILES})")
+        if (self.security_profile in _OBLIVIOUS_PROFILES
+                and self.backend == "hnsw"):
+            raise ValueError(
+                f"security_profile {self.security_profile!r} needs the "
+                f"scan-oblivious filter variant, and graph traversal is "
+                f"data-dependent by construction — use flat|ivf backends "
+                f"(DESIGN.md §14)")
 
     @property
     def cdim(self) -> int:
@@ -230,7 +253,8 @@ class IndexSpec:
             hnsw_M=self.hnsw_M,
             hnsw_ef_construction=self.hnsw_ef_construction,
             quantization=self.quantization,
-            refine_ratio=self.refine_ratio, pq_m=self.pq_m)
+            refine_ratio=self.refine_ratio, pq_m=self.pq_m,
+            security_profile=self.security_profile)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -32,6 +32,7 @@ import numpy as np
 from ..core import ppanns
 from ..core.wireformat import WireFormatError, pack, unpack
 from ..obs import Observability
+from ..sec import DEFAULT_PROFILE, get_profile
 from ..serving.runtime import CollectionManager, QueueFullError  # noqa: F401
 from ..serving.runtime import TenantIsolationError               # noqa: F401
 from ..serving.runtime.collections import Collection
@@ -325,7 +326,13 @@ class SecureAnnService:
         """The one search entry.  Single-query requests with
         coalesce=True ride the collection's micro-batcher (concurrent
         submitters share flushes); batch requests and coalesce=False go
-        straight to one locked engine call."""
+        straight to one locked engine call.
+
+        Under a padding security profile (DESIGN.md §14) the returned id
+        matrix is widened to the profile's fixed result width with -1
+        columns, so the response size leaks the width class, not k; the
+        real ids and their order are bit-identical to the "perf" tier,
+        and `SearchResult.ids_lists()` strips the padding client-side."""
         col = self._mgr.collection(req.tenant, req.collection)
         p = req.params
         if req.coalesce and req.query.nq == 1 and p.refine == "tournament":
@@ -333,11 +340,31 @@ class SecureAnnService:
                              ratio_k=p.ratio_k, ef_search=p.ef_search,
                              want_stats=True, trace_id=req.trace_id)
             ids_row, stats = fut.result(timeout=self.result_timeout)
-            return SearchResult(ids=ids_row[None], stats=stats)
-        ids, stats = col.search_batch(
-            req.query.C_sap, req.query.T, p.k, ratio_k=p.ratio_k,
-            ef_search=p.ef_search, refine=p.refine)
-        return SearchResult(ids=np.asarray(ids, np.int64), stats=stats)
+            ids = ids_row[None]
+        else:
+            ids, stats = col.search_batch(
+                req.query.C_sap, req.query.T, p.k, ratio_k=p.ratio_k,
+                ef_search=p.ef_search, refine=p.refine)
+        ids = self._pad_result(req, col, np.asarray(ids, np.int64), p.k)
+        return SearchResult(ids=ids, stats=stats)
+
+    def _pad_result(self, req: SearchRequest, col: Collection,
+                    ids: np.ndarray, k: int) -> np.ndarray:
+        """Widen the id matrix to the collection profile's fixed result
+        width (-1 padding).  The padding bytes feed the telemetry's
+        `ann_padded_bytes_total`; the engine-side `bytes_down` keeps
+        counting the unpadded payload (the two counters separate the
+        scheme's communication model from the profile's overhead)."""
+        with self._lock:
+            spec = self._specs.get((req.tenant, req.collection))
+        profile = (get_profile(spec.security_profile)
+                   if spec is not None else DEFAULT_PROFILE)
+        width = profile.result_width(k)
+        if width <= ids.shape[1]:
+            return ids
+        pad = np.full((ids.shape[0], width - ids.shape[1]), -1, np.int64)
+        col.telemetry.record_padded_bytes(pad.size * pad.itemsize)
+        return np.concatenate([ids, pad], axis=1)
 
     # ------------------------------------------------------ persistence
 

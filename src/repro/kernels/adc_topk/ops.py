@@ -186,6 +186,51 @@ def pq_pool_scan(codes_t, lut, cand, valid, kp: int):
             jnp.take_along_axis(valid, pos, axis=1))
 
 
+@functools.partial(jax.jit, static_argnames=("kp",))
+def sq_oblivious_scan(c8_dev, cn_dev, q8, member, kp: int):
+    """Scan-oblivious int8 ADC IVF scan (DESIGN.md §14): surrogate
+    distances over EVERY code row, masked by per-query pool membership.
+
+    c8_dev: (n, d) int8 codes; cn_dev: (n,) int32; q8: (nq, d) int8;
+    member: (nq, n) bool (search_engine.pool_membership) -> (ids
+    (nq, kp), valid (nq, kp)).  One constant-shape matmul over the full
+    code bucket — no data-dependent gather, so the access pattern
+    reveals nothing about the probes.  Member rows get bit-identical
+    cn - 2*(q8.c8) values to `sq_pool_scan` (exact int accumulation in
+    f32 below 2^24), so the candidate set matches the pruned scan.
+    """
+    cross = jax.lax.dot_general(
+        q8.astype(jnp.float32), c8_dev.astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    d = cn_dev.astype(jnp.float32)[None, :] - 2.0 * cross
+    d = jnp.where(member, d, jnp.inf)
+    kp = min(kp, d.shape[1])
+    _, pos = jax.lax.top_k(-d, kp)
+    return (pos.astype(jnp.int32),
+            jnp.take_along_axis(member, pos, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("kp",))
+def pq_oblivious_scan(codes_t, lut, member, kp: int):
+    """Scan-oblivious PQ ADC IVF scan: full-bucket LUT accumulation
+    masked by per-query pool membership.
+
+    codes_t: (m, n) uint8; lut: (nq, m, 256) f32; member: (nq, n) bool
+    -> (ids (nq, kp), valid (nq, kp)).  Same distance values as
+    `pq_pool_scan` for member rows, constant access pattern.
+    """
+    nq = lut.shape[0]
+    cc = jnp.broadcast_to(codes_t.astype(jnp.int32)[None],
+                          (nq,) + codes_t.shape)
+    g = jnp.take_along_axis(lut, cc, axis=2)        # (nq, m, n)
+    d = jnp.where(member, g.sum(axis=1), jnp.inf)
+    kp = min(kp, d.shape[1])
+    _, pos = jax.lax.top_k(-d, kp)
+    return (pos.astype(jnp.int32),
+            jnp.take_along_axis(member, pos, axis=1))
+
+
 # Opt-in kernel profiling (repro.obs, DESIGN.md §13): strict
 # passthrough unless a KernelProfiler is active; `_cache_size` is
 # preserved for the recompile audit.
@@ -195,3 +240,7 @@ sq_knn = _instrument("adc_topk.sq_knn", sq_knn)
 pq_knn = _instrument("adc_topk.pq_knn", pq_knn)
 sq_pool_scan = _instrument("adc_topk.sq_pool_scan", sq_pool_scan)
 pq_pool_scan = _instrument("adc_topk.pq_pool_scan", pq_pool_scan)
+sq_oblivious_scan = _instrument("adc_topk.sq_oblivious_scan",
+                                sq_oblivious_scan)
+pq_oblivious_scan = _instrument("adc_topk.pq_oblivious_scan",
+                                pq_oblivious_scan)

@@ -1,0 +1,54 @@
+"""repro.sec — leakage-tiered security profiles + the leakage
+measurement harness (DESIGN.md §14).
+
+Two halves:
+
+  `profiles`  the `SecurityProfile` tiers (`perf` / `balanced` /
+              `hardened` / `oblivious-sketch`) wired through
+              `IndexSpec.security_profile` — each names one point on
+              the leakage-vs-QPS frontier (batch padding, dummy-query
+              injection, fixed-shape results, scan-oblivious filters).
+  `leakage`   the measurement side: replay the server's view
+              (ciphertexts, ADC codes, access traces) and run the
+              revived §III KPA attacks plus the new DCE/ADC/trace
+              distinguishers against every profile, reporting
+              normalized attack success (0 = random guessing, 1 =
+              exact recovery).
+
+`benchmarks/bench_attacks.py` joins the two into the repo-root
+`BENCH_attacks.json` frontier; `scripts/check_api.py` gates this
+export surface.
+"""
+
+import importlib
+
+_EXPORTS = {
+    # profiles
+    "SecurityProfile": ".profiles",
+    "PROFILES": ".profiles",
+    "SECURITY_PROFILE_NAMES": ".profiles",
+    "DEFAULT_PROFILE": ".profiles",
+    "get_profile": ".profiles",
+    # leakage harness
+    "AttackResult": ".leakage",
+    "ServerView": ".leakage",
+    "capture_server_view": ".leakage",
+    "aspe_kpa_attack": ".leakage",
+    "dce_kpa_attack": ".leakage",
+    "adc_code_attack": ".leakage",
+    "access_pattern_attack": ".leakage",
+    "evaluate_profile": ".leakage",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        mod = importlib.import_module(_EXPORTS[name], __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -286,7 +286,20 @@ class MicroBatcher(Scheduler):
                  max_wait_ms: float = 2.0, max_queue: int = 256,
                  telemetry=None, verify_parity: bool = False,
                  verify_lock=None, clock: Clock | None = None,
-                 name: str = "collection", tracer=None):
+                 name: str = "collection", tracer=None,
+                 pad_policy: str = "replicate"):
+        # batch-padding policy (repro.sec, DESIGN.md §14):
+        #   "replicate"  pad rows replicate a real query (perf)
+        #   "dummy"      pad rows are zero dummy queries, counted in
+        #                SearchStats.n_dummy_queries and telemetry
+        #   "full"       dummy-pad every flush to max_batch, so batch
+        #                size never leaks — still one warmup-compiled
+        #                bucket per group, zero recompiles
+        # Padded rows never reach a future under any policy, so results
+        # are identical across policies.
+        if pad_policy not in ("replicate", "dummy", "full"):
+            raise ValueError(f"unknown pad_policy {pad_policy!r}")
+        self.pad_policy = pad_policy
         self.max_wait_s = float(max_wait_ms) / 1e3
         self.verify_parity = verify_parity
         # held across the batched call AND the parity re-runs, so a
@@ -339,10 +352,18 @@ class MicroBatcher(Scheduler):
         t_take = self.clock.now()      # queue wait ends, assembly begins
         batch_tid = ""
         try:
-            bucket = next_bucket(B, minimum=1, maximum=self.max_batch)
-            Q = np.stack([r.Q for r in batch]
-                         + [batch[0].Q] * (bucket - B))  # pad = replicate
-            T = np.stack([r.T for r in batch] + [batch[0].T] * (bucket - B))
+            bucket = (self.max_batch if self.pad_policy == "full"
+                      else next_bucket(B, minimum=1,
+                                       maximum=self.max_batch))
+            if self.pad_policy == "replicate":
+                pad_q, pad_t = batch[0].Q, batch[0].T
+                n_dummies = 0
+            else:           # dummy rows: zero-content queries that ride
+                pad_q = np.zeros_like(batch[0].Q)     # the batched call
+                pad_t = np.zeros_like(batch[0].T)     # but no future
+                n_dummies = bucket - B
+            Q = np.stack([r.Q for r in batch] + [pad_q] * (bucket - B))
+            T = np.stack([r.T for r in batch] + [pad_t] * (bucket - B))
             lock = (self.verify_lock if self.verify_parity
                     and self.verify_lock is not None
                     else contextlib.nullcontext())
@@ -361,6 +382,7 @@ class MicroBatcher(Scheduler):
                 with bspan:
                     ids, stats = self._run_batch(Q, T, k, ratio_k=ratio_k,
                                                  ef_search=ef_search)
+                    stats.n_dummy_queries = n_dummies
                     # sojourn latency ends when results are computed —
                     # before the (debug-only) parity sweep below, which
                     # would inflate p99
@@ -400,4 +422,4 @@ class MicroBatcher(Scheduler):
         if self.telemetry is not None:
             self.telemetry.record_flush(
                 B, [now - r.t_enq for r in batch], stats,
-                queue_depth, shape=Q.shape)
+                queue_depth, shape=Q.shape, n_dummies=n_dummies)

@@ -61,10 +61,21 @@ class Collection:
                  compact_every: int = 4096, verify_parity: bool = False,
                  keyless: bool = False, placement=None,
                  scheduler: str = "flush", clock=None, tracer=None,
-                 metrics=None, **backend_kw):
+                 metrics=None, security_profile: str = "perf",
+                 **backend_kw):
         self.tenant = tenant
         self.name = name
         self.d = d
+        # leakage tier (repro.sec, DESIGN.md §14): resolves the profile
+        # once and threads its knobs into the layers that implement it —
+        # oblivious scan variants into the backend, the dummy-padding
+        # policy into the scheduler.  Result-width padding happens in
+        # the API layer (repro.api.roles), which reads the same profile
+        # off its IndexSpec.
+        from ...sec import get_profile
+        self.security_profile = get_profile(security_profile)
+        if self.security_profile.oblivious:
+            backend_kw["oblivious"] = True
         # obs (DESIGN.md §13): tracer = repro.obs.TraceRecorder (request/
         # batch/ingest span trees), metrics = repro.obs.MetricsRegistry
         # (cross-collection Prometheus instruments).  Both default off.
@@ -117,19 +128,22 @@ class Collection:
             raise ValueError(f"unknown scheduler {scheduler!r} "
                              f"(have {SCHEDULERS})")
         self.scheduler = scheduler
+        pad_policy = self.security_profile.pad_policy
         if scheduler == "continuous":
             self.batcher = SlotLoop(
                 self._run_batch, max_batch=max_batch, max_queue=max_queue,
                 d=d, cdim=dce.ciphertext_dim(d), telemetry=self.telemetry,
                 verify_parity=verify_parity, verify_lock=self._lock,
-                clock=clock, name=f"{tenant}/{name}", tracer=tracer)
+                clock=clock, name=f"{tenant}/{name}", tracer=tracer,
+                pad_policy=pad_policy)
         else:
             self.batcher = MicroBatcher(
                 self._run_batch, max_batch=max_batch,
                 max_wait_ms=max_wait_ms, max_queue=max_queue,
                 telemetry=self.telemetry, verify_parity=verify_parity,
                 verify_lock=self._lock, clock=clock,
-                name=f"{tenant}/{name}", tracer=tracer)
+                name=f"{tenant}/{name}", tracer=tracer,
+                pad_policy=pad_policy)
 
     # ------------------------------------------------------------ keys
 
@@ -413,6 +427,7 @@ class Collection:
         snap = self.telemetry.snapshot()
         snap.update(tenant=self.tenant, collection=self.name,
                     scheduler=self.scheduler,
+                    security_profile=self.security_profile.name,
                     n_total=self.store.n_total, n_alive=self.store.n_alive,
                     n_delta=self.store.delta_size)
         return snap

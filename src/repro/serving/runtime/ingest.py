@@ -206,9 +206,14 @@ class DeltaAwareBackend:
                  hnsw_ef_construction: int = 200,
                  delta_bucket_min: int = 128, seed: int = 0,
                  quantization: str | None = None,
-                 refine_ratio: float | None = None, pq_m: int = 16):
+                 refine_ratio: float | None = None, pq_m: int = 16,
+                 oblivious: bool = False):
         if kind not in ("flat", "ivf", "hnsw"):
             raise ValueError(f"unknown backend kind {kind!r}")
+        if oblivious and kind == "hnsw":
+            raise ValueError("scan-oblivious filtering needs flat|ivf "
+                             "backends (graph traversal is data-"
+                             "dependent by construction, DESIGN.md §14)")
         if quantization not in adc.QUANTIZATIONS:
             raise ValueError(f"unknown quantization {quantization!r} "
                              f"(have {adc.QUANTIZATIONS})")
@@ -217,6 +222,11 @@ class DeltaAwareBackend:
                              "(the graph walk reads full-precision rows)")
         self.store = store
         self.kind = kind
+        # scan-oblivious access-pattern flattening (repro.sec,
+        # DESIGN.md §14).  The flat scans are full-bucket already —
+        # the flag only reroutes the IVF paths from the pooled gather
+        # scans to the membership-masked full-bucket scans.
+        self.oblivious = bool(oblivious)
         self.quantization = quantization
         self.name = (kind if quantization is None
                      else f"adc-{kind}-{quantization}")
@@ -559,6 +569,29 @@ class DeltaAwareBackend:
                     np.zeros((nq, kp2), bool), 0)
         Q = np.asarray(Q_sap, np.float32)
         pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        if self.oblivious:
+            # membership-masked full-code scan (DESIGN.md §14): the
+            # bucketed code arrays already span every row, so the
+            # oblivious variant reuses them with a (nq, bucket) mask
+            bucket = int(self._adc_ok.shape[0])
+            member = se.pool_membership(
+                nq, pools, bucket, pool_mask=lambda p: st.alive_view[p])
+            if self.quantization == "int8":
+                q8 = self.adc_codebook.encode_query(Q)
+                ids, vout = adc_ops.sq_oblivious_scan(
+                    self._adc_c8, self._adc_cn, jnp.asarray(q8),
+                    jnp.asarray(member), min(kp2, bucket))
+            else:
+                lut = self.adc_codebook.lut(Q)
+                ids, vout = adc_ops.pq_oblivious_scan(
+                    self._adc_codes_t, jnp.asarray(lut),
+                    jnp.asarray(member), min(kp2, bucket))
+            ids, vout = self._mask_alive(np.asarray(ids, np.int32),
+                                         np.asarray(vout))
+            evals = nq * bucket + nq * self.ivf.centroids.shape[0]
+            self.last_filter_bytes = (self._adc_code_bytes(bucket)
+                                      + self.ivf.centroids.nbytes)
+            return ids, vout, evals
         cand, valid = se.layout_pools(nq, pools, kp2,
                                       pool_mask=lambda p: st.alive_view[p])
         if self.quantization == "int8":
@@ -625,6 +658,20 @@ class DeltaAwareBackend:
                     np.zeros((nq, kp), bool), 0)
         Q = np.asarray(Q_sap, np.float32)
         pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        if self.oblivious:
+            # full-bucket membership-masked scan: every resident row is
+            # touched for every query, so evals/bytes are constants of
+            # the bucket — the access-pattern observable the hardened
+            # profiles flatten (DESIGN.md §14)
+            bucket = int(self._C_all.shape[0])
+            ids, vout = se.scan_ivf_oblivious(
+                self._C_all, Q, pools, kp,
+                pool_mask=lambda p: st.alive_view[p])
+            ids, vout = self._mask_alive(ids, vout)
+            evals = nq * bucket + nq * self.ivf.centroids.shape[0]
+            self.last_filter_bytes = (bucket * st.d * 4
+                                      + self.ivf.centroids.nbytes)
+            return ids, vout, evals
         ids, vout = se.scan_ivf_pools(
             self._C_all, Q, pools, kp,
             pool_mask=lambda p: st.alive_view[p])

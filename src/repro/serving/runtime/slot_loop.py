@@ -64,7 +64,16 @@ class SlotLoop(Scheduler):
                  cdim: int | None = None, telemetry=None,
                  verify_parity: bool = False, verify_lock=None,
                  clock: Clock | None = None, name: str = "collection",
-                 tracer=None):
+                 tracer=None, pad_policy: str = "replicate"):
+        # Padding policy (repro.sec, DESIGN.md §14).  The slot table is
+        # always full-shape, so "full" adds nothing over "dummy" here;
+        # under either, freed rows are scrubbed to zeros (a fixed dummy
+        # query instead of a stale real one) and the inactive rows are
+        # counted as dummies in SearchStats/telemetry.  "replicate"
+        # (perf) keeps the PR-6 behaviour: stale rows ride unscrubbed.
+        if pad_policy not in ("replicate", "dummy", "full"):
+            raise ValueError(f"unknown pad_policy {pad_policy!r}")
+        self.pad_policy = pad_policy
         self._Q = self._T = None
         self._ok = np.zeros(int(max_batch), bool)
         self._slots = [None] * int(max_batch)        # _Request per row
@@ -174,6 +183,9 @@ class SlotLoop(Scheduler):
                     ids, stats = self._run_batch(self._Q, self._T, k,
                                                  ratio_k=ratio_k,
                                                  ef_search=ef_search)
+                    n_dummies = (self.capacity - int(active.size)
+                                 if self.pad_policy != "replicate" else 0)
+                    stats.n_dummy_queries = n_dummies
                     now = self.clock.now()
                     if tracer is not None:
                         sspan.set(**_stats_attrs(stats))
@@ -213,8 +225,12 @@ class SlotLoop(Scheduler):
         if self.telemetry is not None:
             self.telemetry.record_step(
                 len(active), self.capacity, sojourn, insert_to_emit,
-                stats, queue_depth, shape=self._Q.shape)
+                stats, queue_depth, shape=self._Q.shape,
+                n_dummies=n_dummies)
 
     def _free(self, slot: int):
         self._ok[slot] = False
         self._slots[slot] = None
+        if self.pad_policy != "replicate" and self._Q is not None:
+            self._Q[slot] = 0.0          # scrub: freed row becomes the
+            self._T[slot] = 0.0          # fixed zero dummy query

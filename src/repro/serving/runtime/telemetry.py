@@ -57,6 +57,7 @@ def jit_cache_size() -> int:
     fns = (
         se.refine_candidates,
         se._masked_pruned_scan,
+        se._masked_full_scan,
         l2_ops.knn,
         dce_ops.batched_top_k_by_wins,
         dce._encrypt_jax_core,
@@ -65,6 +66,8 @@ def jit_cache_size() -> int:
         adc_ops.pq_knn,
         adc_ops.sq_pool_scan,
         adc_ops.pq_pool_scan,
+        adc_ops.sq_oblivious_scan,
+        adc_ops.pq_oblivious_scan,
     )
     return sum(f._cache_size() for f in fns) + sharded.cache_size()
 
@@ -110,6 +113,12 @@ class CollectionTelemetry:
         self.filter_bytes_scanned = 0
         self.bytes_up = 0
         self.bytes_down = 0
+        # security-profile overhead accounting (repro.sec, DESIGN.md
+        # §14): dummy padding rows the schedulers injected, and result
+        # bytes added by fixed-shape id padding.  Dummies never count
+        # toward QPS/occupancy — those track n_real/n_active only.
+        self.n_dummy_queries = 0
+        self.padded_result_bytes = 0
         self._wire_metrics(metrics, labels or {})
 
     # ------------------------------------------------- metrics exposition
@@ -146,6 +155,12 @@ class CollectionTelemetry:
                        "Serialized request bytes, client to server")
         self._m_down = c("ann_bytes_down_total",
                          "Serialized result bytes, server to client")
+        self._m_dummies = c("ann_dummy_queries_total",
+                            "Dummy padding rows injected by the "
+                            "scheduler (security profiles)")
+        self._m_padded = c("ann_padded_bytes_total",
+                           "Result bytes added by fixed-shape id "
+                           "padding (security profiles)")
         self._m_queue = metrics.gauge(
             "ann_queue_depth", "Requests waiting in the scheduler queue",
             names)
@@ -199,6 +214,7 @@ class CollectionTelemetry:
         self.filter_bytes_scanned += stats.filter_bytes_scanned
         self.bytes_up += stats.bytes_up
         self.bytes_down += stats.bytes_down
+        self.n_dummy_queries += stats.n_dummy_queries
 
     def _export_stats(self, stats, latencies_s):
         self._m_dist.inc(stats.filter_dist_evals, **self._labels)
@@ -210,9 +226,12 @@ class CollectionTelemetry:
             self._m_latency.observe(float(x), **self._labels)
 
     def record_flush(self, n_real: int, latencies_s, stats,
-                     queue_depth: int, shape=None):
+                     queue_depth: int, shape=None, n_dummies: int = 0):
         """One micro-batch flush: n_real real requests rode one engine
-        call whose uniform accounting is `stats` (a SearchStats)."""
+        call whose uniform accounting is `stats` (a SearchStats).
+        `n_dummies` padding rows (security profiles) rode alongside —
+        they feed `ann_dummy_queries_total` but never the QPS window,
+        which counts n_real only."""
         now = self.clock.now()
         with self._lock:
             self.n_batches += 1
@@ -228,12 +247,14 @@ class CollectionTelemetry:
             self._m_batches.inc(**self._labels)
             self._m_batched.inc(n_real, **self._labels)
             self._m_queue.set(queue_depth, **self._labels)
+            if n_dummies:
+                self._m_dummies.inc(n_dummies, **self._labels)
             self._export_stats(stats, latencies_s)
             self._record_compiles(shape)
 
     def record_step(self, n_active: int, capacity: int, sojourn_s,
                     insert_to_emit_s, stats, queue_depth: int,
-                    shape=None):
+                    shape=None, n_dummies: int = 0):
         """One slot-table step (DESIGN.md §12): n_active of capacity
         slots held requests; both sojourn streams feed the reservoirs."""
         now = self.clock.now()
@@ -254,11 +275,24 @@ class CollectionTelemetry:
             self._m_steps.inc(**self._labels)
             self._m_batched.inc(n_active, **self._labels)
             self._m_queue.set(queue_depth, **self._labels)
+            if n_dummies:
+                self._m_dummies.inc(n_dummies, **self._labels)
             self._m_slot_occ.set(occ, **self._labels)
             self._export_stats(stats, sojourn_s)
             for x in insert_to_emit_s:
                 self._m_sojourn.observe(float(x), **self._labels)
             self._record_compiles(shape)
+
+    def record_padded_bytes(self, n_bytes: int):
+        """Result bytes added by fixed-shape id padding (security
+        profiles) — fed by the API layer at result-padding time, since
+        the engine's `bytes_down` counts the unpadded payload."""
+        if n_bytes <= 0:
+            return
+        with self._lock:
+            self.padded_result_bytes += n_bytes
+        if self._m_requests is not None:
+            self._m_padded.inc(n_bytes, **self._labels)
 
     def record_ingest(self, n_inserted: int = 0, n_deleted: int = 0,
                       compacted: bool = False):
@@ -316,6 +350,8 @@ class CollectionTelemetry:
                 "filter_bytes_scanned": self.filter_bytes_scanned,
                 "bytes_up": self.bytes_up,
                 "bytes_down": self.bytes_down,
+                "n_dummy_queries": self.n_dummy_queries,
+                "padded_result_bytes": self.padded_result_bytes,
                 "qps": served / span if span > 0 else 0.0,
                 "batch_occupancy": occupancy,
                 "slot_occupancy": slot_occ,

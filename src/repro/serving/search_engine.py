@@ -48,6 +48,7 @@ from ..obs.trace import child_span
 __all__ = ["SearchStats", "SecureSearchEngine", "FlatScanFilter",
            "IVFScanFilter", "HNSWGraphFilter", "ADCFilter",
            "refine_candidates", "layout_pools", "scan_ivf_pools",
+           "pool_membership", "scan_ivf_oblivious",
            "traverse_graph_candidates"]
 
 
@@ -71,6 +72,12 @@ class SearchStats:
     # ADC backends — the direct observable of the bandwidth win
     # (DESIGN.md §11).  0 for an empty collection.
     filter_bytes_scanned: int = 0
+    # dummy padding rows injected by the scheduler under padding
+    # security profiles (repro.sec, DESIGN.md §14).  Dummies ride the
+    # engine call but never a user-visible future, and the telemetry
+    # QPS/occupancy accounting excludes them.  Additive wire field:
+    # results serialized before it decode with 0.
+    n_dummy_queries: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +166,54 @@ def scan_ivf_pools(C_dev, Q_sap: np.ndarray, pools, kp: int,
     ids, vout = _masked_pruned_scan(
         C_dev, jnp.asarray(np.asarray(Q_sap, np.float32)),
         jnp.asarray(cand), jnp.asarray(valid), kp)
+    return np.asarray(ids), np.asarray(vout)
+
+
+@functools.partial(jax.jit, static_argnames=("kp",))
+def _masked_full_scan(C_all, Q, member, kp: int):
+    """Scan-oblivious IVF filter inner loop (DESIGN.md §14): ciphertext
+    distances over EVERY resident row, masked afterwards by per-query
+    pool membership.
+
+    The access pattern is a constant — one (nq, bucket) matmul whose
+    shape depends only on the row bucket, no data-dependent gather — so
+    which rows a query's probes selected is not observable from the
+    scan.  The distances themselves are the same ||q||^2 - 2 q.x +
+    ||x||^2 values the pruned scan computes for member rows, so the
+    surviving candidate set matches `_masked_pruned_scan` and the exact
+    DCE refine returns identical ids (the cross-profile parity tests).
+    Returns (ids, valid) of the per-query top-kp over member rows.
+    """
+    qn = (Q * Q).sum(-1)[:, None]
+    xn = (C_all * C_all).sum(-1)[None, :]
+    d = qn - 2.0 * Q @ C_all.T + xn                     # (nq, bucket)
+    d = jnp.where(member, d, jnp.inf)
+    kp = min(kp, d.shape[1])
+    _, pos = jax.lax.top_k(-d, kp)
+    return (pos.astype(jnp.int32),
+            jnp.take_along_axis(member, pos, axis=1))
+
+
+def pool_membership(nq: int, pools, bucket: int, pool_mask=None):
+    """(nq, bucket) bool membership mask for the oblivious scans:
+    member[qi, r] iff row r is in query qi's probe pool (and passes
+    pool_mask, e.g. tombstone filtering).  Host-side layout only — the
+    device never sees the ragged pools."""
+    member = np.zeros((nq, bucket), bool)
+    for qi, p in enumerate(pools):
+        member[qi, p] = True if pool_mask is None else pool_mask(p)
+    return member
+
+
+def scan_ivf_oblivious(C_dev, Q_sap: np.ndarray, pools, kp: int,
+                       pool_mask=None):
+    """Oblivious twin of `scan_ivf_pools`: full-bucket masked scan over
+    the resident scan array.  Returns (ids (nq, kp), valid (nq, kp))."""
+    nq = Q_sap.shape[0]
+    member = pool_membership(nq, pools, int(C_dev.shape[0]), pool_mask)
+    ids, vout = _masked_full_scan(
+        C_dev, jnp.asarray(np.asarray(Q_sap, np.float32)),
+        jnp.asarray(member), kp)
     return np.asarray(ids), np.asarray(vout)
 
 

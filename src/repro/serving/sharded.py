@@ -59,7 +59,7 @@ from ..kernels.dce_comp import ops as dce_ops
 from ..launch.mesh import make_mesh
 from ..obs.trace import child_complete, current as obs_current
 from .runtime.ingest import SENTINEL, DeltaAwareBackend
-from .search_engine import layout_pools
+from .search_engine import layout_pools, pool_membership
 
 __all__ = ["ShardedBackend", "sharded_mesh", "shard_bucket"]
 
@@ -142,6 +142,80 @@ def _sharded_pool_scan(C_sh, Q, cand, valid, *, mesh, axis, kp: int):
                                P(None, None), P(None, None)),
                      out_specs=(P(None, None), P(None, None)),
                      check_rep=False)(C_sh, Q, cand, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "kp"))
+def _sharded_oblivious_scan(C_sh, Q, member, *, mesh, axis, kp: int):
+    """Row-sharded scan-oblivious IVF filter (DESIGN.md §14): each shard
+    scans ALL of its rows for every query — a constant-shape local
+    matmul, no data-dependent gather — masks by its slice of the
+    (nq, bucket) pool-membership matrix, and the usual local-top-k' /
+    all-gather(k'/shard) merge follows.  Returns global ids only;
+    validity is a host-side membership lookup (the mask is host data)."""
+
+    def body(C_loc, Q_rep, m_loc):
+        n_loc = C_loc.shape[0]
+        qn = (Q_rep * Q_rep).sum(-1, keepdims=True)
+        xn = (C_loc * C_loc).sum(-1)[None, :]
+        d = qn - 2.0 * Q_rep @ C_loc.T + xn               # (nq, n_loc)
+        d = jnp.where(m_loc, d, jnp.inf)
+        kp_loc = min(kp, n_loc)
+        neg, idx = jax.lax.top_k(-d, kp_loc)
+        return _local_merge(axis, neg, idx, n_loc, kp)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis, None), P(None, None),
+                               P(None, axis)),
+                     out_specs=P(None, None),
+                     check_rep=False)(C_sh, Q, member)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "kp"))
+def _sharded_sq_oblivious(C8_sh, cn_sh, Q8, member, *, mesh, axis,
+                          kp: int):
+    """Row-sharded scan-oblivious int8 ADC IVF filter: full local code
+    scan masked by the shard's membership columns + all-gather merge."""
+
+    def body(C_loc, cn_loc, Q_rep, m_loc):
+        n_loc = C_loc.shape[0]
+        cross = jax.lax.dot_general(
+            Q_rep.astype(jnp.float32), C_loc.astype(jnp.float32),
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        d = cn_loc.astype(jnp.float32)[None, :] - 2.0 * cross
+        d = jnp.where(m_loc, d, jnp.inf)
+        kp_loc = min(kp, n_loc)
+        neg, idx = jax.lax.top_k(-d, kp_loc)
+        return _local_merge(axis, neg, idx, n_loc, kp)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis, None), P(axis), P(None, None),
+                               P(None, axis)),
+                     out_specs=P(None, None),
+                     check_rep=False)(C8_sh, cn_sh, Q8, member)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "kp"))
+def _sharded_pq_oblivious(codes_t_sh, lut, member, *, mesh, axis,
+                          kp: int):
+    """Row-sharded scan-oblivious PQ ADC IVF filter: full local LUT
+    accumulation masked by the shard's membership columns."""
+
+    def body(ct_loc, lut_rep, m_loc):
+        n_loc = ct_loc.shape[1]
+        cc = jnp.broadcast_to(ct_loc.astype(jnp.int32)[None],
+                              (lut_rep.shape[0],) + ct_loc.shape)
+        g = jnp.take_along_axis(lut_rep, cc, axis=2)      # (nq, m, n_loc)
+        d = jnp.where(m_loc, g.sum(axis=1), jnp.inf)
+        kp_loc = min(kp, n_loc)
+        neg, idx = jax.lax.top_k(-d, kp_loc)
+        return _local_merge(axis, neg, idx, n_loc, kp)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, axis), P(None, None, None),
+                               P(None, axis)),
+                     out_specs=P(None, None),
+                     check_rep=False)(codes_t_sh, lut, member)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "axis", "k"))
@@ -307,7 +381,9 @@ def cache_size() -> int:
     return sum(f._cache_size() for f in
                (_sharded_flat_topk, _sharded_pool_scan, _sharded_refine,
                 _sharded_sq_topk, _sharded_pq_topk,
-                _sharded_sq_pool_scan, _sharded_pq_pool_scan))
+                _sharded_sq_pool_scan, _sharded_pq_pool_scan,
+                _sharded_oblivious_scan, _sharded_sq_oblivious,
+                _sharded_pq_oblivious))
 
 
 # ---------------------------------------------------------------------------
@@ -507,6 +583,31 @@ class ShardedBackend(DeltaAwareBackend):
                     np.zeros((nq, kp2), bool), 0)
         Q = np.asarray(Q_sap, np.float32)
         pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        if self.oblivious:
+            bucket = int(self._adc_ok.shape[0])
+            member = pool_membership(
+                nq, pools, bucket, pool_mask=lambda p: st.alive_view[p])
+            kp_eff = min(kp2, bucket)
+            if self.quantization == "int8":
+                q8 = self.adc_codebook.encode_query(Q)
+                ids = _sharded_sq_oblivious(
+                    self._adc_c8, self._adc_cn, jnp.asarray(q8),
+                    jnp.asarray(member), mesh=self.mesh, axis=self.axis,
+                    kp=kp_eff)
+            else:
+                lut = self.adc_codebook.lut(Q)
+                ids = _sharded_pq_oblivious(
+                    self._adc_codes_t, jnp.asarray(lut),
+                    jnp.asarray(member), mesh=self.mesh, axis=self.axis,
+                    kp=kp_eff)
+            ids = np.asarray(ids, np.int32)
+            # validity = host-side membership lookup at the merged ids
+            vout = member[np.arange(nq)[:, None], np.clip(ids, 0, bucket - 1)]
+            ids, vout = self._mask_alive(ids, vout)
+            evals = nq * bucket + nq * self.ivf.centroids.shape[0]
+            self.last_filter_bytes = (self._adc_code_bytes(bucket)
+                                      + self.ivf.centroids.nbytes)
+            return ids, vout, evals
         cand, valid = layout_pools(nq, pools, kp2,
                                    pool_mask=lambda p: st.alive_view[p])
         if self.quantization == "int8":
@@ -547,6 +648,20 @@ class ShardedBackend(DeltaAwareBackend):
                     np.zeros((nq, kp), bool), 0)
         Q = np.asarray(Q_sap, np.float32)
         pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        if self.oblivious:
+            bucket = int(self._C_all.shape[0])
+            member = pool_membership(
+                nq, pools, bucket, pool_mask=lambda p: st.alive_view[p])
+            ids = np.asarray(_sharded_oblivious_scan(
+                self._C_all, jnp.asarray(Q), jnp.asarray(member),
+                mesh=self.mesh, axis=self.axis,
+                kp=min(kp, bucket)), np.int32)
+            vout = member[np.arange(nq)[:, None], np.clip(ids, 0, bucket - 1)]
+            ids, vout = self._mask_alive(ids, vout)
+            evals = nq * bucket + nq * self.ivf.centroids.shape[0]
+            self.last_filter_bytes = (bucket * st.d * 4
+                                      + self.ivf.centroids.nbytes)
+            return ids, vout, evals
         cand, valid = layout_pools(nq, pools, kp,
                                    pool_mask=lambda p: st.alive_view[p])
         ids, vout = _sharded_pool_scan(

@@ -8,7 +8,14 @@ recovery from a small leaked subset.
 import numpy as np
 import pytest
 
-from repro.core import aspe, attacks
+from repro.core import aspe, attacks, dce
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # optional dep
+    HAVE_HYPOTHESIS = False
 
 
 @pytest.mark.parametrize("transform", ["linear", "exp", "log"])
@@ -50,3 +57,85 @@ def test_aspe_leak_is_comparison_faithful():
                   aspe.encrypt_query(q, key), key, "linear")[:, 0]
     dist = ((P - q[0]) ** 2).sum(-1)
     assert (np.argsort(L) == np.argsort(dist)).all()
+
+
+# ---------------------------------------------------------------------------
+# Normalized attack success (repro.sec, DESIGN.md §14).
+# ---------------------------------------------------------------------------
+
+def test_normalized_success_endpoints():
+    assert attacks.normalized_success(0.0, 2.0) == 1.0       # exact recovery
+    assert attacks.normalized_success(2.0, 2.0) == 0.0       # at chance
+    assert attacks.normalized_success(5.0, 2.0) == 0.0       # worse: clamped
+    assert attacks.normalized_success(1.0, 0.0) == 0.0       # degenerate
+    assert 0.0 < attacks.normalized_success(1.0, 2.0) < 1.0
+
+
+def test_random_guess_error_scales_with_data():
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((64, 8))
+    base = attacks.random_guess_error(X)
+    assert base > 0
+    assert attacks.random_guess_error(10.0 * X) == pytest.approx(
+        10.0 * base, rel=1e-9)
+
+
+@pytest.mark.parametrize("transform", ["linear", "exp", "log", "square"])
+def test_attack_report_normalized_broken(transform):
+    """Every ASPE transform attack scores ~1.0 success in normalized
+    units — the BENCH_attacks 'BROKEN' rows, gated at unit scale."""
+    d = 8 if transform == "square" else 12
+    rep = attacks.attack_report(d=d, n=100, nq=60, transform=transform)
+    assert rep["query_success"] > 0.999
+    assert rep["db_success"] > 0.999
+    assert rep["query_baseline"] > 0
+    assert rep["query_err"] < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# DCE comparisons expose only signs (Thm 3/4 as a property).
+# ---------------------------------------------------------------------------
+
+def _dce_sign_case(seed: int, d: int, enc_seed: int):
+    rng = np.random.default_rng(seed)
+    key = dce.keygen(d, seed=seed)
+    o, p, q = rng.standard_normal((3, d))
+    true_gap = float(((o - q) ** 2).sum() - ((p - q) ** 2).sum())
+    zs = []
+    for s in range(5):                       # 5 fresh re-encryptions
+        C = dce.encrypt(np.stack([o, p]), key, seed=enc_seed + s,
+                        dtype=np.float64)
+        T = dce.trapgen(q[None], key, seed=enc_seed + 100 + s,
+                        dtype=np.float64)[0]
+        zs.append(float(dce.distance_comp(C[0], C[1], T)))
+    return true_gap, np.asarray(zs)
+
+
+def _assert_signs_only(true_gap: float, zs: np.ndarray):
+    scale = max(abs(true_gap), 1.0)
+    if abs(true_gap) > 1e-6 * scale:
+        # the sign is faithful under every fresh encryption...
+        assert (np.sign(zs) == np.sign(true_gap)).all()
+        # ...but the magnitude is re-randomized per encryption (fresh
+        # r_o r_p r_q each time), so magnitudes carry no stable value
+        rel_spread = np.abs(zs).std() / np.abs(zs).mean()
+        assert rel_spread > 1e-3
+
+
+def test_dce_comparisons_expose_only_signs_fixed_cases():
+    for seed in range(8):
+        true_gap, zs = _dce_sign_case(seed, d=6 + seed % 3, enc_seed=seed)
+        _assert_signs_only(true_gap, zs)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), d=st.integers(2, 12),
+           enc_seed=st.integers(0, 2 ** 16))
+    def test_dce_comparisons_expose_only_signs_property(seed, d, enc_seed):
+        true_gap, zs = _dce_sign_case(seed, d, enc_seed)
+        _assert_signs_only(true_gap, zs)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_dce_comparisons_expose_only_signs_property():
+        pass

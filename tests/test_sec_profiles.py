@@ -1,0 +1,238 @@
+"""Security profiles (repro.sec, DESIGN.md §14): registry semantics,
+IndexSpec wire round-trips, dummy/padding accounting, and the
+acceptance bar — returned real ids bit-identical to `perf` under every
+profile, across both schedulers, f32 and quantized ADC filters, and
+single + sharded placement.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (DataOwnerClient, IndexSpec, PlacementSpec,
+                       SearchParams, SearchRequest, SearchResult,
+                       SecureAnnService, WireFormatError, suggest_beta)
+from repro.data import synth
+from repro.sec import (DEFAULT_PROFILE, PROFILES, SECURITY_PROFILE_NAMES,
+                       SecurityProfile, get_profile)
+
+D = 16
+N = 600
+
+
+def _need_devices(n_shards: int):
+    if n_shards > jax.device_count():
+        pytest.skip(f"needs {n_shards} devices, have {jax.device_count()} "
+                    f"(run under XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=2)")
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return synth.make_dataset("sift1m", n=N, n_queries=6, d=D, k_gt=10,
+                              seed=0)
+
+
+@pytest.fixture(scope="module")
+def owner_and_query(ds):
+    spec = IndexSpec(tenant="t", name="base", d=D,
+                     sap_beta=suggest_beta(ds.base, fraction=0.05), seed=5)
+    owner = DataOwnerClient(spec)
+    C_sap, C_dce = owner.encrypt_vectors(ds.base, seed=11)
+    user = owner.query_client()
+    return spec, owner, C_sap, C_dce, user.encrypt_queries(ds.queries)
+
+
+def _one(query):
+    """Slice a batch EncryptedQuery down to its first query."""
+    return dataclasses.replace(query, C_sap=query.C_sap[:1],
+                               T=query.T[:1])
+
+
+def _spec(base, profile, name, *, quant=None, scheduler="flush",
+          backend="ivf"):
+    extra = dict(n_partitions=8, nprobe=3) if backend == "ivf" else {}
+    return dataclasses.replace(base, name=name, backend=backend,
+                               scheduler=scheduler, max_batch=8,
+                               quantization=quant,
+                               security_profile=profile, **extra)
+
+
+# ---------------------------------------------------------------------------
+# Registry + result-width semantics.
+# ---------------------------------------------------------------------------
+
+def test_profile_registry():
+    assert SECURITY_PROFILE_NAMES == ("perf", "balanced", "hardened",
+                                      "oblivious-sketch")
+    assert DEFAULT_PROFILE is PROFILES["perf"]
+    p = get_profile("hardened")
+    assert isinstance(p, SecurityProfile)
+    assert get_profile(p) is p                      # idempotent
+    with pytest.raises(ValueError, match="unknown security profile"):
+        get_profile("bogus")
+
+
+def test_profile_tier_monotonicity():
+    """Each tier flattens at least what the previous one does."""
+    perf, bal = get_profile("perf"), get_profile("balanced")
+    hard, obl = get_profile("hardened"), get_profile("oblivious-sketch")
+    assert not perf.pad_results and not perf.oblivious
+    assert bal.pad_results and not bal.oblivious
+    assert hard.pad_results and hard.oblivious
+    assert obl.pad_results and obl.oblivious
+    assert (perf.refine, bal.refine, hard.refine) == ("dce",) * 3
+    assert obl.refine == "tee-sketch"
+
+
+def test_result_width_buckets():
+    perf, bal = get_profile("perf"), get_profile("balanced")
+    assert perf.result_width(5) == 5                # exact under perf
+    assert perf.result_width(100) == 100
+    assert bal.result_width(5) == 16                # floor bucket
+    assert bal.result_width(16) == 16
+    assert bal.result_width(17) == 32               # next pow2
+    assert get_profile("hardened").result_width(33) == 64
+
+
+def test_tee_refine_cost_model():
+    cost = get_profile("oblivious-sketch").tee_refine_cost(80, 32)
+    assert cost["mode"] == "tee-sketch"
+    assert cost["comparisons"] == 80 * 80
+    # the multiplier is dominated by the 40x FHE comparison slowdown
+    assert cost["est_cost_vs_dce_x"] > cost["fhe_comparison_slowdown_x"]
+
+
+# ---------------------------------------------------------------------------
+# IndexSpec wire round-trip + validation.
+# ---------------------------------------------------------------------------
+
+def test_indexspec_security_profile_wire_roundtrip():
+    spec = IndexSpec(tenant="t", name="c", d=D,
+                     security_profile="hardened")
+    assert IndexSpec.from_bytes(spec.to_bytes()) == spec
+    # additive wire versioning: payloads from before the field
+    d = spec.to_dict()
+    del d["security_profile"]
+    assert IndexSpec.from_dict(d).security_profile == "perf"
+
+
+def test_indexspec_rejects_bad_profiles():
+    with pytest.raises(ValueError, match="security_profile"):
+        IndexSpec(tenant="t", name="c", d=D, security_profile="bogus")
+    # graph traversal is data-dependent by construction — no oblivious
+    # variant exists for hnsw
+    with pytest.raises(ValueError, match="scan-oblivious"):
+        IndexSpec(tenant="t", name="c", d=D, backend="hnsw",
+                  security_profile="hardened")
+    # balanced never touches the scan, so hnsw is fine
+    IndexSpec(tenant="t", name="c", d=D, backend="hnsw",
+              security_profile="balanced")
+
+
+# ---------------------------------------------------------------------------
+# The acceptance bar: real ids bit-identical to perf under every
+# profile — both schedulers, f32 + quantized ADC filters.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["flush", "continuous"])
+@pytest.mark.parametrize("quant", [None, "int8"])
+def test_cross_profile_id_parity(ds, owner_and_query, scheduler, quant):
+    spec0, owner, C_sap, C_dce, query = owner_and_query
+    params = SearchParams(k=8, ratio_k=6.0)
+    got = {}
+    for profile in ("perf", "balanced", "hardened"):
+        spec = _spec(spec0, profile, f"par-{profile}", quant=quant,
+                     scheduler=scheduler)
+        with SecureAnnService() as svc:
+            svc.create_collection(spec)
+            svc.insert("t", spec.name, C_sap, C_dce)
+            batch = svc.submit(SearchRequest(
+                tenant="t", collection=spec.name, query=query,
+                params=params, coalesce=False))
+            one = svc.submit(SearchRequest(          # scheduler path
+                tenant="t", collection=spec.name, query=_one(query),
+                params=params))
+        # padding profiles widen the id matrix to the pow2 bucket...
+        width = get_profile(profile).result_width(params.k)
+        assert batch.k == width and one.k == width
+        got[profile] = (batch.ids_lists(), [one.ids_lists()[0]])
+    for profile in ("balanced", "hardened"):
+        for ref, ids in zip(got["perf"], got[profile]):
+            # ...but the real ids are bit-identical to perf
+            for a, b in zip(ref, ids):
+                np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_cross_profile_parity_sharded(ds, owner_and_query, n_shards):
+    _need_devices(n_shards)
+    spec0, owner, C_sap, C_dce, query = owner_and_query
+    params = SearchParams(k=8, ratio_k=6.0)
+    got = {}
+    for profile in ("perf", "hardened"):
+        spec = _spec(spec0, profile, f"sh-{profile}")
+        with SecureAnnService() as svc:
+            svc.create_collection(spec, placement=PlacementSpec(
+                kind="sharded", n_shards=n_shards))
+            svc.insert("t", spec.name, C_sap, C_dce)
+            res = svc.submit(SearchRequest(
+                tenant="t", collection=spec.name, query=query,
+                params=params, coalesce=False))
+            assert res.stats.backend == "sharded-ivf"
+            got[profile] = res.ids_lists()
+    for a, b in zip(got["perf"], got["hardened"]):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Dummy-query + padded-byte accounting (telemetry, DESIGN.md §14).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["flush", "continuous"])
+def test_dummy_and_padding_accounting(ds, owner_and_query, scheduler):
+    spec0, owner, C_sap, C_dce, query = owner_and_query
+    params = SearchParams(k=8, ratio_k=6.0)
+    for profile in ("perf", "balanced", "hardened"):
+        # flush: a lone balanced request sits alone in bucket 1 (0
+        # dummies); hardened pads every flush to max_batch (7).  The
+        # continuous slot table is always full-shape, so any dummy-
+        # padding profile accounts all 7 unoccupied slots there.
+        want_dummies = 0 if profile == "perf" else \
+            7 if (profile == "hardened" or scheduler == "continuous") else 0
+        spec = _spec(spec0, profile, f"acct-{profile}",
+                     scheduler=scheduler)
+        with SecureAnnService() as svc:
+            svc.create_collection(spec)
+            svc.insert("t", spec.name, C_sap, C_dce)
+            res = svc.submit(SearchRequest(      # lone coalesced query
+                tenant="t", collection=spec.name, query=_one(query),
+                params=params))
+            st = svc.stats("t", spec.name)
+        assert res.stats.n_dummy_queries == want_dummies
+        assert st["n_dummy_queries"] == want_dummies
+        assert st["security_profile"] == profile
+        if get_profile(profile).pad_results:
+            # k=8 -> 16-column bucket: 8 pad cols x 8 bytes recorded
+            assert st["padded_result_bytes"] > 0
+        else:
+            assert st["padded_result_bytes"] == 0
+
+
+def test_padded_result_wire_roundtrip(ds, owner_and_query):
+    spec0, owner, C_sap, C_dce, query = owner_and_query
+    spec = _spec(spec0, "balanced", "wire-bal")
+    with SecureAnnService() as svc:
+        svc.create_collection(spec)
+        svc.insert("t", spec.name, C_sap, C_dce)
+        res = svc.submit(SearchRequest(
+            tenant="t", collection=spec.name, query=query,
+            params=SearchParams(k=8, ratio_k=6.0), coalesce=False))
+    assert res.k == 16 and (res.ids[:, 8:] == -1).all()
+    rt = SearchResult.from_bytes(res.to_bytes())
+    np.testing.assert_array_equal(rt.ids, res.ids)
+    for a, b in zip(rt.ids_lists(), res.ids_lists()):
+        np.testing.assert_array_equal(a, b)      # -1 padding stripped
+        assert (a >= 0).all() and len(a) <= 8

@@ -1,0 +1,202 @@
+"""Graph filter suite (EXPERIMENTS.md §Perf, DESIGN.md §15).
+
+Grid: n x {host-hnsw, graph-f32, graph-int8, ivf-int8}.  Per cell it
+reports the filter-phase latency/QPS (the backend `candidates` call —
+the stage the batched CSR traversal accelerates), recall@10 of the full
+filter-and-refine pipeline against plaintext ground truth, and the
+edges/rows the filter actually scored (`n_dist_evals` — the work the
+graph saves over a pooled scan, measured not estimated).
+
+The host-hnsw cell is the per-query parity oracle exactly as PR 2
+shipped it (a Python loop of host walks over the same owner-built
+graph); the graph cells run the SAME graph through the batched
+device-resident CSR traversal.  Every ratio is a ratio between served
+paths over one identical index.
+
+Writes `BENCH_graph.json` at the repo root (the graph-suite perf
+trajectory record) in addition to the harness's results-dir copy.
+
+  PYTHONPATH=src python -m benchmarks.bench_graph --smoke
+
+exits non-zero if the batched f32 graph filter is slower than the
+per-query host walk, or if its ids are not identical to the host
+walk's at fixed ef — the `graph-smoke` CI gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+import warnings
+
+import numpy as np
+
+from repro.core import dcpe, ppanns
+from repro.core.hnsw import HNSW
+from repro.data import synth
+from repro.graph import GraphFilter
+from repro.serving.search_engine import HNSWGraphFilter, SecureSearchEngine
+
+from .common import row, timeit
+
+K = 10
+RATIO_K = 8.0
+NQ = 16
+EF = 96
+# reduced build parameters: the owner-side host build is pure Python and
+# the 100k cell has to stay CPU-feasible; recall is carried by ef at
+# query time (fig-style M/efC trades are not this suite's subject)
+HNSW_M = 8
+HNSW_EFC = 48
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _setup(n: int, d: int, nq: int, seed: int = 0):
+    ds = synth.make_dataset("sift1m", n=n, n_queries=nq, d=d, k_gt=K,
+                            seed=seed)
+    beta = dcpe.suggest_beta(ds.base, fraction=0.01)
+    owner = ppanns.DataOwner(d=d, sap_beta=beta, sap_s=1024.0, seed=seed)
+    C_sap, C_dce = owner.encrypt_vectors(ds.base)
+    user = ppanns.User(owner.share_keys(), seed=seed + 1)
+    enc = [user.encrypt_query(q) for q in ds.queries]
+    Q = np.stack([c for c, _ in enc])
+    T = np.stack([t for _, t in enc])
+    t0 = time.perf_counter()
+    index = HNSW(d, M=HNSW_M, ef_construction=HNSW_EFC, seed=seed)
+    index.build(C_sap)
+    build_s = time.perf_counter() - t0
+    return ds, C_sap, C_dce, Q, T, index, build_s
+
+
+def _backend(label: str, index: HNSW, seed: int):
+    if label == "host-hnsw":
+        return HNSWGraphFilter(index)
+    if label == "graph-f32":
+        return GraphFilter(index, seed=seed)
+    if label == "graph-int8":
+        return GraphFilter(index, quantization="int8", seed=seed)
+    raise ValueError(label)
+
+
+def _bench_cell(C_sap, C_dce, Q, T, gt, *, label: str, index: HNSW,
+                seed: int, repeats: int):
+    nq = Q.shape[0]
+    if label == "ivf-int8":
+        eng = SecureSearchEngine(
+            C_sap, C_dce, backend="ivf", quantization="int8",
+            n_partitions=min(256, max(8, C_sap.shape[0] // 256)),
+            nprobe=16, seed=seed)
+    else:
+        eng = SecureSearchEngine(C_sap, C_dce,
+                                 backend=_backend(label, index, seed))
+    eng._ensure_attached()
+    kp = int(RATIO_K * K)
+    with warnings.catch_warnings():
+        # the host-walk cell IS the deprecated path, measured on purpose
+        warnings.simplefilter("ignore", DeprecationWarning)
+        t_filter, out = timeit(lambda: eng.backend.candidates(Q, kp, EF),
+                               repeats=repeats)
+        ids, stats = eng.search_batch(Q, T, K, ratio_k=RATIO_K,
+                                      ef_search=EF)
+    n_evals = int(out[2])
+    rec = synth.recall_at_k(np.asarray(ids), gt, K)
+    return t_filter, rec, n_evals, np.asarray(ids)
+
+
+def run(sizes=(10_000, 100_000), d: int = 128, nq: int = NQ,
+        repeats: int = 3, seed: int = 0,
+        write_root_json: bool = True) -> list[str]:
+    rows = []
+    for n in sizes:
+        ds, C_sap, C_dce, Q, T, index, build_s = _setup(n, d, nq, seed)
+        rows.append(row(f"graph/n={n}/owner-build", 1e6 * build_s / n,
+                        f"build_s={build_s:.1f} M={HNSW_M} efC={HNSW_EFC}"))
+        base_t = None
+        for label in ("host-hnsw", "graph-f32", "graph-int8", "ivf-int8"):
+            t, rec, n_evals, _ = _bench_cell(
+                C_sap, C_dce, Q, T, ds.gt, label=label, index=index,
+                seed=seed, repeats=repeats)
+            if label == "host-hnsw":
+                base_t = t
+            speed = base_t / t if base_t else float("nan")
+            rows.append(row(
+                f"graph/n={n}/{label}", 1e6 * t / nq,
+                f"qps={nq / t:.1f} recall@{K}={rec:.3f} "
+                f"edges_scanned={n_evals} vs_host_x{speed:.2f}"))
+    if write_root_json:
+        _write_root_json(rows, sizes, d, nq)
+    return rows
+
+
+def _write_root_json(rows: list[str], sizes, d: int, nq: int):
+    """The repo-root BENCH_graph.json: the graph-suite trajectory record
+    sessions diff against (the harness also writes its own copy under
+    results/bench)."""
+    from .run import provenance
+    payload = {
+        "suite": "graph",
+        "unix_time": time.time(),
+        "config": {"sizes": list(sizes), "d": d, "nq": nq, "k": K,
+                   "ratio_k": RATIO_K, "ef": EF, "hnsw_M": HNSW_M,
+                   "hnsw_efC": HNSW_EFC},
+        "provenance": provenance(),
+        "rows": [{"name": r.split(",", 2)[0],
+                  "us_per_call": float(r.split(",", 2)[1]),
+                  "derived": r.split(",", 2)[2]} for r in rows],
+    }
+    (_ROOT / "BENCH_graph.json").write_text(
+        json.dumps(payload, indent=2) + "\n")
+
+
+def _smoke(n: int = 8192, d: int = 64, nq: int = 32, seed: int = 0) -> int:
+    """CI gate: the batched CSR traversal must beat the per-query host
+    walk's filter QPS on the same graph AND return identical ids at
+    fixed ef (the parity-oracle contract of tests/test_graph.py, held
+    at bench scale)."""
+    ds, C_sap, C_dce, Q, T, index, build_s = _setup(n, d, nq, seed)
+    print(row(f"graph-smoke/n={n}/owner-build", 1e6 * build_s / n,
+              f"build_s={build_s:.1f}"), flush=True)
+    results = {}
+    for label in ("host-hnsw", "graph-f32"):
+        t, rec, n_evals, ids = _bench_cell(
+            C_sap, C_dce, Q, T, ds.gt, label=label, index=index,
+            seed=seed, repeats=2)
+        results[label] = (t, rec, ids)
+        print(row(f"graph-smoke/n={n}/{label}", 1e6 * t / nq,
+                  f"qps={nq / t:.1f} recall@{K}={rec:.3f}"), flush=True)
+    ok = True
+    if results["graph-f32"][0] > results["host-hnsw"][0]:
+        print(f"# SMOKE FAIL: batched graph filter slower than host walk "
+              f"({results['graph-f32'][0]:.3f}s vs "
+              f"{results['host-hnsw'][0]:.3f}s)")
+        ok = False
+    if not np.array_equal(results["graph-f32"][2],
+                          results["host-hnsw"][2]):
+        print("# SMOKE FAIL: batched graph ids != host walk ids at "
+              "fixed ef (parity oracle broken)")
+        ok = False
+    if ok:
+        speed = results["host-hnsw"][0] / results["graph-f32"][0]
+        print(f"# smoke OK: batched graph {speed:.2f}x the host walk, "
+              f"ids identical at ef={EF}")
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: batched > host-walk QPS + id parity")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(_smoke())
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -92,9 +92,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_attacks, bench_baselines, bench_batched,
-                   bench_beta, bench_encrypt, bench_filter, bench_kernels,
-                   bench_profile, bench_ratio_k, bench_refine,
-                   bench_roofline, bench_runtime, bench_scalability)
+                   bench_beta, bench_encrypt, bench_filter, bench_graph,
+                   bench_kernels, bench_profile, bench_ratio_k,
+                   bench_refine, bench_roofline, bench_runtime,
+                   bench_scalability)
 
     suites = {
         "fig4_beta": lambda: bench_beta.run(
@@ -119,6 +120,14 @@ def main() -> None:
         "filter": lambda: bench_filter.run(
             sizes=(10_000, 100_000, 200_000) if args.full
             else (10_000, 100_000)),
+        # batched CSR graph traversal vs the per-query host walk over
+        # one identical owner-built HNSW (DESIGN.md §15); also writes
+        # the repo-root BENCH_graph.json trajectory record.  The hard
+        # gate (batched > host-walk QPS + id parity) lives in
+        # `python -m benchmarks.bench_graph --smoke` (CI)
+        # (no --full enlargement: the owner-side host build is pure
+        # Python and 200k would dominate the whole harness's wall time)
+        "graph": lambda: bench_graph.run(sizes=(10_000, 100_000)),
         # span-level filter/refine stage timing + kernel-level op timing
         # per backend (DESIGN.md §13); also writes the repo-root
         # BENCH_profile.json trajectory record.  The hard gate (obs

@@ -115,6 +115,42 @@ def check_api_exports() -> list[str]:
     errors.extend(check_quantization_surface(api))
     errors.extend(check_obs_surface(api))
     errors.extend(check_sec_surface(api))
+    errors.extend(check_graph_surface(api))
+    return errors
+
+
+# Names that MUST stay exported by repro.graph — the batched graph-index
+# surface contract (DESIGN.md §15).
+REQUIRED_GRAPH_EXPORTS = {
+    "CSRGraph", "GraphFilter", "beam_plan", "graph_topk", "traverse",
+}
+
+
+def check_graph_surface(api) -> list[str]:
+    """The batched graph-index surface contract (DESIGN.md §15):
+    repro.graph exports the CSR mirror + batched filter, and IndexSpec
+    admits backend='graph' with quantization AND the hardened tier —
+    the combinations the legacy per-query 'hnsw' backend rejects."""
+    errors = []
+    try:
+        import repro.graph as graph
+    except Exception as e:                          # noqa: BLE001
+        return [f"import repro.graph failed: {type(e).__name__}: {e}"]
+    for name in sorted(REQUIRED_GRAPH_EXPORTS):
+        if not hasattr(graph, name):
+            errors.append(f"repro.graph must export {name} (graph "
+                          f"surface contract, DESIGN.md §15)")
+    for kw in ({"quantization": "int8"},
+               {"security_profile": "hardened"}):
+        try:
+            spec = api.IndexSpec(tenant="_gate", name="_gate", d=8,
+                                 backend="graph", **kw)
+            if api.IndexSpec.from_bytes(spec.to_bytes()) != spec:
+                errors.append(f"IndexSpec(backend='graph', **{kw}) does "
+                              f"not survive a wire round-trip")
+        except Exception as e:                      # noqa: BLE001
+            errors.append(f"IndexSpec must admit backend='graph' with "
+                          f"{kw} (DESIGN.md §15): {type(e).__name__}: {e}")
     return errors
 
 

@@ -41,7 +41,7 @@ __all__ = ["PROTOCOL_VERSION", "WireFormatError", "IndexSpec",
 
 PROTOCOL_VERSION = 1
 
-_BACKENDS = ("flat", "ivf", "hnsw")
+_BACKENDS = ("flat", "ivf", "hnsw", "graph")
 _PLACEMENT_KINDS = ("single", "sharded")
 _QUANTIZATIONS = (None, "int8", "pq8")
 _SCHEDULERS = ("flush", "continuous")
@@ -158,14 +158,17 @@ class IndexSpec:
     scan 1-byte/dim scalar-quantized or m-byte/vector product-
     quantized codes through the fused adc_topk path, oversampling
     k' by `refine_ratio` (None = the per-kind default, core.adc)
-    into the unchanged exact DCE refine.  flat/ivf backends only.
+    into the unchanged exact DCE refine.  flat/ivf/graph backends
+    (the batched graph traversal scores edges with the same ADC
+    surrogates, DESIGN.md §15).
 
     `security_profile` picks the leakage tier (repro.sec, DESIGN.md
     §14): "perf" serves the engine unflattened; "balanced" adds
     dummy-query batch padding + fixed-shape results; "hardened" /
     "oblivious-sketch" additionally pad every flush to `max_batch` and
-    run scan-oblivious full-bucket filters (flat/ivf only).  Returned
-    real ids are identical under every profile.
+    run scan-oblivious full-bucket filters (flat/ivf, plus the graph
+    backend's bounded-hop fixed-fanout traversal).  Returned real ids
+    are identical under every profile.
     """
     tenant: str
     name: str
@@ -210,8 +213,9 @@ class IndexSpec:
             raise ValueError(f"unknown quantization {self.quantization!r} "
                              f"(have {_QUANTIZATIONS})")
         if self.quantization is not None and self.backend == "hnsw":
-            raise ValueError("quantization applies to flat|ivf backends "
-                             "(the graph walk reads full-precision rows)")
+            raise ValueError("quantization applies to flat|ivf|graph "
+                             "backends (the per-query host walk reads "
+                             "full-precision rows)")
         if self.refine_ratio is not None:
             if self.quantization is None:
                 raise ValueError("refine_ratio is the ADC oversampling "
@@ -232,9 +236,10 @@ class IndexSpec:
                 and self.backend == "hnsw"):
             raise ValueError(
                 f"security_profile {self.security_profile!r} needs the "
-                f"scan-oblivious filter variant, and graph traversal is "
-                f"data-dependent by construction — use flat|ivf backends "
-                f"(DESIGN.md §14)")
+                f"scan-oblivious filter variant, and the per-query host "
+                f"walk is data-dependent by construction — use flat|ivf "
+                f"backends, or backend='graph' for the bounded-hop "
+                f"fixed-fanout traversal tier (DESIGN.md §14/§15)")
 
     @property
     def cdim(self) -> int:

@@ -120,8 +120,8 @@ class DataOwnerClient:
     def encrypt_corpus(self, P: np.ndarray, *, progress_every: int = 0
                        ) -> EncryptedCorpus:
         """Bulk outsourcing (paper §V-A): encrypt the whole database and
-        — when the spec's backend is "hnsw" — build the filter graph
-        over the DCPE ciphertexts.  Delegates to
+        — when the spec's backend is "hnsw" or "graph" — build the
+        filter graph over the DCPE ciphertexts.  Delegates to
         `DataOwner.encrypt_database`, so the legacy and typed paths
         share one randomness schedule (identical ciphertexts for the
         same seed) by construction, not by convention."""
@@ -133,7 +133,7 @@ class DataOwnerClient:
             P, M=self.spec.hnsw_M,
             ef_construction=self.spec.hnsw_ef_construction,
             progress_every=progress_every,
-            build_index=self.spec.backend == "hnsw")
+            build_index=self.spec.backend in ("hnsw", "graph"))
         return EncryptedCorpus(
             C_sap=db.C_sap, C_dce=db.C_dce,
             index=None if db.index is None else db.index.to_arrays())
@@ -266,8 +266,8 @@ class SecureAnnService:
             if corpus.d != spec.d:    # corpus must not orphan an empty
                 raise ValueError(     # collection under this name
                     f"corpus d={corpus.d} != spec d={spec.d}")
-            if spec.backend == "hnsw" and corpus.index is None:
-                raise ValueError("hnsw-backed collection needs an "
+            if spec.backend in ("hnsw", "graph") and corpus.index is None:
+                raise ValueError("hnsw/graph-backed collection needs an "
                                  "owner-built index in the corpus")
         col = self._mgr.create_collection(
             spec.tenant, spec.name, spec.d, keyless=True,

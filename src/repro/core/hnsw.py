@@ -222,9 +222,13 @@ class HNSW:
 
     # ------------------------------------------------- maintenance (§V-D)
 
-    def delete(self, node: int):
+    def delete(self, node: int) -> list[int]:
         """Delete a vector; in-neighbors are repaired by re-running neighbor
-        selection over their remaining candidates (paper §V-D)."""
+        selection over their remaining candidates (paper §V-D).  Returns the
+        repaired in-neighbor ids — the only other nodes whose link rows
+        changed — so a derived mirror (graph.csr.CSRGraph) can refresh
+        exactly the touched rows instead of rebuilding."""
+        repaired: set[int] = set()
         for lev in range(len(self.links)):
             if self.links[lev][node] is None:
                 continue
@@ -232,6 +236,7 @@ class HNSW:
                 if nb is None or src == node:
                     continue
                 if (nb == node).any():
+                    repaired.add(src)
                     keep = nb[nb != node]
                     # repair: reconnect through the deleted node's neighbors
                     cands = np.unique(np.concatenate(
@@ -254,6 +259,7 @@ class HNSW:
             alive = [i for i, l in enumerate(self.levels) if l >= 0]
             self.entry = max(alive, key=lambda i: self.levels[i]) if alive else -1
             self.max_level = self.levels[self.entry] if alive else -1
+        return sorted(repaired)
 
     # -------------------------------------------------------- persistence
 

@@ -1,0 +1,4 @@
+"""graph_expand — Pallas lockstep frontier expansion over the CSR
+HNSW mirror (DESIGN.md §15).  ops.py holds the jitted `graph_topk`
+dispatcher (kernel beam + XLA upper layers, or the pure-XLA
+`graph.traverse` fallback); parity is tested in interpret mode."""

@@ -1,0 +1,281 @@
+"""Pallas TPU kernel: lockstep layer-0 beam search over the CSR graph.
+
+This is the device form of `graph.traverse.beam_layer0` (DESIGN.md §15)
+for the f32 edge-scoring mode: the beam heap, the visited bitmap, and
+the per-hop neighbor/row staging buffers are all VMEM/SMEM-resident;
+the big arrays — the (R, M0) layer-0 adjacency and the (R, d)
+ciphertext matrix — stay in HBM and are gathered row-wise with explicit
+async DMAs (the KV-cache gather pattern), so VMEM holds O(bq * ef_cap +
+bq * R/32 + M0 * d) regardless of corpus size.
+
+Grid: one step per query tile of `bq` queries; queries are independent,
+so within a tile each runs its own bounded `while_loop` (a finished
+query stops issuing hops — the XLA fallback can only stop when the
+whole batch is done).  Per hop and per query:
+
+  1. select the closest unexpanded beam entry (VPU argmin over the
+     (1, EF) beam row) and test the host walk's break rule against the
+     traced effective `ef` (an SMEM scalar);
+  2. DMA its fixed-degree neighbor row (int32, SMEM) and then the M0
+     neighbor vectors (HBM -> VMEM, per-slot semaphores so the copies
+     overlap), always full rows — `-1` padding and tombstones are
+     masked after the fact via the `ok` stream, never branched on;
+  3. score edges (VPU sum((x-q)^2)), test+set visited bits in the
+     per-query bitmap words, and insertion-sort the fresh neighbors
+     into the beam row — `pos = sum(bd <= d)` places ties after equal
+     keys, which is exactly where a stable argsort over
+     [beam | neighbors] puts them, so the merge is bit-identical to
+     the XLA fallback's;
+  4. re-invalidate beam slots >= ef (effective-ef truncation), keeping
+     results a pure function of `ef` across beam-capacity buckets.
+
+The visited bitmap is emitted as packed uint32 words; `ops.graph_topk`
+unpacks it to the (nq, R) bool scan trace so sec.leakage sees the same
+view either path.  The oblivious (`hardened`) variant always takes the
+XLA path — its value is constant trip counts, which the fallback's
+`fori_loop` already provides, and keeping one oblivious implementation
+keeps the cross-profile id-parity argument small.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import LANE, interpret_default, pad_to
+
+DEFAULT_BLOCK_Q = 8
+_INF = float("inf")     # python float: kernels must not capture arrays
+
+
+def _beam_insert(bd, bi, bx, dm, im, fresh):
+    """Insert one scored neighbor (dm, im) into the ascending beam row
+    (1, EF).  Non-fresh slots insert an inert (+inf, -1, expanded)
+    entry, which lands among the +inf tail — the same slots a stable
+    sort of [beam | neighbors] would keep."""
+    EF = bd.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, EF), 1)
+    dm = jnp.where(fresh, dm, _INF)
+    im = jnp.where(fresh, im, -1)
+    pos = (bd <= dm).sum().astype(jnp.int32)       # after equal keys
+    sh_d = jnp.concatenate([bd[:, :1], bd[:, :-1]], axis=1)
+    sh_i = jnp.concatenate([bi[:, :1], bi[:, :-1]], axis=1)
+    sh_x = jnp.concatenate([bx[:, :1], bx[:, :-1]], axis=1)
+    at = iota == pos
+    bd = jnp.where(iota < pos, bd, jnp.where(at, dm, sh_d))
+    bi = jnp.where(iota < pos, bi, jnp.where(at, im, sh_i))
+    bx = jnp.where(iota < pos, bx, jnp.where(at, ~fresh, sh_x))
+    return bd, bi, bx
+
+
+def _expand_kernel(
+    ef_ref,            # (1, 1) int32 SMEM: traced effective ef
+    q_ref,             # (bq, d_p) f32 VMEM: query tile
+    ep_ref,            # (bq, 1) int32 VMEM: layer-0 entry per query
+    epd_ref,           # (bq, 1) f32 VMEM: entry distance
+    ok_ref,            # (1, R) int32 VMEM: row validity
+    neigh0_hbm,        # (R, M0) int32 ANY: layer-0 adjacency
+    c_hbm,             # (R, d_p) f32 ANY: ciphertext rows
+    cand_ref,          # (bq, EF) int32 out
+    cand_d_ref,        # (bq, EF) f32 out
+    vis_ref,           # (bq, RW) uint32 out: packed visited bitmap
+    hops_ref,          # (bq, 1) int32 out
+    edges_ref,         # (bq, 1) int32 out
+    nrow,              # (1, M0) int32 SMEM scratch: neighbor row
+    crows,             # (M0, d_p) f32 VMEM scratch: gathered rows
+    sems,              # (M0 + 1,) DMA semaphores
+    *,
+    max_hops: int,
+):
+    bq, EF = cand_ref.shape
+    M0 = nrow.shape[1]
+    RW = vis_ref.shape[1]
+    ef = ef_ref[0, 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, EF), 1)
+    one = jnp.uint32(1)
+
+    for q in range(bq):                       # queries are independent
+        qv = q_ref[pl.ds(q, 1), :]                         # (1, d_p)
+        ep = ep_ref[q, 0]
+        ep_ok = ep >= 0
+        eps = jnp.maximum(ep, 0)
+        bd = jnp.where((iota == 0) & ep_ok, epd_ref[q, 0], _INF)
+        bi = jnp.where((iota == 0) & ep_ok, eps, -1)
+        bx = ~((iota == 0) & ep_ok)
+        vis = jnp.zeros((1, RW), jnp.uint32)
+        bit0 = jnp.where(ep_ok, one << (eps & 31).astype(jnp.uint32),
+                         jnp.uint32(0))
+        vis = jax.lax.dynamic_update_slice(
+            vis, bit0.reshape(1, 1),
+            (0, jax.lax.shift_right_logical(eps, 5)))
+
+        def hop(state):
+            t, bd, bi, bx, vis, done, hops, edges = state
+            du = jnp.where(bx, _INF, bd)
+            j = jnp.argmin(du[0]).astype(jnp.int32)
+            sel_d = jax.lax.dynamic_slice(du, (0, j), (1, 1))[0, 0]
+            sel_i = jax.lax.dynamic_slice(bi, (0, j), (1, 1))[0, 0]
+            worst = jax.lax.dynamic_slice(bd, (0, ef - 1), (1, 1))[0, 0]
+            qdone = jnp.isinf(sel_d) | (sel_d > worst)
+            active = ~qdone
+            src = jnp.maximum(sel_i, 0)
+
+            # stage the neighbor row, then its vectors (per-slot sems
+            # so the M0 row copies are all in flight together)
+            row_dma = pltpu.make_async_copy(
+                neigh0_hbm.at[src], nrow.at[0], sems.at[M0])
+            row_dma.start()
+            row_dma.wait()
+            row_dmas = [
+                pltpu.make_async_copy(
+                    c_hbm.at[jnp.maximum(nrow[0, m], 0)],
+                    crows.at[m], sems.at[m])
+                for m in range(M0)
+            ]
+            for dma in row_dmas:
+                dma.start()
+            for dma in row_dmas:
+                dma.wait()
+
+            diff = crows[...] - qv                        # (M0, d_p)
+            d2 = (diff * diff).sum(axis=1)                # (M0,)
+
+            bx = bx | (iota == j)                  # mark expanded slot
+            fresh_cnt = jnp.int32(0)
+            for m in range(M0):
+                idx = nrow[0, m]
+                safe = jnp.maximum(idx, 0)
+                okv = pl.load(
+                    ok_ref, (pl.ds(0, 1), pl.ds(safe, 1)))[0, 0] > 0
+                w = jax.lax.shift_right_logical(safe, 5)
+                b = (safe & 31).astype(jnp.uint32)
+                word = jax.lax.dynamic_slice(vis, (0, w), (1, 1))
+                seen = (jax.lax.shift_right_logical(word[0, 0], b)
+                        & one) > 0
+                fresh = (idx >= 0) & okv & ~seen & active
+                vis = jax.lax.dynamic_update_slice(
+                    vis,
+                    (word | jnp.where(fresh, one << b, jnp.uint32(0))),
+                    (0, w))
+                bd, bi, bx = _beam_insert(bd, bi, bx, d2[m], safe, fresh)
+                fresh_cnt = fresh_cnt + fresh.astype(jnp.int32)
+
+            over = iota >= ef            # effective-ef truncation
+            bd = jnp.where(over, _INF, bd)
+            bi = jnp.where(over, -1, bi)
+            bx = bx | over
+            hops = hops + active.astype(jnp.int32)
+            edges = edges + jnp.where(active, fresh_cnt, 0)
+            return (t + 1, bd, bi, bx, vis, done | qdone, hops, edges)
+
+        state = (jnp.int32(0), bd, bi, bx, vis, ~ep_ok,
+                 jnp.int32(0), jnp.int32(0))
+        state = jax.lax.while_loop(
+            lambda s: (s[0] < max_hops) & ~s[5], hop, state)
+        _, bd, bi, bx, vis, _, hops, edges = state
+
+        cand_ref[pl.ds(q, 1), :] = bi
+        cand_d_ref[pl.ds(q, 1), :] = bd
+        vis_ref[pl.ds(q, 1), :] = vis
+        hops_ref[q, 0] = hops
+        edges_ref[q, 0] = edges
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ef_cap", "max_hops", "block_q", "interpret"))
+def expand_layer0(
+    neigh0: jnp.ndarray,
+    ok: jnp.ndarray,
+    C: jnp.ndarray,
+    Q: jnp.ndarray,
+    ep: jnp.ndarray,
+    ep_d: jnp.ndarray,
+    ef,
+    *,
+    ef_cap: int,
+    max_hops: int,
+    block_q: int = DEFAULT_BLOCK_Q,
+    interpret: bool | None = None,
+):
+    """Batched layer-0 beam search (f32 scoring).
+
+    neigh0 (R, M0) int32; ok (R,) validity; C (R, d) f32; Q (nq, d)
+    f32; ep/ep_d (nq,) the upper-layer descent endpoints; ef traced
+    int32.  Returns (beam_i (nq, ef_cap) int32, beam_d (nq, ef_cap)
+    f32, visited (nq, R) bool, hops (nq,), edges (nq,)) — the same
+    contract as `graph.traverse.beam_layer0` before the kp slice.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    nq, d = Q.shape
+    R, M0 = neigh0.shape
+    if R % 32:
+        raise ValueError(f"row capacity {R} not a multiple of 32")
+    RW = R // 32
+
+    Qp = pad_to(Q.astype(jnp.float32), 1, LANE)
+    Cp = pad_to(C.astype(jnp.float32), 1, LANE)
+    d_p = Qp.shape[1]
+    bq = max(1, min(block_q, nq))
+    nq_p = ((nq + bq - 1) // bq) * bq
+    pq = nq_p - nq
+    if pq:     # padded queries carry ep=-1 -> done before the first hop
+        Qp = jnp.pad(Qp, ((0, pq), (0, 0)))
+        ep = jnp.pad(ep, (0, pq), constant_values=-1)
+        ep_d = jnp.pad(ep_d, (0, pq), constant_values=jnp.inf)
+
+    grid = (nq_p // bq,)
+    kernel = functools.partial(_expand_kernel, max_hops=max_hops)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bq, d_p), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, R), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, ef_cap), lambda i: (i, 0)),
+            pl.BlockSpec((bq, ef_cap), lambda i: (i, 0)),
+            pl.BlockSpec((bq, RW), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq_p, ef_cap), jnp.int32),
+            jax.ShapeDtypeStruct((nq_p, ef_cap), jnp.float32),
+            jax.ShapeDtypeStruct((nq_p, RW), jnp.uint32),
+            jax.ShapeDtypeStruct((nq_p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nq_p, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1, M0), jnp.int32),
+            pltpu.VMEM((M0, d_p), jnp.float32),
+            pltpu.SemaphoreType.DMA((M0 + 1,)),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(ef, jnp.int32).reshape(1, 1),
+        Qp,
+        ep.astype(jnp.int32).reshape(-1, 1),
+        ep_d.astype(jnp.float32).reshape(-1, 1),
+        ok.astype(jnp.int32)[None, :],
+        neigh0,
+        Cp,
+    )
+    beam_i, beam_d, vis_words, hops, edges = out
+    bits = jax.lax.shift_right_logical(
+        vis_words[:nq, :, None],
+        jnp.arange(32, dtype=jnp.uint32)[None, None, :])
+    visited = ((bits & jnp.uint32(1)) > 0).reshape(nq, R)
+    return (beam_i[:nq], beam_d[:nq], visited,
+            hops[:nq, 0], edges[:nq, 0])

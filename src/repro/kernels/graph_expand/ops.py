@@ -1,0 +1,85 @@
+"""Jitted public wrapper for the graph_expand kernel.
+
+`graph_topk` is the single serving entry point for the batched CSR
+traversal (GraphFilter and the runtime graph backend both call it):
+
+  use_kernel=True, quant="f32", oblivious=False
+      upper layers descend in XLA (`graph.traverse.upper_entry` — a
+      handful of lockstep greedy hops, not worth a kernel), then the
+      Pallas frontier-expansion kernel runs the layer-0 beam search
+      with VMEM-resident beams/bitmaps and DMA row gathers;
+  otherwise
+      the pure-XLA `graph.traverse.traverse` — the fast path on CPU
+      hosts, the only path for ADC (int8/pq8) edge scoring, and the
+      only path for the oblivious (`hardened`) fixed-trip variant.
+
+Both paths return the identical contract: (cand (nq, kp) int32 -1
+fill, cand_d (nq, kp) f32 +inf fill, visited (nq, R) bool scan trace,
+hops (nq,), edges (nq,)).  The beam merge in the kernel reproduces the
+fallback's stable-sort tie order, so ids are bit-identical (pinned by
+the interpret-mode parity test in tests/test_graph.py).
+
+Like every serving wrapper, all shape-bearing arguments are static:
+(kp, ef_cap, max_hops, quant, oblivious, use_kernel) select a cached
+executable, `ef`/`entry` and every array are traced — varying ef,
+bucket padding, and tombstones never recompile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ...graph import traverse as _traverse
+from . import graph_expand as _kernel
+
+expand_layer0 = _kernel.expand_layer0
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kp", "ef_cap", "max_hops", "quant", "oblivious",
+                     "use_kernel", "block_q", "interpret"))
+def graph_topk(
+    neigh0,
+    neigh_up,
+    ok,
+    db,
+    qd,
+    entry,
+    ef,
+    *,
+    kp: int,
+    ef_cap: int,
+    max_hops: int,
+    quant: str = "f32",
+    oblivious: bool = False,
+    use_kernel: bool = False,
+    block_q: int = _kernel.DEFAULT_BLOCK_Q,
+    interpret: bool | None = None,
+):
+    """Batched graph walk; see `graph.traverse.traverse` for the array
+    contract.  With use_kernel=True (f32, non-oblivious only) the
+    layer-0 beam runs in the Pallas kernel."""
+    if not (use_kernel and quant == "f32" and not oblivious):
+        return _traverse.traverse(
+            neigh0, neigh_up, ok, db, qd, entry, ef, kp=kp,
+            ef_cap=ef_cap, max_hops=max_hops, quant=quant,
+            oblivious=oblivious)
+    (C,) = db
+    ep, ep_d, hops, edges = _traverse.upper_entry(
+        neigh_up, ok, db, qd, entry, quant="f32", oblivious=False)
+    beam_i, beam_d, visited, k_hops, k_edges = _kernel.expand_layer0(
+        neigh0, ok, C, qd, ep, ep_d, ef, ef_cap=ef_cap,
+        max_hops=max_hops, block_q=block_q, interpret=interpret)
+    return (beam_i[:, :kp], beam_d[:, :kp], visited,
+            hops + k_hops, edges + k_edges)
+
+
+# Opt-in kernel profiling (repro.obs, DESIGN.md §13): strict
+# passthrough unless a KernelProfiler is active; `_cache_size` is
+# preserved for the recompile audit.
+from ...obs.profiler import instrument as _instrument  # noqa: E402
+
+graph_topk = _instrument("graph_expand.graph_topk", graph_topk)

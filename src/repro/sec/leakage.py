@@ -38,7 +38,13 @@ we know against them:
                             "balanced") and collapses to the zero-
                             leakage baseline under the scan-oblivious
                             tiers ("hardened" / "oblivious-sketch"),
-                            where every query touches every row.
+                            where every query touches every row.  The
+                            graph backend reports its beam traversal's
+                            visited bitmap as the trace: data-dependent
+                            at every tier (the bounded-hop oblivious
+                            variant fixes counts, not addresses), so
+                            its hardened row lands between pooled IVF
+                            and the full-bucket scan (DESIGN.md §15).
   * `adc_code_attack`     — the same localization run on the *decoded
                             ADC codes* instead of the f32 ciphertexts:
                             the quantized codes are stored server-side
@@ -160,7 +166,20 @@ def capture_server_view(
         bk = col._backend
         touched = np.zeros((nq, n), bool)
         first_touched = np.zeros((nq, n), bool)
-        if prof.oblivious or bk.ivf is None:
+        trace = getattr(bk, "last_scan_trace", None)
+        if trace is not None:
+            # Graph backend: the traversal's visited bitmap IS the access
+            # pattern — which rows each query's beam expansion gathered.
+            # It stays data-dependent even under the oblivious profile
+            # (fixed hop/fanout COUNTS, data-dependent gather ADDRESSES:
+            # the bounded-hop tier, DESIGN.md §15), so the graph's
+            # hardened row sits between pooled IVF and the oblivious
+            # full-bucket scan rather than collapsing to baseline.  The
+            # expansion is one undifferentiated frontier stream, so
+            # order carries nothing beyond membership.
+            touched = np.asarray(trace, bool)[:, :n]
+            first_touched = touched.copy()
+        elif prof.oblivious or bk.ivf is None:
             touched[:, :] = True          # full-bucket scan, every query
             first_touched[:, :] = True    # one pass: no order signal
         else:

@@ -24,7 +24,7 @@ import threading
 
 import numpy as np
 
-from ...core import dce, hnsw as hnsw_mod, ppanns
+from ...core import dce, ppanns
 from ...core.ivf import IVFIndex
 from ...obs.trace import NULL_RECORDER
 from ..search_engine import SearchStats, SecureSearchEngine
@@ -248,18 +248,13 @@ class Collection:
         with self._ingest_span("load_snapshot") as sp, self._lock:
             sp.set(n_rows=n)
             self.store.restore(C_sap, C_dce, alive, n_main, main_gen)
-            if self._backend.kind == "hnsw":
+            if self._backend.kind in ("hnsw", "graph"):
                 if graph_arrays is None:
                     raise ValueError(
-                        "hnsw-backed collection needs the filter graph "
-                        "(HNSW.to_arrays payload) alongside the "
+                        "hnsw/graph-backed collection needs the filter "
+                        "graph (HNSW.to_arrays payload) alongside the "
                         "ciphertexts")
-                graph = hnsw_mod.HNSW.from_arrays(dict(graph_arrays))
-                if graph.size != self.store.n_total:
-                    raise ValueError(
-                        f"graph has {graph.size} nodes for "
-                        f"{self.store.n_total} rows")
-                self._backend.graph = graph
+                self._backend.restore_graph(dict(graph_arrays))
             elif self._backend.kind == "ivf" and ivf_state is not None:
                 # restore the IVF index exactly as snapshotted: its
                 # centroids depend on which rows were alive at build
@@ -323,9 +318,9 @@ class Collection:
                       "C_dce": st.dce_view.copy(),
                       "alive": st.alive_view.copy()}
             bookkeeping = {"n_main": st.n_main, "main_gen": st.main_gen}
-            if self._backend.kind == "hnsw":
+            if self._backend.kind in ("hnsw", "graph"):
                 arrays.update({f"graph__{k}": np.array(v) for k, v in
-                               self._backend.graph.to_arrays().items()})
+                               self._backend.graph_arrays().items()})
             elif self._backend.kind == "ivf" \
                     and self._backend.ivf is not None:
                 ivf = self._backend.ivf

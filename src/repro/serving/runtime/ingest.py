@@ -35,6 +35,8 @@ import numpy as np
 from ...core import adc
 from ...core.hnsw import HNSW
 from ...core.ivf import IVFIndex
+from ...graph.csr import CSRGraph
+from ...graph.traverse import beam_plan
 from ...kernels.adc_topk import ops as adc_ops
 from ...kernels.common import next_bucket
 from ...kernels.l2_topk import ops as l2_ops
@@ -180,13 +182,27 @@ class DeltaAwareBackend:
                   their nearest centroid at the next attach (no kmeans
                   rerun), so probes see inserts immediately.
     kind="hnsw":  one graph over all rows, updated eagerly by
-                  `on_insert` / `on_delete` (graph node id == row id).
+                  `on_insert` / `on_delete` (graph node id == row id),
+                  walked per query on the host (the legacy shim — the
+                  batched path below supersedes it, DESIGN.md §15).
+    kind="graph": the same eager host graph, but served through its
+                  CSR mirror by the batched lockstep traversal
+                  (`repro.graph`): inserts refresh exactly the changed
+                  neighbor rows into the bucketed mirror (reserved
+                  slack slots — `_row_bucket` headroom — absorb them
+                  without reallocation), deletes flip `ok` validity
+                  bits (plus the repaired in-neighbor rows), and a
+                  compaction or bucket overflow rebuilds the mirror.
+                  Accepts quantization (ADC surrogate edge scoring)
+                  and `oblivious` (the bounded-hop fixed-fanout
+                  `hardened` tier) — the two things the host walk
+                  never could.
 
     All kinds mask tombstoned rows out of the candidate validity mask, so
     the refine never returns a deleted id.
 
-    quantization="int8"|"pq8" (flat/ivf kinds) swaps the f32 scans for
-    the quantized ADC path (DESIGN.md §11): the backend keeps one
+    quantization="int8"|"pq8" (flat/ivf/graph kinds) swaps the f32
+    scans for the quantized ADC path (DESIGN.md §11): the backend keeps one
     capacity-bucketed code array over *all* rows plus an int32
     row-validity stream, so delta appends re-encode only the new rows
     at the next attach (codes are 4-32x smaller than the ciphertexts —
@@ -208,18 +224,21 @@ class DeltaAwareBackend:
                  quantization: str | None = None,
                  refine_ratio: float | None = None, pq_m: int = 16,
                  oblivious: bool = False):
-        if kind not in ("flat", "ivf", "hnsw"):
+        if kind not in ("flat", "ivf", "hnsw", "graph"):
             raise ValueError(f"unknown backend kind {kind!r}")
         if oblivious and kind == "hnsw":
-            raise ValueError("scan-oblivious filtering needs flat|ivf "
-                             "backends (graph traversal is data-"
-                             "dependent by construction, DESIGN.md §14)")
+            raise ValueError("scan-oblivious filtering needs flat|ivf|"
+                             "graph backends (the per-query host walk "
+                             "is data-dependent by construction; "
+                             "kind='graph' has the bounded-hop fixed-"
+                             "fanout tier, DESIGN.md §14/§15)")
         if quantization not in adc.QUANTIZATIONS:
             raise ValueError(f"unknown quantization {quantization!r} "
                              f"(have {adc.QUANTIZATIONS})")
         if quantization is not None and kind == "hnsw":
-            raise ValueError("quantization applies to flat|ivf backends "
-                             "(the graph walk reads full-precision rows)")
+            raise ValueError("quantization applies to flat|ivf|graph "
+                             "backends (the host graph walk reads "
+                             "full-precision rows)")
         self.store = store
         self.kind = kind
         # scan-oblivious access-pattern flattening (repro.sec,
@@ -241,7 +260,7 @@ class DeltaAwareBackend:
         self.seed = seed
         self.graph = (HNSW(dim=store.d, M=hnsw_M,
                            ef_construction=hnsw_ef_construction, seed=seed)
-                      if kind == "hnsw" else None)
+                      if kind in ("hnsw", "graph") else None)
         self.ivf: IVFIndex | None = None
         self._assign: dict[int, int] = {}       # row -> ivf cluster
         self._ivf_built_upto = 0
@@ -261,7 +280,17 @@ class DeltaAwareBackend:
         self._adc_c8 = self._adc_cn = self._adc_codes_t = None
         self._adc_ok = None
         self._adc_snapshot = (-1, -1, -1)  # (codebook id, gen, n_total)
+        # batched-graph state (kind="graph", DESIGN.md §15): the CSR
+        # mirror of self.graph, its device arrays, and the dirty-row
+        # set accumulated by the eager mutation hooks
+        self._csr: CSRGraph | None = None
+        self._g_dirty: set[int] = set()
+        self._g_neigh0 = self._g_neigh_up = self._g_ok = None
+        self._g_db = None
         self.last_filter_bytes = 0
+        self.last_n_hops = 0
+        self.last_n_edges_scanned = 0
+        self.last_scan_trace: np.ndarray | None = None
 
     # ------------------------------------------------- mutation hooks
     # Called by the Collection under its lock, *before* the engine is
@@ -276,10 +305,22 @@ class DeltaAwareBackend:
                     raise RuntimeError(
                         f"graph node id {node} != store row id {row}: "
                         f"graph and store are desynchronized")
+                if self.kind == "graph":
+                    # changed-row set of an insert: the new node plus
+                    # the neighbors it linked back to (HNSW.insert only
+                    # touches links[lev][node] and _add_link targets)
+                    self._g_dirty.add(int(node))
+                    for lev in range(len(self.graph.links)):
+                        nb = self.graph.links[lev][node]
+                        if nb is not None:
+                            self._g_dirty.update(int(v) for v in nb)
 
     def on_delete(self, row: int):
         if self.graph is not None:
-            self.graph.delete(row)
+            repaired = self.graph.delete(row)
+            if self.kind == "graph":
+                self._g_dirty.add(int(row))
+                self._g_dirty.update(repaired)
         if self.kind == "ivf":
             c = self._assign.pop(row, None)
             if c is not None and self.ivf is not None:
@@ -320,6 +361,25 @@ class DeltaAwareBackend:
         rank-identical XLA formulation is the serving path
         (kernels/adc_topk/ops.py)."""
         return self.use_kernel and jax.default_backend() == "tpu"
+
+    # ------------------------------------------- graph persistence
+
+    def graph_arrays(self) -> dict:
+        """Persistable filter-graph payload (`Collection.snapshot`):
+        the host graph's `to_arrays` encoding — which `CSRGraph
+        .to_arrays` reproduces bit-for-bit, the `.ppcol` contract."""
+        return self.graph.to_arrays()
+
+    def restore_graph(self, arrays: dict):
+        """Install a snapshotted filter graph (`Collection
+        .load_snapshot`); the CSR mirror rebuilds on the next attach."""
+        g = HNSW.from_arrays(dict(arrays))
+        if g.size != self.store.n_total:
+            raise ValueError(f"graph has {g.size} nodes for "
+                             f"{self.store.n_total} rows")
+        self.graph = g
+        self._csr = None
+        self._g_dirty.clear()
 
     # ----------------------------------------------- ADC code arrays
 
@@ -410,6 +470,9 @@ class DeltaAwareBackend:
     def attach(self, C_sap: np.ndarray, engine):
         """One refresh per mutation burst (the engine attaches lazily)."""
         st = self.store
+        if self.kind == "graph":
+            self._attach_graph(C_sap)
+            return
         if self.quantization is not None:
             if self.kind == "ivf":
                 self._attach_ivf_index(C_sap)
@@ -432,6 +495,45 @@ class DeltaAwareBackend:
         elif self.kind == "ivf":
             self._attach_ivf(C_sap)
         # hnsw: the graph already holds its ciphertexts, nothing to refresh
+
+    def _attach_graph(self, C_sap: np.ndarray):
+        """CSR mirror + device-array refresh (DESIGN.md §15).
+
+        Eager delta inserts only touched their changed host rows (the
+        `_g_dirty` set), so inside an unchanged row bucket the refresh
+        is row-local — the reserved slack slots of the power-of-two
+        bucket absorb appends without reallocation and the jitted
+        traversal never recompiles.  A compaction, a bucket overflow,
+        or a new top layer rebuilds the mirror at the next bucket,
+        exactly like every other bucketed array in the runtime."""
+        st = self.store
+        g = self.graph
+        R = self._row_bucket(max(st.n_total, 1))
+        rebuild = (self._csr is None or self._csr.R != R
+                   or not self._csr.fits(g)
+                   or self._attached_gen != st.main_gen)
+        if rebuild:
+            LU = next_bucket(max(len(g.links) - 1, 1), minimum=4)
+            self._csr = CSRGraph.from_hnsw(g, R=R, LU=LU)
+            self._attached_gen = st.main_gen
+        elif self._g_dirty:
+            self._csr.refresh_rows(g, sorted(self._g_dirty))
+            self._csr.refresh_meta(g)
+        self._g_dirty.clear()
+        self._g_neigh0 = jnp.asarray(self._csr.neigh0)
+        self._g_neigh_up = jnp.asarray(self._csr.neigh_up)
+        if self.quantization is not None:
+            self._attach_adc(C_sap)    # code bucket == R (_row_bucket)
+            self._g_ok = self._adc_ok > 0
+            self._g_db = ((self._adc_c8, self._adc_cn)
+                          if self.quantization == "int8"
+                          else (self._adc_codes_t,))
+        else:
+            self._refresh_scan_array(C_sap)
+            ok = np.zeros(R, bool)
+            ok[: st.n_total] = st.alive_view
+            self._g_ok = jnp.asarray(ok)
+            self._g_db = (self._C_all,)
 
     def _attach_ivf(self, C_sap: np.ndarray):
         self._attach_ivf_index(C_sap)
@@ -521,6 +623,8 @@ class DeltaAwareBackend:
             if self.quantization is not None else kp
 
     def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
+        if self.kind == "graph":
+            return self._candidates_graph(Q_sap, kp, ef_search)
         if self.quantization is not None:
             kp2 = self.oversampled(kp)
             if self.kind == "flat":
@@ -679,6 +783,42 @@ class DeltaAwareBackend:
         self.last_filter_bytes = (sum(p.size for p in pools) * st.d * 4
                                   + self.ivf.centroids.nbytes)
         return ids, vout, evals
+
+    def _candidates_graph(self, Q_sap: np.ndarray, kp: int,
+                          ef_search: int):
+        """Batched lockstep traversal over the CSR mirror (the whole
+        query batch in one jitted call — `kernels.graph_expand.ops`).
+        Static args are buckets only; ef/entry/validity are data, so
+        steady-state serving reuses one executable."""
+        from ...kernels.graph_expand import ops as graph_ops
+        st = self.store
+        Q = np.asarray(Q_sap, np.float32)
+        nq = Q.shape[0]
+        R = int(self._g_neigh0.shape[0])
+        kp2 = max(1, min(self.oversampled(kp), R))
+        ef_eff, ef_cap, max_hops = beam_plan(kp2, max(ef_search, kp2))
+        if self.quantization is None:
+            qd = jnp.asarray(Q)
+        elif self.quantization == "int8":
+            qd = jnp.asarray(self.adc_codebook.encode_query(Q))
+        else:
+            qd = jnp.asarray(self.adc_codebook.lut(Q))
+        cand, _, visited, hops, edges = graph_ops.graph_topk(
+            self._g_neigh0, self._g_neigh_up, self._g_ok, self._g_db,
+            qd, jnp.int32(self._csr.entry), jnp.int32(ef_eff),
+            kp=kp2, ef_cap=ef_cap, max_hops=max_hops,
+            quant=self.quantization or "f32",
+            oblivious=self.oblivious, use_kernel=self._use_pallas())
+        safe, valid = self._mask_alive(np.asarray(cand, np.int32),
+                                       np.asarray(cand) >= 0)
+        n_edges = int(np.asarray(edges).sum())
+        self.last_n_hops = int(np.asarray(hops).sum())
+        self.last_n_edges_scanned = n_edges
+        row_bytes = (st.d * 4 if self.quantization is None
+                     else self.adc_codebook.code_bytes_per_vector())
+        self.last_filter_bytes = (n_edges + nq) * row_bytes
+        self.last_scan_trace = np.asarray(visited)
+        return safe, valid, n_edges + nq
 
     def _candidates_hnsw(self, Q_sap: np.ndarray, kp: int, ef_search: int):
         cand, valid, evals = se.traverse_graph_candidates(

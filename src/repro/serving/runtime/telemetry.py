@@ -50,11 +50,13 @@ def jit_cache_size() -> int:
     from ...core import dce, dcpe
     from ...kernels.adc_topk import ops as adc_ops
     from ...kernels.dce_comp import ops as dce_ops
+    from ...kernels.graph_expand import ops as graph_ops
     from ...kernels.l2_topk import ops as l2_ops
     from .. import search_engine as se
     from .. import sharded
 
     fns = (
+        graph_ops.graph_topk,
         se.refine_candidates,
         se._masked_pruned_scan,
         se._masked_full_scan,
@@ -119,6 +121,11 @@ class CollectionTelemetry:
         # toward QPS/occupancy — those track n_real/n_active only.
         self.n_dummy_queries = 0
         self.padded_result_bytes = 0
+        # graph-backend traversal accounting (repro.graph, DESIGN.md
+        # §15): beam/greedy hops and edges scored, summed from the
+        # engine's SearchStats — 0 for scan backends
+        self.n_hops = 0
+        self.n_edges_scanned = 0
         self._wire_metrics(metrics, labels or {})
 
     # ------------------------------------------------- metrics exposition
@@ -155,6 +162,10 @@ class CollectionTelemetry:
                        "Serialized request bytes, client to server")
         self._m_down = c("ann_bytes_down_total",
                          "Serialized result bytes, server to client")
+        self._m_hops = c("ann_graph_hops_total",
+                         "Graph-backend traversal hops (filter stage)")
+        self._m_edges = c("ann_graph_edges_scanned_total",
+                          "Graph-backend edges scored (filter stage)")
         self._m_dummies = c("ann_dummy_queries_total",
                             "Dummy padding rows injected by the "
                             "scheduler (security profiles)")
@@ -215,6 +226,8 @@ class CollectionTelemetry:
         self.bytes_up += stats.bytes_up
         self.bytes_down += stats.bytes_down
         self.n_dummy_queries += stats.n_dummy_queries
+        self.n_hops += stats.n_hops
+        self.n_edges_scanned += stats.n_edges_scanned
 
     def _export_stats(self, stats, latencies_s):
         self._m_dist.inc(stats.filter_dist_evals, **self._labels)
@@ -222,6 +235,10 @@ class CollectionTelemetry:
         self._m_scanned.inc(stats.filter_bytes_scanned, **self._labels)
         self._m_up.inc(stats.bytes_up, **self._labels)
         self._m_down.inc(stats.bytes_down, **self._labels)
+        if stats.n_hops:
+            self._m_hops.inc(stats.n_hops, **self._labels)
+        if stats.n_edges_scanned:
+            self._m_edges.inc(stats.n_edges_scanned, **self._labels)
         for x in latencies_s:
             self._m_latency.observe(float(x), **self._labels)
 
@@ -352,6 +369,8 @@ class CollectionTelemetry:
                 "bytes_down": self.bytes_down,
                 "n_dummy_queries": self.n_dummy_queries,
                 "padded_result_bytes": self.padded_result_bytes,
+                "n_hops": self.n_hops,
+                "n_edges_scanned": self.n_edges_scanned,
                 "qps": served / span if span > 0 else 0.0,
                 "batch_occupancy": occupancy,
                 "slot_occupancy": slot_occ,

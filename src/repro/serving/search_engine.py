@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +79,11 @@ class SearchStats:
     # QPS/occupancy accounting excludes them.  Additive wire field:
     # results serialized before it decode with 0.
     n_dummy_queries: int = 0
+    # graph-backend traversal accounting (repro.graph, DESIGN.md §15):
+    # total beam/greedy hops and edges scored across the batch.  0 for
+    # scan backends; additive wire fields — old payloads decode with 0.
+    n_hops: int = 0
+    n_edges_scanned: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -221,7 +227,17 @@ def traverse_graph_candidates(index: HNSW, Q_sap: np.ndarray, kp: int,
                               ef_search: int):
     """Per-query host-side HNSW traversal (pointer chasing stays on CPU,
     DESIGN.md §3), padded to an (nq, kp) rectangle.
-    Returns (cand, valid, n_dist_evals)."""
+    Returns (cand, valid, n_dist_evals).
+
+    Deprecated as a serving path: `repro.graph.GraphFilter` runs the
+    same walk batched over the whole query set (recall-identical at
+    fixed ef — the parity suite in tests/test_graph.py).  This loop is
+    kept as the parity oracle."""
+    warnings.warn(
+        "the per-query host HNSW walk is deprecated as a serving path; "
+        "use repro.graph.GraphFilter (batched, recall-identical at "
+        "fixed ef) — the host walk remains as the parity oracle",
+        DeprecationWarning, stacklevel=2)
     nq = Q_sap.shape[0]
     evals0 = index.n_dist_evals
     cand = np.zeros((nq, kp), np.int32)
@@ -475,6 +491,10 @@ class SecureSearchEngine:
                 raise ValueError(
                     "pass HNSWGraphFilter(index) explicitly: the graph is "
                     "built by the data owner, not the engine")
+            if backend == "graph":
+                raise ValueError(
+                    "pass repro.graph.GraphFilter(index) explicitly: the "
+                    "graph is built by the data owner, not the engine")
             if quantization is not None:
                 if backend not in ("flat", "ivf"):
                     raise ValueError(
@@ -547,7 +567,10 @@ class SecureSearchEngine:
                 Q_sap, kp, ef_search)
             fsp.set(dist_evals=int(dist_evals),
                     bytes_scanned=int(
-                        getattr(self.backend, "last_filter_bytes", 0)))
+                        getattr(self.backend, "last_filter_bytes", 0)),
+                    hops=int(getattr(self.backend, "last_n_hops", 0)),
+                    edges_scanned=int(
+                        getattr(self.backend, "last_n_edges_scanned", 0)))
         if cand.shape[1] < k:       # uniform (nq, k) contract: -1 fill
             pad = ((0, 0), (0, k - cand.shape[1]))
             cand = np.pad(cand, pad)
@@ -588,6 +611,9 @@ class SecureSearchEngine:
             backend=self.backend.name,
             filter_bytes_scanned=int(
                 getattr(self.backend, "last_filter_bytes", 0)),
+            n_hops=int(getattr(self.backend, "last_n_hops", 0)),
+            n_edges_scanned=int(
+                getattr(self.backend, "last_n_edges_scanned", 0)),
         )
         return ids, stats
 
@@ -624,5 +650,8 @@ class SecureSearchEngine:
             backend=self.backend.name,
             filter_bytes_scanned=int(
                 getattr(self.backend, "last_filter_bytes", 0)),
+            n_hops=int(getattr(self.backend, "last_n_hops", 0)),
+            n_edges_scanned=int(
+                getattr(self.backend, "last_n_edges_scanned", 0)),
         )
         return ids, stats

@@ -22,6 +22,13 @@ runtime all work unchanged over a sharded collection.  What changes is
                   are +inf, and a `pmin` over the axis reassembles the
                   full (nq, L) distance matrix bit-identically to the
                   single-device `_masked_pruned_scan`.
+  filter (graph): per-shard subgraphs (DESIGN.md §15) — each shard owns
+                  an independent HNSW over its contiguous row block,
+                  mirrored into one shared (R, LU) CSR bucket; the
+                  batched lockstep traversal runs per shard with one
+                  reused executable and the k'-per-shard results merge
+                  by surrogate distance (host-side; the traversal does
+                  not run under the mesh).
   refine:         the DCE refine array is row-sharded too; each shard
                   extracts the candidate rows it owns (others zeroed)
                   and one `psum` of (nq, k', 4, D) — k' rows per query,
@@ -53,6 +60,9 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..core.hnsw import HNSW
+from ..graph.csr import CSRGraph
+from ..graph.traverse import beam_plan
 from ..kernels.adc_topk.ops import INT_BIG
 from ..kernels.common import next_bucket
 from ..kernels.dce_comp import ops as dce_ops
@@ -391,8 +401,8 @@ def cache_size() -> int:
 # ---------------------------------------------------------------------------
 
 class ShardedBackend(DeltaAwareBackend):
-    """Row-sharded flat / IVF filter + sharded refine over a mutable
-    encrypted store.
+    """Row-sharded flat / IVF / per-shard-graph filter + sharded refine
+    over a mutable encrypted store.
 
     Reuses the delta-aware host-side machinery wholesale — mutation
     hooks, tombstone masking (`_mask_alive`), the IVF centroid build and
@@ -405,11 +415,14 @@ class ShardedBackend(DeltaAwareBackend):
 
     def __init__(self, store, kind: str = "flat", *, n_shards: int,
                  data_axis: str = "data", **kw):
-        if kind not in ("flat", "ivf"):
+        if kind not in ("flat", "ivf", "graph"):
             raise ValueError(
-                f"sharded placement supports flat|ivf filter backends, "
-                f"not {kind!r} (graph traversal does not shard, "
-                f"DESIGN.md §3)")
+                f"sharded placement supports flat|ivf|graph filter "
+                f"backends, not {kind!r} (the per-query host walk does "
+                f"not shard; kind='graph' serves per-shard subgraphs, "
+                f"DESIGN.md §3/§15)")
+        self._hnsw_M = kw.get("hnsw_M", 16)
+        self._hnsw_efc = kw.get("hnsw_ef_construction", 200)
         super().__init__(store, kind, **kw)
         self.n_shards = int(n_shards)
         self.axis = data_axis
@@ -420,6 +433,25 @@ class ShardedBackend(DeltaAwareBackend):
         self._sh_dce = NamedSharding(self.mesh, P(data_axis, None, None))
         self._sh_row = NamedSharding(self.mesh, P(data_axis))
         self._sh_codes_t = NamedSharding(self.mesh, P(None, data_axis))
+        # per-shard subgraph state (kind="graph", DESIGN.md §15): each
+        # shard owns an independent host HNSW over its contiguous row
+        # block — graph edges never cross shards, so the batched
+        # traversal runs per shard (one executable, reused across
+        # shards: identical R/LU buckets) and the k'-per-shard results
+        # merge by surrogate distance, the same collective shape as the
+        # flat all-gather(k') merge.  The single global host graph of
+        # the base class is disabled (its eager hooks assume node id ==
+        # store row id, which a block partition breaks); mutations are
+        # replayed shard-locally at the next attach instead.
+        if kind == "graph":
+            self.graph = None
+        self._shard_graphs: list[HNSW] | None = None
+        self._g_per = 0                    # rows per shard of the mirror
+        self._g_built_n = 0                # store rows absorbed so far
+        self._g_csrs: list[CSRGraph] | None = None
+        self._g_dirty_sh: list[set] = []
+        self._g_del_pending: list[int] = []
+        self._g_neigh0_sh = self._g_neigh_up_sh = None
 
     # ------------------------------------------------------------ layout
 
@@ -447,6 +479,12 @@ class ShardedBackend(DeltaAwareBackend):
     # ------------------------------------------------------------ attach
 
     def on_delete(self, row: int):
+        if self.kind == "graph":
+            # shard graphs sync lazily at attach (one replay per burst);
+            # the store has already sentinelled the row, so a search
+            # racing the replay still masks it via `_mask_alive`
+            self._g_del_pending.append(int(row))
+            return
         super().on_delete(row)
         if self.kind == "flat":
             # force a re-upload so the deleted row is sentinelled on
@@ -494,6 +532,9 @@ class ShardedBackend(DeltaAwareBackend):
         return jax.device_put(buf, self._sh_row)
 
     def attach(self, C_sap: np.ndarray, engine):
+        if self.kind == "graph":
+            self._attach_graph_sharded(C_sap)
+            return
         if self.quantization is not None:
             if self.kind == "ivf":
                 self._attach_ivf_index(C_sap)   # same pools as single
@@ -503,6 +544,101 @@ class ShardedBackend(DeltaAwareBackend):
             self._attach_ivf(C_sap)       # parent logic; calls our
         else:                             # _refresh_scan_array override
             self._refresh_scan_array(C_sap)
+
+    # ------------------------------------------- per-shard subgraphs
+
+    def _ensure_shard_graphs(self, C_sap: np.ndarray):
+        """Host-graph maintenance: one independent HNSW per shard over
+        its contiguous row block (shard-local node id = row - shard
+        base).  A bucket change or compaction rebuilds; otherwise the
+        mutation burst replays shard-locally — appended rows insert
+        into their owning tail shard(s), pending deletes repair in
+        place — and only the changed rows are marked for CSR refresh."""
+        st = self.store
+        per = self._row_bucket(max(st.n_total, 1)) // self.n_shards
+        rebuild = (self._shard_graphs is None or per != self._g_per
+                   or self._attached_gen != st.main_gen)
+        if rebuild:
+            self._shard_graphs = [
+                HNSW(dim=st.d, M=self._hnsw_M,
+                     ef_construction=self._hnsw_efc, seed=self.seed + s)
+                for s in range(self.n_shards)]
+            self._g_per = per
+            self._g_built_n = 0
+            self._g_csrs = None
+            self._g_dirty_sh = [set() for _ in range(self.n_shards)]
+            self._g_del_pending.clear()   # tombstones replay from store
+        built0 = self._g_built_n
+        alive = st.alive_view
+        for row in range(built0, st.n_total):
+            # rows append in order, so each shard's inserts are its
+            # contiguous local ids — node id == local offset by
+            # construction (the sharded twin of the node==row invariant)
+            s, local = divmod(row, per)
+            g = self._shard_graphs[s]
+            node = g.insert(C_sap[row])
+            if node != local:
+                raise RuntimeError(
+                    f"shard {s} node id {node} != local row {local}: "
+                    f"subgraph and store are desynchronized")
+            dirty = self._g_dirty_sh[s]
+            dirty.add(local)
+            for lev in range(len(g.links)):
+                nb = g.links[lev][local]
+                if nb is not None:
+                    dirty.update(int(v) for v in nb)
+            if not alive[row]:      # tombstoned between attaches (or a
+                dirty.update(g.delete(local))   # rebuild over dead rows)
+        self._g_built_n = st.n_total
+        for row in self._g_del_pending:
+            if row < built0:        # rows >= built0 were handled above
+                s, local = divmod(row, per)
+                dirty = self._g_dirty_sh[s]
+                dirty.add(local)
+                dirty.update(self._shard_graphs[s].delete(local))
+        self._g_del_pending.clear()
+        self._attached_gen = st.main_gen
+
+    def _attach_graph_sharded(self, C_sap: np.ndarray):
+        """CSR mirrors + device arrays for the per-shard subgraphs.  All
+        shards share one (R=per, LU) bucket so the jitted traversal
+        compiles once and serves every shard."""
+        st = self.store
+        self._ensure_shard_graphs(C_sap)
+        per = self._g_per
+        graphs = self._shard_graphs
+        if (self._g_csrs is None or self._g_csrs[0].R != per
+                or any(not c.fits(g)
+                       for c, g in zip(self._g_csrs, graphs))):
+            LU = max(next_bucket(max(len(g.links) - 1, 1), minimum=4)
+                     for g in graphs)
+            if self._g_csrs is not None:
+                LU = max(LU, self._g_csrs[0].LU)
+            self._g_csrs = [CSRGraph.from_hnsw(g, R=per, LU=LU)
+                            for g in graphs]
+            for dirty in self._g_dirty_sh:
+                dirty.clear()
+        else:
+            for s, (c, g) in enumerate(zip(self._g_csrs, graphs)):
+                if self._g_dirty_sh[s]:
+                    c.refresh_rows(g, sorted(self._g_dirty_sh[s]))
+                    c.refresh_meta(g)
+                    self._g_dirty_sh[s].clear()
+        self._g_neigh0_sh = [jnp.asarray(c.neigh0) for c in self._g_csrs]
+        self._g_neigh_up_sh = [jnp.asarray(c.neigh_up)
+                               for c in self._g_csrs]
+        if self.quantization is not None:
+            self._attach_adc(C_sap)     # global codebook: surrogate
+            self._g_ok = self._adc_ok > 0   # distances stay comparable
+            self._g_db = ((self._adc_c8, self._adc_cn)   # across shards
+                          if self.quantization == "int8"
+                          else (self._adc_codes_t,))
+        else:
+            self._refresh_scan_array(C_sap)
+            ok = np.zeros(per * self.n_shards, bool)
+            ok[: st.n_total] = st.alive_view
+            self._g_ok = jnp.asarray(ok)
+            self._g_db = (self._C_all,)
 
     def dce_device(self, C_dce_padded: np.ndarray):
         """Row-sharded residency for the refine array, padded to the
@@ -526,10 +662,59 @@ class ShardedBackend(DeltaAwareBackend):
         self._dce_snapshot = (bucket, st.n_total)
         return self._C_dce_dev
 
+    # ------------------------------------------- graph persistence
+
+    def graph_arrays(self) -> dict:
+        """Per-shard snapshot payload: each subgraph's `to_arrays`
+        encoding under an `s<shard>__` prefix (restoring the exact
+        host graphs keeps post-restore searches bit-identical — a
+        rebuild would replay deletes in a different repair order)."""
+        if self._shard_graphs is None:     # snapshot before first search
+            self._ensure_shard_graphs(self.store.sap_view)
+        out = {}
+        for s, g in enumerate(self._shard_graphs):
+            out.update({f"s{s}__{k}": v for k, v in
+                        g.to_arrays().items()})
+        return out
+
+    def restore_graph(self, arrays: dict):
+        st = self.store
+        if not any(k.startswith("s0__") for k in arrays):
+            # an owner-built *global* graph (EncryptedCorpus.index): a
+            # single graph does not block-partition, so the service
+            # builds its per-shard subgraphs over the uploaded DCPE
+            # ciphertexts at the next attach (keyless-safe — the same
+            # inputs the owner's build saw)
+            self._shard_graphs = None
+            self._attached_gen = -1
+            return
+        per = self._row_bucket(max(st.n_total, 1)) // self.n_shards
+        graphs = []
+        for s in range(self.n_shards):
+            pre = f"s{s}__"
+            sub = {k[len(pre):]: v for k, v in arrays.items()
+                   if k.startswith(pre)}
+            g = HNSW.from_arrays(sub)
+            want = min(max(st.n_total - s * per, 0), per)
+            if g.size != want:
+                raise ValueError(
+                    f"shard {s} graph has {g.size} nodes for {want} "
+                    f"rows (snapshot from a different partition?)")
+            graphs.append(g)
+        self._shard_graphs = graphs
+        self._g_per = per
+        self._g_built_n = st.n_total
+        self._g_csrs = None
+        self._g_dirty_sh = [set() for _ in range(self.n_shards)]
+        self._g_del_pending.clear()
+        self._attached_gen = st.main_gen
+
     # ------------------------------------------------------- candidates
 
     def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
-        if self.quantization is not None:
+        if self.kind == "graph":
+            out = self._candidates_graph(Q_sap, kp, ef_search)
+        elif self.quantization is not None:
             kp2 = self.oversampled(kp)
             if self.kind == "flat":
                 out = self._candidates_adc_flat(Q_sap, kp2)
@@ -672,6 +857,65 @@ class ShardedBackend(DeltaAwareBackend):
         self.last_filter_bytes = (sum(p.size for p in pools) * st.d * 4
                                   + self.ivf.centroids.nbytes)
         return np.asarray(ids), np.asarray(vout), evals
+
+    def _candidates_graph(self, Q_sap: np.ndarray, kp: int,
+                          ef_search: int):
+        """Per-shard batched traversal + cross-shard k' merge.  Each
+        shard's lockstep walk returns its local top-k' with surrogate
+        distances (one global codebook, so the scores are comparable
+        across shards); the merged candidate list is the top-k' of the
+        (nq, S*k') concatenation — the same k'-per-shard collective
+        shape as the flat all-gather merge, assembled host-side because
+        the traversal itself does not run under the mesh."""
+        from ..kernels.graph_expand import ops as graph_ops
+        st = self.store
+        Q = np.asarray(Q_sap, np.float32)
+        nq = Q.shape[0]
+        per = self._g_per
+        kp2 = max(1, min(self.oversampled(kp), per))
+        ef_eff, ef_cap, max_hops = beam_plan(kp2, max(ef_search, kp2))
+        if self.quantization is None:
+            qd = jnp.asarray(Q)
+        elif self.quantization == "int8":
+            qd = jnp.asarray(self.adc_codebook.encode_query(Q))
+        else:
+            qd = jnp.asarray(self.adc_codebook.lut(Q))
+        ids_p, d_p, vis_p = [], [], []
+        hops_t = edges_t = 0
+        for s in range(self.n_shards):
+            lo, hi = s * per, (s + 1) * per
+            if self.quantization is None:
+                db = (self._C_all[lo:hi],)
+            elif self.quantization == "int8":
+                db = (self._adc_c8[lo:hi], self._adc_cn[lo:hi])
+            else:
+                db = (self._adc_codes_t[:, lo:hi],)
+            cand, cand_d, visited, hops, edges = graph_ops.graph_topk(
+                self._g_neigh0_sh[s], self._g_neigh_up_sh[s],
+                self._g_ok[lo:hi], db, qd,
+                jnp.int32(self._g_csrs[s].entry), jnp.int32(ef_eff),
+                kp=kp2, ef_cap=ef_cap, max_hops=max_hops,
+                quant=self.quantization or "f32",
+                oblivious=self.oblivious, use_kernel=False)
+            c = np.asarray(cand, np.int32)
+            ids_p.append(np.where(c >= 0, c + np.int32(lo), -1))
+            d_p.append(np.where(c >= 0, np.asarray(cand_d, np.float32),
+                                np.inf))
+            vis_p.append(np.asarray(visited))
+            hops_t += int(np.asarray(hops).sum())
+            edges_t += int(np.asarray(edges).sum())
+        ids = np.concatenate(ids_p, axis=1)
+        dists = np.concatenate(d_p, axis=1)
+        order = np.argsort(dists, axis=1, kind="stable")[:, :kp2]
+        cand = np.take_along_axis(ids, order, axis=1)
+        safe, valid = self._mask_alive(cand, cand >= 0)
+        self.last_n_hops = hops_t
+        self.last_n_edges_scanned = edges_t
+        row_bytes = (st.d * 4 if self.quantization is None
+                     else self.adc_codebook.code_bytes_per_vector())
+        self.last_filter_bytes = (edges_t + nq * self.n_shards) * row_bytes
+        self.last_scan_trace = np.concatenate(vis_p, axis=1)
+        return safe, valid, edges_t + nq * self.n_shards
 
     # ----------------------------------------------------------- refine
 

@@ -1,0 +1,297 @@
+"""Fault-tolerance bench: recovery time, checkpoint-vs-replay tradeoff,
+degraded-mode serving cost (EXPERIMENTS.md §Perf cell 10, DESIGN.md §16).
+
+Three curves:
+
+  * recovery-time vs WAL length — kill-restart with a WAL-only log of N
+    acked insert records: `recover()` wall time and replayed rows/s,
+    plus the bit-identical `state_digest` check that makes the number
+    mean something;
+  * checkpoint-interval vs replay-cost — same op stream, background
+    `.ppcol` checkpoints every I ops: how the checkpoint knob trades
+    recovery replay length (and time) against checkpoint write traffic;
+  * failover QPS — closed-loop sharded search throughput healthy vs one
+    replica dead (must be bit-identical and ~free) vs a whole shard
+    group dead (degraded=True answers from the alive shards).  Skips on
+    a single-device host; CI runs it under
+    `XLA_FLAGS=--xla_force_host_platform_device_count=8`.
+
+Writes `BENCH_resilience.json` at the repo root (the resilience-suite
+perf trajectory record) in addition to the harness's results-dir copy.
+
+  PYTHONPATH=src python -m benchmarks.bench_resilience --smoke
+
+exits non-zero if any recovery is not digest-identical to the killed
+state, if checkpointing fails to shorten replay, or (with >= 2 devices)
+if one-dead-replica answers are not bit-identical to healthy — the
+`resilience-smoke` CI gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro import resilience as R
+from repro.serving.runtime import Collection
+
+from .common import row
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+D = 32
+ROWS_PER_RECORD = 32
+K = 10
+
+
+def _factory(seed=5, **kw):
+    kw.setdefault("compact_every", 4096)
+    return lambda: Collection("bench", "resil", D, seed=seed,
+                              use_kernel=False, **kw)
+
+
+def _ingest(col, rng, n_records, cp=None):
+    for _ in range(n_records):
+        col.insert(rng.normal(size=(ROWS_PER_RECORD, D))
+                   .astype(np.float32))
+        if cp is not None:
+            cp.note_ops(1)
+
+
+# ---------------------------------------------------------------------------
+# Curve 1: recovery-time vs WAL length (no checkpoint).
+# ---------------------------------------------------------------------------
+
+def bench_recovery(n_records_list, seed=5):
+    rows, ok = [], True
+    for n_records in n_records_list:
+        with tempfile.TemporaryDirectory() as td:
+            rng = np.random.default_rng(seed)
+            col = _factory(seed)()
+            wal = R.WriteAheadLog(pathlib.Path(td) / "wal")
+            R.attach_wal(col, wal)
+            _ingest(col, rng, n_records)
+            dig = col.store.state_digest()
+            wal.close()
+            col.close()                      # "kill"
+            t0 = time.perf_counter()
+            col2, rep = R.recover(_factory(seed),
+                                  wal_dir=pathlib.Path(td) / "wal")
+            dt = time.perf_counter() - t0
+            identical = col2.store.state_digest() == dig
+            ok &= identical
+            n_rows = n_records * ROWS_PER_RECORD
+            rows.append(row(
+                f"resilience/recover/wal={n_records}",
+                1e6 * dt / max(n_records, 1),
+                f"recovery_s={dt:.3f} rows_per_s={n_rows / dt:.0f} "
+                f"n_replayed={rep.n_replayed} digest_ok={identical}"))
+            col2.close()
+    return rows, ok
+
+
+# ---------------------------------------------------------------------------
+# Curve 2: checkpoint-interval vs replay-cost.
+# ---------------------------------------------------------------------------
+
+def bench_checkpoint_interval(n_records, intervals, seed=5):
+    rows, replayed, ok = [], {}, True
+    for interval in intervals:
+        with tempfile.TemporaryDirectory() as td:
+            td = pathlib.Path(td)
+            rng = np.random.default_rng(seed)
+            col = _factory(seed)()
+            wal = R.WriteAheadLog(td / "wal")
+            R.attach_wal(col, wal)
+            cp = None
+            if interval is not None:
+                cp = R.AsyncCheckpointer(col, td / "col.ppcol",
+                                         every_n_ops=interval)
+            t0 = time.perf_counter()
+            _ingest(col, rng, n_records, cp=cp)
+            if cp is not None:
+                cp.join()
+            ingest_dt = time.perf_counter() - t0
+            dig = col.store.state_digest()
+            wal.close()
+            col.close()
+            ckpt = td / "col.ppcol"
+            t0 = time.perf_counter()
+            col2, rep = R.recover(
+                _factory(seed), wal_dir=td / "wal",
+                checkpoint_path=ckpt if ckpt.exists() else None)
+            dt = time.perf_counter() - t0
+            identical = col2.store.state_digest() == dig
+            ok &= identical
+            label = "none" if interval is None else str(interval)
+            replayed[label] = rep.n_replayed
+            n_ck = cp.n_checkpoints if cp is not None else 0
+            rows.append(row(
+                f"resilience/ckpt-interval={label}",
+                1e6 * dt / max(n_records, 1),
+                f"recovery_s={dt:.3f} n_replayed={rep.n_replayed} "
+                f"n_checkpoints={n_ck} ingest_s={ingest_dt:.3f} "
+                f"digest_ok={identical}"))
+            col2.close()
+    # checkpointing must shorten replay vs the WAL-only baseline
+    base = replayed.get("none")
+    if base is not None:
+        ok &= all(v < base for k, v in replayed.items() if k != "none")
+    return rows, ok
+
+
+# ---------------------------------------------------------------------------
+# Curve 3: failover QPS (healthy / replica-dead / group-dead).
+# ---------------------------------------------------------------------------
+
+def bench_failover(n=4096, nq=16, n_loops=8, seed=5):
+    import jax
+    from repro.api import PlacementSpec
+    n_shards = min(4, jax.device_count())
+    if n_shards < 2:
+        return [row("resilience/failover", float("nan"),
+                    "skipped=single-device "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+                ], True, True
+    placement = PlacementSpec(kind="sharded", n_shards=n_shards,
+                              n_replicas=2).resolve(jax.device_count())
+    rng = np.random.default_rng(seed)
+    col = _factory(seed, placement=placement)()
+    try:
+        col.insert(rng.normal(size=(n, D)).astype(np.float32))
+        col.compact()
+        user = col.new_user()
+        enc = [user.encrypt_query(q) for q in
+               rng.normal(size=(nq, D)).astype(np.float32)]
+        Q = np.stack([e[0] for e in enc])
+        T = np.stack([e[1] for e in enc])
+
+        def qps():
+            col.search_batch(Q, T, K)            # warm the current mode
+            t0 = time.perf_counter()
+            for _ in range(n_loops):
+                ids, stats = col.search_batch(Q, T, K)
+            dt = time.perf_counter() - t0
+            return n_loops * nq / dt, np.asarray(ids), stats
+
+        rows = []
+        healthy_qps, healthy_ids, _ = qps()
+        rows.append(row("resilience/failover/healthy",
+                        1e6 / healthy_qps, f"qps={healthy_qps:.1f} "
+                        f"n_shards={n_shards} n_replicas=2"))
+        col.health.kill(1, 1)                    # one replica: invisible
+        rqps, rids, rstats = qps()
+        replica_identical = (np.array_equal(rids, healthy_ids)
+                             and not rstats.degraded)
+        rows.append(row("resilience/failover/one-replica-dead",
+                        1e6 / rqps,
+                        f"qps={rqps:.1f} vs_healthy_x{rqps / healthy_qps:.2f} "
+                        f"ids_identical={replica_identical}"))
+        col.health.kill(1, 0)                    # whole group: degraded
+        dqps, dids, dstats = qps()
+        degraded_ok = bool(dstats.degraded and dstats.n_shards_down == 1
+                           and (dids >= -1).all())
+        rows.append(row("resilience/failover/one-group-dead",
+                        1e6 / dqps,
+                        f"qps={dqps:.1f} vs_healthy_x{dqps / healthy_qps:.2f} "
+                        f"degraded={bool(dstats.degraded)} "
+                        f"n_shards_down={dstats.n_shards_down}"))
+        return rows, replica_identical, degraded_ok
+    finally:
+        col.close()
+
+
+# ---------------------------------------------------------------------------
+# Harness entry points.
+# ---------------------------------------------------------------------------
+
+def run(n_records=(50, 200, 800), ckpt_records=300,
+        intervals=(None, 100, 25), write_root_json=True) -> list[str]:
+    rows1, _ = bench_recovery(n_records)
+    rows2, _ = bench_checkpoint_interval(ckpt_records, intervals)
+    rows3, _, _ = bench_failover()
+    rows = rows1 + rows2 + rows3
+    if write_root_json:
+        _write_root_json(rows, n_records, ckpt_records, intervals)
+    return rows
+
+
+def _write_root_json(rows, n_records, ckpt_records, intervals):
+    """The repo-root BENCH_resilience.json: the resilience-suite
+    trajectory record sessions diff against (the harness also writes
+    its own copy under results/bench)."""
+    from .run import provenance
+    payload = {
+        "suite": "resilience",
+        "unix_time": time.time(),
+        "config": {"d": D, "rows_per_record": ROWS_PER_RECORD,
+                   "wal_lengths": list(n_records),
+                   "ckpt_records": ckpt_records,
+                   "ckpt_intervals": [i if i is not None else "none"
+                                      for i in intervals]},
+        "provenance": provenance(),
+        "rows": [{"name": r.split(",", 2)[0],
+                  "us_per_call": float(r.split(",", 2)[1]),
+                  "derived": r.split(",", 2)[2]} for r in rows],
+    }
+    (_ROOT / "BENCH_resilience.json").write_text(
+        json.dumps(payload, indent=2) + "\n")
+
+
+def _smoke() -> int:
+    """CI gate: every recovery digest-identical, checkpoints shorten
+    replay, one-dead-replica answers bit-identical to healthy."""
+    ok = True
+    rows, rec_ok = bench_recovery((30, 120))
+    for r in rows:
+        print(r, flush=True)
+    if not rec_ok:
+        print("# SMOKE FAIL: WAL recovery not digest-identical "
+              "(acked-write loss)")
+        ok = False
+    rows, ck_ok = bench_checkpoint_interval(120, (None, 40))
+    for r in rows:
+        print(r, flush=True)
+    if not ck_ok:
+        print("# SMOKE FAIL: checkpointing did not shorten replay "
+              "(or checkpointed recovery diverged)")
+        ok = False
+    rows, replica_ok, degraded_ok = bench_failover(n=2048, nq=8,
+                                                   n_loops=4)
+    for r in rows:
+        print(r, flush=True)
+    if not replica_ok:
+        print("# SMOKE FAIL: one dead replica changed answers "
+              "(must be invisible)")
+        ok = False
+    if not degraded_ok:
+        print("# SMOKE FAIL: group-down answers not labelled degraded")
+        ok = False
+    if ok:
+        print("# smoke OK: digest-identical recovery, checkpointed "
+              "replay shorter, replica failover invisible")
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: zero acked-write loss + invisible "
+                         "replica failover")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(_smoke())
+    for r in run(n_records=(100, 400, 1600) if args.full
+                 else (50, 200, 800)):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -94,8 +94,8 @@ def main() -> None:
     from . import (bench_attacks, bench_baselines, bench_batched,
                    bench_beta, bench_encrypt, bench_filter, bench_graph,
                    bench_kernels, bench_profile, bench_ratio_k,
-                   bench_refine, bench_roofline, bench_runtime,
-                   bench_scalability)
+                   bench_refine, bench_resilience, bench_roofline,
+                   bench_runtime, bench_scalability)
 
     suites = {
         "fig4_beta": lambda: bench_beta.run(
@@ -155,6 +155,15 @@ def main() -> None:
         # in `python -m benchmarks.bench_attacks --smoke` (CI)
         "attacks": lambda: bench_attacks.run(
             n=32_768 if args.full else 16_384),
+        # recovery-time vs WAL length, checkpoint-interval vs replay
+        # cost, failover QPS healthy vs dead-replica (DESIGN.md §16);
+        # also writes the repo-root BENCH_resilience.json trajectory
+        # record.  The hard gate (digest-identical recovery, invisible
+        # replica failover) lives in
+        # `python -m benchmarks.bench_resilience --smoke` (CI)
+        "resilience": lambda: bench_resilience.run(
+            n_records=(100, 400, 1600) if args.full
+            else (50, 200, 800)),
         "kernels": lambda: bench_kernels.run(),
         "roofline": lambda: bench_roofline.run(),
     }

@@ -116,6 +116,7 @@ def check_api_exports() -> list[str]:
     errors.extend(check_obs_surface(api))
     errors.extend(check_sec_surface(api))
     errors.extend(check_graph_surface(api))
+    errors.extend(check_resilience_surface(api))
     return errors
 
 
@@ -267,6 +268,89 @@ def check_sec_surface(api) -> list[str]:
         try:
             api.IndexSpec(tenant="_gate", name="_gate", d=8, **bad)
             errors.append(f"IndexSpec must reject {bad}")
+        except ValueError:
+            pass
+    return errors
+
+
+# Names that MUST stay exported by repro.resilience — the fault-tolerant
+# serving surface contract (DESIGN.md §16).
+REQUIRED_RESILIENCE_EXPORTS = {
+    "WriteAheadLog", "WalRecord", "WalCorruptionError",
+    "AsyncCheckpointer", "recover", "RecoveryReport", "attach_wal",
+    "ShardHealthRegistry", "FaultPlan", "InjectedFault", "SimulatedCrash",
+    "EngineRetryPolicy", "RetryPolicy", "ResilientRunner",
+    "StragglerWatchdog",
+}
+
+
+def check_resilience_surface(api) -> list[str]:
+    """The fault-tolerance surface contract (DESIGN.md §16):
+    repro.resilience exports the WAL/checkpoint/recovery/failover entry
+    points, and the failover wire fields stay ADDITIVE — old payloads
+    without them must keep decoding as healthy answers, and
+    PlacementSpec.n_replicas must validate and round-trip."""
+    import dataclasses
+
+    import numpy as np
+    errors = []
+    try:
+        import repro.resilience as resilience
+    except Exception as e:                          # noqa: BLE001
+        return [f"import repro.resilience failed: "
+                f"{type(e).__name__}: {e}"]
+    for name in sorted(REQUIRED_RESILIENCE_EXPORTS):
+        if not hasattr(resilience, name):
+            errors.append(f"repro.resilience must export {name} "
+                          f"(resilience surface contract, DESIGN.md §16)")
+    # additive wire fields: a stats dict WITHOUT the failover keys (a
+    # pre-§16 peer's payload) must decode as a healthy answer
+    from repro.serving.search_engine import SearchStats
+    stats_fields = {f.name for f in dataclasses.fields(SearchStats)}
+    for name in ("degraded", "n_shards_down"):
+        if name not in stats_fields:
+            errors.append(f"SearchStats must carry {name} "
+                          f"(failover accounting, DESIGN.md §16)")
+    if not errors:
+        try:
+            from repro.api.protocol import PROTOCOL_VERSION
+            from repro.core.wireformat import pack
+            old_stats = dataclasses.asdict(SearchStats(
+                latency_s=0.0, filter_dist_evals=0, refine_comparisons=0,
+                bytes_up=0, bytes_down=0, n_queries=1, backend="flat"))
+            old_stats.pop("degraded")
+            old_stats.pop("n_shards_down")
+            res = api.SearchResult.from_bytes(pack(
+                "search-result", PROTOCOL_VERSION,
+                arrays={"ids": np.zeros((1, 1), np.int64)},
+                meta={"stats": old_stats}))
+            if res.degraded or res.stats.n_shards_down:
+                errors.append("pre-resilience search-result payloads "
+                              "must decode as healthy (additive wire "
+                              "contract, DESIGN.md §16)")
+        except Exception as e:                      # noqa: BLE001
+            errors.append(f"pre-resilience search-result payload must "
+                          f"decode: {type(e).__name__}: {e}")
+    # PlacementSpec.n_replicas: validated, wire round-tripped, additive
+    try:
+        p = api.PlacementSpec(kind="sharded", n_shards=2, n_replicas=3)
+        if api.PlacementSpec.from_bytes(p.to_bytes()) != p:
+            errors.append("PlacementSpec.n_replicas does not survive a "
+                          "wire round-trip")
+        d = p.to_dict()
+        d.pop("n_replicas")
+        if api.PlacementSpec.from_dict(d).n_replicas != 1:
+            errors.append("PlacementSpec.from_dict must default missing "
+                          "n_replicas to 1 (additive wire contract)")
+    except Exception as e:                          # noqa: BLE001
+        errors.append(f"PlacementSpec(n_replicas=3) must construct and "
+                      f"round-trip (DESIGN.md §16): "
+                      f"{type(e).__name__}: {e}")
+    for bad in ({"kind": "sharded", "n_shards": 2, "n_replicas": 0},
+                {"kind": "single", "n_replicas": 2}):
+        try:
+            api.PlacementSpec(**bad)
+            errors.append(f"PlacementSpec must reject {bad}")
         except ValueError:
             pass
     return errors

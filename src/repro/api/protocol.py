@@ -67,10 +67,18 @@ class PlacementSpec:
     `n_shards=None` (sharded) means "every local device"; the service
     pins the effective count at creation (`resolve`), which is what
     `save` persists — a reloaded collection re-shards identically.
+
+    `n_replicas` (DESIGN.md §16) is the availability knob: each shard
+    group keeps that many logical replicas registered with the backend's
+    health registry, and searches route around dead replicas — a shard
+    answers while >= 1 of its replicas lives; only a fully-dead group
+    degrades the answer (`SearchResult.degraded`).  Wire-versioned
+    additively: payloads from before the field default to 1.
     """
     kind: str = "single"
     data_axis: str = "data"
     n_shards: int | None = None
+    n_replicas: int = 1
 
     def __post_init__(self):
         self.validate()
@@ -79,10 +87,17 @@ class PlacementSpec:
         if self.kind not in _PLACEMENT_KINDS:
             raise ValueError(f"unknown placement kind {self.kind!r} "
                              f"(have {_PLACEMENT_KINDS})")
+        if self.n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got "
+                             f"{self.n_replicas}")
         if self.kind == "single":
             if self.n_shards not in (None, 1):
                 raise ValueError("single placement cannot set n_shards "
                                  f"(got {self.n_shards})")
+            if self.n_replicas != 1:
+                raise ValueError("single placement cannot set n_replicas "
+                                 f"(got {self.n_replicas}) — replication "
+                                 "is a sharded-placement knob")
         else:
             if not self.data_axis:
                 raise ValueError("sharded placement needs a non-empty "
@@ -481,9 +496,20 @@ class SearchResult:
 
     For a coalesced single-query request the stats describe the flush
     the request rode in (stats.n_queries = how many requests shared the
-    batched engine call)."""
+    batched engine call).
+
+    `degraded` (DESIGN.md §16) surfaces failover: True means some shard
+    group had no live replica when this answer was computed, so the ids
+    cover only the alive shards' rows — a labelled partial answer
+    instead of a failed request.  Carried additively inside the stats
+    payload (`SearchStats.degraded` / `n_shards_down` default to
+    healthy), so pre-resilience peers interoperate."""
     ids: np.ndarray
     stats: SearchStats
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.stats.degraded)
 
     def __post_init__(self):
         self.ids = np.atleast_2d(np.asarray(self.ids, np.int64))

@@ -1,1 +1,7 @@
-from .runner import RetryPolicy, ResilientRunner, StragglerWatchdog  # noqa: F401
+"""Deprecated: `repro.ft` moved into `repro.resilience` (DESIGN.md
+§16).  This package remains as an import-compatible shim."""
+
+from ..resilience.runner import (ResilientRunner, RetryPolicy,  # noqa: F401
+                                 StragglerWatchdog)
+
+__all__ = ["RetryPolicy", "ResilientRunner", "StragglerWatchdog"]

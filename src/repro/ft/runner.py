@@ -1,109 +1,19 @@
-"""Fault tolerance: retrying step runner + straggler watchdog.
-
-On a real multi-pod deployment the failure domain is a host/chip dropping
-out of the collective; jax surfaces that as a raised exception on the
-coordinator.  The recovery loop below is the production shape:
-
-    run step -> exception? -> restore latest checkpoint -> rebuild mesh
-    (possibly smaller: elastic) -> continue
-
-`ResilientRunner` implements that loop; failures are injected in tests via
-a hook.  `StragglerWatchdog` covers the other production failure mode —
-a slow host — by timing steps against a rolling median and re-dispatching
-work (host-level input shards) that exceeds the deadline factor.
-"""
+"""Deprecated location: the checkpoint-restart runner moved to
+`repro.resilience.runner` (DESIGN.md §16), ported off raw
+`time.sleep` / `time.perf_counter` onto the injected `Clock` seam.
+This shim re-exports the new implementations; behaviour under the
+default `SystemClock` is unchanged."""
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable
+import warnings
+
+from ..resilience.runner import (ResilientRunner, RetryPolicy,  # noqa: F401
+                                 StragglerWatchdog)
 
 __all__ = ["RetryPolicy", "ResilientRunner", "StragglerWatchdog"]
 
-
-@dataclasses.dataclass
-class RetryPolicy:
-    max_restarts: int = 3
-    backoff_s: float = 0.0         # real deployments back off; tests don't
-
-
-class ResilientRunner:
-    """Wraps a step function with checkpoint-restart semantics."""
-
-    def __init__(self, step_fn: Callable, save_fn: Callable,
-                 restore_fn: Callable, policy: RetryPolicy = RetryPolicy(),
-                 checkpoint_every: int = 10):
-        self.step_fn = step_fn
-        self.save_fn = save_fn          # (step, state) -> None
-        self.restore_fn = restore_fn    # () -> (step, state)
-        self.policy = policy
-        self.checkpoint_every = checkpoint_every
-        self.restarts = 0
-        self.failures_seen = 0
-
-    def run(self, state, start_step: int, n_steps: int, get_batch):
-        """Run n_steps; on failure restore the latest checkpoint and replay.
-        get_batch(step) must be deterministic in step (resumable loader)."""
-        step = start_step
-        end = start_step + n_steps
-        metrics = None
-        while step < end:
-            try:
-                state, metrics = self.step_fn(state, get_batch(step))
-                step += 1
-                if step % self.checkpoint_every == 0:
-                    self.save_fn(step, state)
-            except Exception:
-                self.failures_seen += 1
-                self.restarts += 1
-                if self.restarts > self.policy.max_restarts:
-                    raise
-                if self.policy.backoff_s:
-                    time.sleep(self.policy.backoff_s)
-                step, state = self.restore_fn()
-        return state, step, metrics
-
-
-class StragglerWatchdog:
-    """Deadline-based straggler mitigation for host-side work.
-
-    Tracks a rolling median of durations; `run_sharded` dispatches a
-    callable per shard and re-dispatches (to a fallback executor) any shard
-    exceeding `factor` x median — the standard backup-task trick."""
-
-    def __init__(self, factor: float = 3.0, window: int = 32,
-                 min_deadline_s: float = 1e-3):
-        self.factor = factor
-        self.durations: list[float] = []
-        self.window = window
-        self.min_deadline_s = min_deadline_s
-        self.redispatches = 0
-
-    @property
-    def deadline_s(self) -> float:
-        if not self.durations:
-            return float("inf")
-        tail = sorted(self.durations[-self.window:])
-        med = tail[len(tail) // 2]
-        return max(self.factor * med, self.min_deadline_s)
-
-    def observe(self, duration_s: float):
-        self.durations.append(duration_s)
-
-    def run_sharded(self, shard_fns, fallback_fn=None):
-        """Execute each shard fn; any shard slower than the deadline is
-        re-run via fallback_fn (e.g., on a spare host).  Sequential here —
-        the scheduling logic, not the parallel substrate, is under test."""
-        results = []
-        for i, fn in enumerate(shard_fns):
-            t0 = time.perf_counter()
-            out = fn()
-            dt = time.perf_counter() - t0
-            if dt > self.deadline_s and fallback_fn is not None:
-                self.redispatches += 1
-                out = fallback_fn(i)
-            else:
-                self.observe(dt)
-            results.append(out)
-        return results
+warnings.warn(
+    "repro.ft.runner is deprecated; import RetryPolicy/ResilientRunner/"
+    "StragglerWatchdog from repro.resilience (clock-seam port, "
+    "DESIGN.md §16)", DeprecationWarning, stacklevel=2)

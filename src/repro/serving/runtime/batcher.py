@@ -40,11 +40,41 @@ import numpy as np
 from ...kernels.common import next_bucket
 from .clock import Clock, SystemClock
 
-__all__ = ["Scheduler", "MicroBatcher", "QueueFullError", "batch_buckets"]
+__all__ = ["Scheduler", "MicroBatcher", "QueueFullError", "batch_buckets",
+           "EngineRetryPolicy"]
 
 
 class QueueFullError(RuntimeError):
     """Raised by submit() when the scheduler's queue is at max_queue."""
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineRetryPolicy:
+    """Per-request retry contract for engine failures (DESIGN.md §16).
+
+    When a batched engine call raises, the batch's requests are NOT all
+    failed with the batch: each is re-run individually up to
+    `max_attempts` total attempts (the failed batch call counts as each
+    rider's first), with `backoff_s` of scheduler-clock time between
+    attempts.  A request that exhausts its attempts is quarantined —
+    its future gets the last exception and it is never retried again —
+    so one poison query costs its own attempts, not its batchmates'
+    results, and a persistent fault cannot retry forever.
+
+    `max_attempts=1` restores the pre-resilience behaviour (batch
+    failure fails every rider, no retry).  `AssertionError` is never
+    retried: parity-verification failures are deterministic bugs, not
+    transient faults.
+    """
+
+    max_attempts: int = 2
+    backoff_s: float = 0.0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.backoff_s < 0:
+            raise ValueError("backoff_s must be >= 0")
 
 
 def batch_buckets(max_batch: int) -> list[int]:
@@ -69,6 +99,7 @@ class _Request:                        # make generated __eq__ ambiguous
     t_insert: float = 0.0         # slot loop: when the row entered a slot
     span: object = None           # open obs "request" span (tracing on)
     trace_id: str = ""
+    n_attempts: int = 0           # engine calls this request rode (retry)
 
 
 def _stats_attrs(stats) -> dict:
@@ -96,7 +127,7 @@ class Scheduler(abc.ABC):
     def __init__(self, run_batch, *, max_batch: int = 32,
                  max_queue: int = 256, telemetry=None,
                  clock: Clock | None = None, name: str = "collection",
-                 tracer=None):
+                 tracer=None, retry_policy: EngineRetryPolicy | None = None):
         if max_batch < 1 or max_queue < 1:
             raise ValueError("max_batch and max_queue must be >= 1")
         self._run_batch = run_batch
@@ -105,6 +136,10 @@ class Scheduler(abc.ABC):
         self.telemetry = telemetry
         self.clock = clock if clock is not None else SystemClock()
         self.name = name
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else EngineRetryPolicy())
+        self.n_retries = 0            # individual re-run engine calls
+        self.n_quarantined = 0        # requests rejected after retries
         # obs (DESIGN.md §13): a repro.obs.TraceRecorder, or None = off.
         # Every recording call below is guarded on `is not None`, so the
         # disabled path costs one attribute read per flush.
@@ -262,6 +297,75 @@ class Scheduler(abc.ABC):
         except InvalidStateError:
             pass
 
+    # ----------------------------------------------- retry / quarantine
+
+    def _backoff(self, seconds: float):
+        """Sleep `seconds` of scheduler-clock time (DESIGN.md §12: no
+        raw time.sleep) — a timed condition wait re-checked against the
+        deadline, so VirtualClock tests drive retry backoff with
+        `advance()` exactly like flush deadlines."""
+        if seconds <= 0:
+            return
+        cv = threading.Condition()
+        deadline = self.clock.now() + float(seconds)
+        with cv:
+            while True:
+                remaining = deadline - self.clock.now()
+                if remaining <= 0:
+                    return
+                self.clock.wait(cv, remaining)
+
+    def _run_single(self, r: _Request, k, ratio_k, ef_search):
+        """One individual engine call for a retried request, at a shape
+        the scheduler has already compiled.  Returns (row, stats)."""
+        ids, stats = self._run_batch(r.Q[None], r.T[None], k,
+                                     ratio_k=ratio_k, ef_search=ef_search)
+        return np.asarray(ids[0]), stats
+
+    def _retry_failed_batch(self, batch: list[_Request], exc, group):
+        """Per-request recovery after a failed batched engine call
+        (DESIGN.md §16): every rider re-runs individually under the
+        retry policy, so a poison query fails alone — its batchmates'
+        retries succeed — and is quarantined (rejected with the last
+        exception, never retried again) once its attempts are spent.
+        AssertionError (parity verification) is deterministic and fails
+        the whole batch immediately, pre-resilience style."""
+        k, ratio_k, ef_search = group
+        tracer = self.tracer
+        policy = self.retry_policy
+        retryable = not isinstance(exc, AssertionError)
+        for r in batch:
+            r.n_attempts += 1              # the failed batched call
+            last_exc = exc
+            row = stats = None
+            while retryable and r.n_attempts < policy.max_attempts:
+                self._backoff(policy.backoff_s)
+                r.n_attempts += 1
+                self.n_retries += 1
+                if self.telemetry is not None:
+                    self.telemetry.record_retry()
+                try:
+                    row, stats = self._run_single(r, k, ratio_k, ef_search)
+                    last_exc = None
+                    break
+                except Exception as e:     # noqa: BLE001 — to the policy
+                    last_exc = e
+            if last_exc is not None:
+                self.n_quarantined += 1
+                if self.telemetry is not None:
+                    self.telemetry.record_quarantine()
+                self._resolve(r.future, exc=last_exc)
+                if r.span is not None:
+                    tracer.end_span(r.span, error=repr(last_exc),
+                                    attempts=r.n_attempts,
+                                    quarantined=True)
+            else:
+                self._resolve(r.future,
+                              result=(row, stats) if r.want_stats else row)
+                if r.span is not None:
+                    tracer.end_span(r.span, attempts=r.n_attempts,
+                                    retried=True)
+
 
 class MicroBatcher(Scheduler):
     """Flush-based dynamic micro-batcher (DESIGN.md §8).
@@ -287,7 +391,8 @@ class MicroBatcher(Scheduler):
                  telemetry=None, verify_parity: bool = False,
                  verify_lock=None, clock: Clock | None = None,
                  name: str = "collection", tracer=None,
-                 pad_policy: str = "replicate"):
+                 pad_policy: str = "replicate",
+                 retry_policy: EngineRetryPolicy | None = None):
         # batch-padding policy (repro.sec, DESIGN.md §14):
         #   "replicate"  pad rows replicate a real query (perf)
         #   "dummy"      pad rows are zero dummy queries, counted in
@@ -308,7 +413,8 @@ class MicroBatcher(Scheduler):
         self.verify_lock = verify_lock
         super().__init__(run_batch, max_batch=max_batch,
                          max_queue=max_queue, telemetry=telemetry,
-                         clock=clock, name=name, tracer=tracer)
+                         clock=clock, name=name, tracer=tracer,
+                         retry_policy=retry_policy)
 
     def warmup(self, example_q: np.ndarray, example_t: np.ndarray,
                k: int = 10, *, ratio_k: float = 8.0, ef_search: int = 96):
@@ -395,11 +501,11 @@ class MicroBatcher(Scheduler):
                             r.Q[None], r.T[None], k, ratio_k=ratio_k,
                             ef_search=ef_search)
                         np.testing.assert_array_equal(ids[i], single[0])
-        except Exception as exc:                 # noqa: BLE001 — to futures
-            for r in batch:
-                self._resolve(r.future, exc=exc)
-                if r.span is not None:
-                    tracer.end_span(r.span, error=repr(exc))
+        except Exception as exc:                 # noqa: BLE001 — to policy
+            # never onto the scheduler thread: each rider retries
+            # individually (at the warmup-compiled bucket-1 shape) and
+            # is quarantined when its attempts run out (DESIGN.md §16)
+            self._retry_failed_batch(batch, exc, batch[0].group)
             return
         for i, r in enumerate(batch):
             row = np.asarray(ids[i])

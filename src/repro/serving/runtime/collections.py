@@ -62,7 +62,7 @@ class Collection:
                  keyless: bool = False, placement=None,
                  scheduler: str = "flush", clock=None, tracer=None,
                  metrics=None, security_profile: str = "perf",
-                 **backend_kw):
+                 retry_policy=None, **backend_kw):
         self.tenant = tenant
         self.name = name
         self.d = d
@@ -106,6 +106,7 @@ class Collection:
                                  "the runtime")
             self._backend = ShardedBackend(
                 self.store, backend, n_shards=placement.n_shards,
+                n_replicas=getattr(placement, "n_replicas", 1),
                 data_axis=placement.data_axis, use_kernel=use_kernel,
                 seed=seed, **backend_kw)
         else:
@@ -115,6 +116,11 @@ class Collection:
         self._engine: SecureSearchEngine | None = None
         self._lock = threading.RLock()
         self.compact_every = int(compact_every)
+        # crash-safe ingestion (repro.resilience, DESIGN.md §16): when a
+        # WAL is attached every acknowledged mutation is fsync'd before
+        # the call returns.  Duck-typed (any object with .append/
+        # .last_seq) so the runtime never imports repro.resilience.
+        self._wal = None
         # telemetry runs on the same injected clock as the scheduler, so
         # its QPS windows / sojourns live on one (virtual) timeline
         self.telemetry = CollectionTelemetry(
@@ -135,7 +141,7 @@ class Collection:
                 d=d, cdim=dce.ciphertext_dim(d), telemetry=self.telemetry,
                 verify_parity=verify_parity, verify_lock=self._lock,
                 clock=clock, name=f"{tenant}/{name}", tracer=tracer,
-                pad_policy=pad_policy)
+                pad_policy=pad_policy, retry_policy=retry_policy)
         else:
             self.batcher = MicroBatcher(
                 self._run_batch, max_batch=max_batch,
@@ -143,7 +149,7 @@ class Collection:
                 telemetry=self.telemetry, verify_parity=verify_parity,
                 verify_lock=self._lock, clock=clock,
                 name=f"{tenant}/{name}", tracer=tracer,
-                pad_policy=pad_policy)
+                pad_policy=pad_policy, retry_policy=retry_policy)
 
     # ------------------------------------------------------------ keys
 
@@ -154,6 +160,31 @@ class Collection:
                 f"collection {self.tenant}/{self.name} is keyless "
                 "(server-side): keys live with the DataOwnerClient")
         return ppanns.User(self.owner.share_keys())
+
+    # ------------------------------------------------------ durability
+
+    def attach_wal(self, wal):
+        """Attach a write-ahead log (repro.resilience.WriteAheadLog or
+        anything shaped like it).  From here on, every acknowledged
+        insert/delete/explicit-compact appends a ciphertext-only record
+        under the collection lock — applied first, logged second, acked
+        third — so `repro.resilience.recover` replays exactly the
+        mutations callers saw succeed.  Auto-compaction is NOT logged:
+        replay re-triggers it deterministically at the same
+        `compact_every` threshold."""
+        self._wal = wal
+
+    @property
+    def health(self):
+        """The sharded backend's ShardHealthRegistry (None for single
+        placement — there is no replica to fail over to)."""
+        return getattr(self._backend, "health", None)
+
+    def _wal_append(self, op: str, arrays=None):
+        """Log one applied mutation (caller holds `_lock`)."""
+        if self._wal is not None:
+            self._wal.append(op, arrays)
+            self.telemetry.record_wal()
 
     # ------------------------------------------------------- ingestion
 
@@ -189,6 +220,13 @@ class Collection:
                 self.store.compact()
                 compacted = True
             self._refresh_engine()
+            # durability point (DESIGN.md §16): log the STORE's copy of
+            # the rows (normalized dtypes/layout), so replay through
+            # this same method reconstructs bit-identical state; fsync
+            # happens inside append, before the ack below
+            self._wal_append("insert", {
+                "C_sap": self.store.sap_view[rows].copy(),
+                "C_dce": self.store.dce_view[rows].copy()})
             sp.set(n_rows=len(rows), compacted=compacted)
         self.telemetry.record_ingest(n_inserted=len(rows),
                                      compacted=compacted)
@@ -215,6 +253,11 @@ class Collection:
                     self._backend.on_delete(row)
             finally:
                 self._refresh_engine()
+            # reached only when every row applied — a mid-batch hook
+            # failure raises above, and an unacked mutation must never
+            # be replayed as if the caller saw it succeed
+            self._wal_append("delete",
+                             {"rows": np.asarray(rows, np.int64)})
         self.telemetry.record_ingest(n_deleted=len(rows))
         return len(rows)
 
@@ -222,6 +265,9 @@ class Collection:
         with self._ingest_span("compact"), self._lock:
             self.store.compact()
             self._refresh_engine()
+            # an EXPLICIT compact is an acknowledged state transition
+            # (main_gen bump) a replay cannot re-derive from thresholds
+            self._wal_append("compact")
         self.telemetry.record_ingest(compacted=True)
 
     def load_snapshot(self, C_sap: np.ndarray, C_dce: np.ndarray, *,
@@ -346,6 +392,12 @@ class Collection:
                                .items()})
                 bookkeeping["adc_trained_gen"] = \
                     int(self._backend.adc_trained_gen)
+            if self._wal is not None:
+                # captured under the SAME lock hold as the array copies:
+                # this snapshot contains exactly the mutations logged
+                # through wal seq <= wal_seq, so recovery replays only
+                # records after it and the WAL prefix can be truncated
+                bookkeeping["wal_seq"] = int(self._wal.last_seq)
             manifest_fn = getattr(self._backend, "shard_manifest", None)
             if manifest_fn is not None:
                 # computed under the SAME lock hold as the array copies,
@@ -373,11 +425,16 @@ class Collection:
         with self._lock:
             if self._engine is None:            # empty collection
                 nq = np.atleast_2d(Q).shape[0]
+                health = getattr(self._backend, "health", None)
+                down = (health.n_groups_down if health is not None
+                        else 0)
                 return (np.full((nq, k), -1, np.int64),
                         SearchStats(latency_s=0.0, filter_dist_evals=0,
                                     refine_comparisons=0, bytes_up=0,
                                     bytes_down=0, n_queries=nq,
-                                    backend=self._backend.name))
+                                    backend=self._backend.name,
+                                    n_shards_down=down,
+                                    degraded=bool(down)))
             return self._engine.search_batch(Q, T, k, ratio_k=ratio_k,
                                              ef_search=ef_search,
                                              refine=refine)

@@ -28,6 +28,8 @@ mutating database.
 
 from __future__ import annotations
 
+import hashlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -106,6 +108,19 @@ class MutableEncryptedStore:
     @property
     def n_alive(self) -> int:
         return int(self.alive_view.sum())
+
+    def state_digest(self) -> str:
+        """SHA-256 over the logical store state — ciphertexts,
+        tombstones, and region bookkeeping, excluding growth slack.  Two
+        stores with equal digests answer every search identically, so
+        the recovery tests assert bit-identical post-replay state with
+        one string compare (repro.resilience, DESIGN.md §16)."""
+        h = hashlib.sha256()
+        for a in (self.sap_view, self.dce_view, self.alive_view):
+            h.update(np.ascontiguousarray(a).tobytes())
+        h.update(np.int64([self.n_main, self.n_total,
+                           self.main_gen]).tobytes())
+        return h.hexdigest()
 
     # ----------------------------------------------------------- mutation
 

@@ -38,7 +38,7 @@ import contextlib
 
 import numpy as np
 
-from .batcher import Scheduler, _stats_attrs
+from .batcher import EngineRetryPolicy, Scheduler, _stats_attrs
 from .clock import Clock
 
 __all__ = ["SlotLoop"]
@@ -64,7 +64,8 @@ class SlotLoop(Scheduler):
                  cdim: int | None = None, telemetry=None,
                  verify_parity: bool = False, verify_lock=None,
                  clock: Clock | None = None, name: str = "collection",
-                 tracer=None, pad_policy: str = "replicate"):
+                 tracer=None, pad_policy: str = "replicate",
+                 retry_policy: EngineRetryPolicy | None = None):
         # Padding policy (repro.sec, DESIGN.md §14).  The slot table is
         # always full-shape, so "full" adds nothing over "dummy" here;
         # under either, freed rows are scrubbed to zeros (a fixed dummy
@@ -83,7 +84,8 @@ class SlotLoop(Scheduler):
         self.verify_lock = verify_lock
         super().__init__(run_batch, max_batch=max_batch,
                          max_queue=max_queue, telemetry=telemetry,
-                         clock=clock, name=name, tracer=tracer)
+                         clock=clock, name=name, tracer=tracer,
+                         retry_policy=retry_policy)
 
     # ---------------------------------------------------------- the table
 
@@ -196,13 +198,14 @@ class SlotLoop(Scheduler):
                             r.Q[None], r.T[None], k, ratio_k=ratio_k,
                             ef_search=ef_search)
                         np.testing.assert_array_equal(ids[slot], single[0])
-        except Exception as exc:                 # noqa: BLE001 — to futures
+        except Exception as exc:                 # noqa: BLE001 — to policy
+            # free the slots first (the table must keep serving), then
+            # recover per request: each rider retries individually at
+            # the one compiled full-table shape (DESIGN.md §16)
+            riders = [self._slots[slot] for slot in active]
             for slot in active:
-                r = self._slots[slot]
-                self._resolve(r.future, exc=exc)
-                if r.span is not None:
-                    tracer.end_span(r.span, error=repr(exc))
                 self._free(slot)
+            self._retry_failed_batch(riders, exc, group)
             return
         sojourn, insert_to_emit = [], []
         t_emit = self.clock.now() if tracer is not None else now
@@ -234,3 +237,13 @@ class SlotLoop(Scheduler):
         if self.pad_policy != "replicate" and self._Q is not None:
             self._Q[slot] = 0.0          # scrub: freed row becomes the
             self._T[slot] = 0.0          # fixed zero dummy query
+
+    def _run_single(self, r, k, ratio_k, ef_search):
+        """Retry at the ONE compiled shape: the request's query
+        broadcast across the full table (a (1, d) call would compile a
+        second executable and break the zero-recompile contract)."""
+        Q = np.broadcast_to(np.asarray(r.Q), self._Q.shape).copy()
+        T = np.broadcast_to(np.asarray(r.T), self._T.shape).copy()
+        ids, stats = self._run_batch(Q, T, k, ratio_k=ratio_k,
+                                     ef_search=ef_search)
+        return np.asarray(ids[0]), stats

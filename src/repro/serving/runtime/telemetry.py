@@ -126,6 +126,16 @@ class CollectionTelemetry:
         # engine's SearchStats — 0 for scan backends
         self.n_hops = 0
         self.n_edges_scanned = 0
+        # resilience accounting (repro.resilience, DESIGN.md §16):
+        # durability (WAL records logged / replayed, checkpoints
+        # written), per-request retry/quarantine at the schedulers, and
+        # degraded answers served while shard groups were down
+        self.n_wal_records = 0
+        self.n_wal_replayed = 0
+        self.n_checkpoints = 0
+        self.n_retries = 0
+        self.n_quarantined = 0
+        self.n_degraded_answers = 0
         self._wire_metrics(metrics, labels or {})
 
     # ------------------------------------------------- metrics exposition
@@ -172,6 +182,22 @@ class CollectionTelemetry:
         self._m_padded = c("ann_padded_bytes_total",
                            "Result bytes added by fixed-shape id "
                            "padding (security profiles)")
+        self._m_wal = c("ann_wal_records_total",
+                        "Acknowledged mutations appended to the WAL")
+        self._m_wal_replayed = c("ann_wal_replayed_total",
+                                 "WAL records replayed during recovery")
+        self._m_checkpoints = c("ann_checkpoints_total",
+                                "Background collection checkpoints "
+                                "written")
+        self._m_retries = c("ann_request_retries_total",
+                            "Per-request engine-call retries after a "
+                            "failed batch")
+        self._m_quarantined = c("ann_quarantined_total",
+                                "Requests quarantined after exhausting "
+                                "retries (poison queries)")
+        self._m_degraded = c("ann_degraded_answers_total",
+                             "Engine calls answered with >= 1 shard "
+                             "group down")
         self._m_queue = metrics.gauge(
             "ann_queue_depth", "Requests waiting in the scheduler queue",
             names)
@@ -228,6 +254,7 @@ class CollectionTelemetry:
         self.n_dummy_queries += stats.n_dummy_queries
         self.n_hops += stats.n_hops
         self.n_edges_scanned += stats.n_edges_scanned
+        self.n_degraded_answers += int(stats.degraded)
 
     def _export_stats(self, stats, latencies_s):
         self._m_dist.inc(stats.filter_dist_evals, **self._labels)
@@ -239,6 +266,8 @@ class CollectionTelemetry:
             self._m_hops.inc(stats.n_hops, **self._labels)
         if stats.n_edges_scanned:
             self._m_edges.inc(stats.n_edges_scanned, **self._labels)
+        if stats.degraded:
+            self._m_degraded.inc(**self._labels)
         for x in latencies_s:
             self._m_latency.observe(float(x), **self._labels)
 
@@ -311,6 +340,43 @@ class CollectionTelemetry:
         if self._m_requests is not None:
             self._m_padded.inc(n_bytes, **self._labels)
 
+    # resilience events (repro.resilience, DESIGN.md §16) --------------
+
+    def record_wal(self, n: int = 1):
+        """n acknowledged mutations appended (and fsync'd) to the WAL."""
+        with self._lock:
+            self.n_wal_records += n
+        if self._m_requests is not None:
+            self._m_wal.inc(n, **self._labels)
+
+    def record_wal_replay(self, n: int):
+        """n WAL records replayed into this collection at recovery."""
+        with self._lock:
+            self.n_wal_replayed += n
+        if self._m_requests is not None and n:
+            self._m_wal_replayed.inc(n, **self._labels)
+
+    def record_checkpoint(self):
+        """One background `.ppcol` checkpoint durably replaced."""
+        with self._lock:
+            self.n_checkpoints += 1
+        if self._m_requests is not None:
+            self._m_checkpoints.inc(**self._labels)
+
+    def record_retry(self):
+        """One per-request retry of a request whose batch call failed."""
+        with self._lock:
+            self.n_retries += 1
+        if self._m_requests is not None:
+            self._m_retries.inc(**self._labels)
+
+    def record_quarantine(self):
+        """One request quarantined after exhausting its retry budget."""
+        with self._lock:
+            self.n_quarantined += 1
+        if self._m_requests is not None:
+            self._m_quarantined.inc(**self._labels)
+
     def record_ingest(self, n_inserted: int = 0, n_deleted: int = 0,
                       compacted: bool = False):
         with self._lock:
@@ -371,6 +437,12 @@ class CollectionTelemetry:
                 "padded_result_bytes": self.padded_result_bytes,
                 "n_hops": self.n_hops,
                 "n_edges_scanned": self.n_edges_scanned,
+                "n_wal_records": self.n_wal_records,
+                "n_wal_replayed": self.n_wal_replayed,
+                "n_checkpoints": self.n_checkpoints,
+                "n_retries": self.n_retries,
+                "n_quarantined": self.n_quarantined,
+                "n_degraded_answers": self.n_degraded_answers,
                 "qps": served / span if span > 0 else 0.0,
                 "batch_occupancy": occupancy,
                 "slot_occupancy": slot_occ,

@@ -84,6 +84,13 @@ class SearchStats:
     # scan backends; additive wire fields — old payloads decode with 0.
     n_hops: int = 0
     n_edges_scanned: int = 0
+    # failover accounting (repro.resilience, DESIGN.md §16): how many
+    # shard GROUPS had no live replica when this call was served, and
+    # whether the answer is therefore partial (`degraded=True` ⇒ ids
+    # cover only alive shards' rows).  Additive wire fields — payloads
+    # from before replication decode as healthy.
+    n_shards_down: int = 0
+    degraded: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -614,6 +621,9 @@ class SecureSearchEngine:
             n_hops=int(getattr(self.backend, "last_n_hops", 0)),
             n_edges_scanned=int(
                 getattr(self.backend, "last_n_edges_scanned", 0)),
+            n_shards_down=int(
+                getattr(self.backend, "last_n_shards_down", 0)),
+            degraded=bool(getattr(self.backend, "last_degraded", False)),
         )
         return ids, stats
 
@@ -653,5 +663,8 @@ class SecureSearchEngine:
             n_hops=int(getattr(self.backend, "last_n_hops", 0)),
             n_edges_scanned=int(
                 getattr(self.backend, "last_n_edges_scanned", 0)),
+            n_shards_down=int(
+                getattr(self.backend, "last_n_shards_down", 0)),
+            degraded=bool(getattr(self.backend, "last_degraded", False)),
         )
         return ids, stats

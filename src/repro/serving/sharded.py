@@ -48,6 +48,16 @@ Every jitted entry point here is module-level and specialised only on
 bucketed shapes + (mesh, axis, k') statics, so a warmed-up collection
 serves steady-state traffic with zero recompiles
 (`runtime.telemetry.jit_cache_size` audits these functions too).
+
+Failover (repro.resilience, DESIGN.md §16): every shard group carries
+`n_replicas` logical replicas in a `ShardHealthRegistry`; a group is
+servable while >= 1 replica is up, so killing one replica changes
+nothing.  When a whole group is down the backend *routes around it*
+instead of failing: the group's rows are masked out of the scans (mask
+is data — the healthy path stays byte-identical and executable-
+identical), the graph walk skips the dead subgraphs, and every answer
+is stamped `last_degraded` / `last_n_shards_down` for
+`SearchStats.degraded` / `n_shards_down`.
 """
 
 from __future__ import annotations
@@ -68,6 +78,7 @@ from ..kernels.common import next_bucket
 from ..kernels.dce_comp import ops as dce_ops
 from ..launch.mesh import make_mesh
 from ..obs.trace import child_complete, current as obs_current
+from ..resilience.health import ShardHealthRegistry
 from .runtime.ingest import SENTINEL, DeltaAwareBackend
 from .search_engine import layout_pools, pool_membership
 
@@ -121,6 +132,29 @@ def _sharded_flat_topk(C_sh, Q, *, mesh, axis, kp: int):
                      in_specs=(P(axis, None), P(None, None)),
                      out_specs=P(None, None),
                      check_rep=False)(C_sh, Q)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "kp"))
+def _sharded_flat_topk_ok(C_sh, ok_sh, Q, *, mesh, axis, kp: int):
+    """Degraded-mode twin of `_sharded_flat_topk` (DESIGN.md §16): the
+    same scan with a row serve-mask as DATA, so rows of dead shard
+    groups never reach the merge.  Compiled only on the first degraded
+    call — the healthy path keeps its original executable untouched."""
+
+    def body(C_loc, ok_loc, Q_rep):
+        n_loc = C_loc.shape[0]
+        qn = (Q_rep * Q_rep).sum(-1, keepdims=True)
+        xn = (C_loc * C_loc).sum(-1)[None, :]
+        dist = qn - 2.0 * Q_rep @ C_loc.T + xn            # (nq, n_loc)
+        dist = jnp.where(ok_loc[None, :], dist, jnp.inf)
+        kp_loc = min(kp, n_loc)
+        neg, idx = jax.lax.top_k(-dist, kp_loc)
+        return _local_merge(axis, neg, idx, n_loc, kp)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis, None), P(axis), P(None, None)),
+                     out_specs=P(None, None),
+                     check_rep=False)(C_sh, ok_sh, Q)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "axis", "kp"))
@@ -269,6 +303,15 @@ def _sharded_refine(C_dce_sh, cand, T, valid, *, mesh, axis, k: int):
 _BIG_F = jnp.float32(INT_BIG)
 
 
+@jax.jit
+def _and_ok(ok, sok):
+    """Failover mask composition (DESIGN.md §16): ADC row validity AND
+    the per-row shard-group serve mask.  Validity is data, so the
+    composed mask reuses the already-compiled ADC executables — the
+    degraded path costs one tiny jit, not a re-specialised scan."""
+    return jnp.where(sok > 0, ok, jnp.zeros((), ok.dtype))
+
+
 def _local_merge(axis, neg, idx, n_loc, kp):
     """Shared tail of the sharded flat scans: local top-k' -> global ids
     -> all-gather(k'/shard) -> cross-shard top-k'."""
@@ -393,7 +436,7 @@ def cache_size() -> int:
                 _sharded_sq_topk, _sharded_pq_topk,
                 _sharded_sq_pool_scan, _sharded_pq_pool_scan,
                 _sharded_oblivious_scan, _sharded_sq_oblivious,
-                _sharded_pq_oblivious))
+                _sharded_pq_oblivious, _sharded_flat_topk_ok, _and_ok))
 
 
 # ---------------------------------------------------------------------------
@@ -414,7 +457,7 @@ class ShardedBackend(DeltaAwareBackend):
     """
 
     def __init__(self, store, kind: str = "flat", *, n_shards: int,
-                 data_axis: str = "data", **kw):
+                 n_replicas: int = 1, data_axis: str = "data", **kw):
         if kind not in ("flat", "ivf", "graph"):
             raise ValueError(
                 f"sharded placement supports flat|ivf|graph filter "
@@ -429,6 +472,14 @@ class ShardedBackend(DeltaAwareBackend):
         self.mesh = sharded_mesh(self.n_shards, data_axis)
         self.name = f"sharded-{self.name}"   # sharded-<kind | adc-...>
         self.use_kernel = False       # einsum refine under the mesh
+        # failover state (DESIGN.md §16): the health registry is the one
+        # mutable truth; masks derived from it are cached on its epoch
+        self.n_replicas = int(n_replicas)
+        self.health = ShardHealthRegistry(self.n_shards, self.n_replicas)
+        self.last_degraded = False
+        self.last_n_shards_down = 0
+        self._ru_cache = (None, None)        # (epoch, bucket) -> row_up
+        self._sok_cache: dict = {}           # device serve-mask rows
         self._sh_sap = NamedSharding(self.mesh, P(data_axis, None))
         self._sh_dce = NamedSharding(self.mesh, P(data_axis, None, None))
         self._sh_row = NamedSharding(self.mesh, P(data_axis))
@@ -709,9 +760,57 @@ class ShardedBackend(DeltaAwareBackend):
         self._g_del_pending.clear()
         self._attached_gen = st.main_gen
 
+    # ------------------------------------------------------- failover
+
+    def _row_up(self, bucket: int) -> np.ndarray:
+        """(bucket,) bool host mask: True where the row's shard group
+        still has a live replica.  Cached on (health epoch, bucket) —
+        the steady state never rebuilds it."""
+        key = (self.health.epoch, bucket)
+        if self._ru_cache[0] != key:
+            per = bucket // self.n_shards
+            self._ru_cache = (key,
+                              np.repeat(self.health.serve_mask(), per))
+        return self._ru_cache[1]
+
+    def _sok_dev(self, bucket: int, dtype) -> jax.Array:
+        """Device-resident, row-sharded copy of `_row_up` (dtype-matched
+        so the composed ADC mask reuses the healthy executables)."""
+        key = (self.health.epoch, bucket, np.dtype(dtype).str)
+        hit = self._sok_cache.get(key)
+        if hit is None:
+            self._sok_cache = {k: v for k, v in self._sok_cache.items()
+                               if k[0] == key[0]}   # drop stale epochs
+            arr = self._row_up(bucket).astype(dtype)
+            hit = self._sok_cache[key] = jax.device_put(arr, self._sh_row)
+        return hit
+
+    def _pool_alive(self):
+        """Probe-pool validity for the IVF paths: alive, AND (degraded
+        only) the row's shard group servable — host-side composition,
+        so the pool-scan executables never change."""
+        st = self.store
+        if not self.last_degraded:
+            return lambda p: st.alive_view[p]
+        row_up = self._row_up(self._row_bucket(max(st.n_total, 1)))
+        return lambda p: st.alive_view[p] & row_up[p]
+
+    def _mask_alive(self, cand: np.ndarray, valid: np.ndarray):
+        safe, v = super()._mask_alive(cand, valid)
+        if self.last_degraded:
+            # safety net: no id from a dead shard group survives, even
+            # one a masked scan let through at +inf distance
+            row_up = self._row_up(
+                self._row_bucket(max(self.store.n_total, 1)))
+            v = v & row_up[safe]
+        return safe, v
+
     # ------------------------------------------------------- candidates
 
     def candidates(self, Q_sap: np.ndarray, kp: int, ef_search: int):
+        sm = self.health.serve_mask()
+        self.last_n_shards_down = int(self.n_shards - int(sm.sum()))
+        self.last_degraded = bool(self.last_n_shards_down)
         if self.kind == "graph":
             out = self._candidates_graph(Q_sap, kp, ef_search)
         elif self.quantization is not None:
@@ -743,16 +842,19 @@ class ShardedBackend(DeltaAwareBackend):
         bucket = int(self._adc_ok.shape[0])
         kp_eff = min(kp2, bucket)
         Q = np.asarray(Q_sap, np.float32)
+        ok = self._adc_ok
+        if self.last_degraded:   # mask is data: same executables (§16)
+            ok = _and_ok(ok, self._sok_dev(bucket, np.int32))
         if self.quantization == "int8":
             q8 = self.adc_codebook.encode_query(Q)
             cand = _sharded_sq_topk(
-                self._adc_c8, self._adc_cn, self._adc_ok,
+                self._adc_c8, self._adc_cn, ok,
                 jnp.asarray(q8), mesh=self.mesh, axis=self.axis,
                 kp=kp_eff)
         else:
             lut = self.adc_codebook.lut(Q)
             cand = _sharded_pq_topk(
-                self._adc_codes_t, self._adc_ok, jnp.asarray(lut),
+                self._adc_codes_t, ok, jnp.asarray(lut),
                 mesh=self.mesh, axis=self.axis, kp=kp_eff)
         cand = np.asarray(cand, np.int32)
         safe, valid = self._mask_alive(cand, np.ones(cand.shape, bool))
@@ -761,17 +863,16 @@ class ShardedBackend(DeltaAwareBackend):
         # f32 paths: rows present, incl. tombstones
 
     def _candidates_adc_ivf(self, Q_sap: np.ndarray, kp2: int):
-        st = self.store
         nq = Q_sap.shape[0]
         if self.ivf is None:                  # nothing alive to probe
             return (np.zeros((nq, kp2), np.int32),
                     np.zeros((nq, kp2), bool), 0)
         Q = np.asarray(Q_sap, np.float32)
         pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        pm = self._pool_alive()
         if self.oblivious:
             bucket = int(self._adc_ok.shape[0])
-            member = pool_membership(
-                nq, pools, bucket, pool_mask=lambda p: st.alive_view[p])
+            member = pool_membership(nq, pools, bucket, pool_mask=pm)
             kp_eff = min(kp2, bucket)
             if self.quantization == "int8":
                 q8 = self.adc_codebook.encode_query(Q)
@@ -793,8 +894,7 @@ class ShardedBackend(DeltaAwareBackend):
             self.last_filter_bytes = (self._adc_code_bytes(bucket)
                                       + self.ivf.centroids.nbytes)
             return ids, vout, evals
-        cand, valid = layout_pools(nq, pools, kp2,
-                                   pool_mask=lambda p: st.alive_view[p])
+        cand, valid = layout_pools(nq, pools, kp2, pool_mask=pm)
         if self.quantization == "int8":
             q8 = self.adc_codebook.encode_query(Q)
             ids, vout = _sharded_sq_pool_scan(
@@ -817,10 +917,17 @@ class ShardedBackend(DeltaAwareBackend):
     def _candidates_flat(self, Q_sap: np.ndarray, kp: int):
         st = self.store
         nq = Q_sap.shape[0]
-        kp_eff = min(kp, int(self._C_all.shape[0]))
-        cand = np.asarray(_sharded_flat_topk(
-            self._C_all, jnp.asarray(np.asarray(Q_sap, np.float32)),
-            mesh=self.mesh, axis=self.axis, kp=kp_eff), np.int32)
+        bucket = int(self._C_all.shape[0])
+        kp_eff = min(kp, bucket)
+        Qd = jnp.asarray(np.asarray(Q_sap, np.float32))
+        if self.last_degraded:
+            cand = _sharded_flat_topk_ok(
+                self._C_all, self._sok_dev(bucket, np.bool_), Qd,
+                mesh=self.mesh, axis=self.axis, kp=kp_eff)
+        else:
+            cand = _sharded_flat_topk(self._C_all, Qd, mesh=self.mesh,
+                                      axis=self.axis, kp=kp_eff)
+        cand = np.asarray(cand, np.int32)
         safe, valid = self._mask_alive(cand, np.ones(cand.shape, bool))
         self.last_filter_bytes = int(self._C_all.size) * 4
         return safe, valid, nq * st.n_total
@@ -833,10 +940,10 @@ class ShardedBackend(DeltaAwareBackend):
                     np.zeros((nq, kp), bool), 0)
         Q = np.asarray(Q_sap, np.float32)
         pools = [self.ivf.probe(q, self.nprobe) for q in Q]
+        pm = self._pool_alive()
         if self.oblivious:
             bucket = int(self._C_all.shape[0])
-            member = pool_membership(
-                nq, pools, bucket, pool_mask=lambda p: st.alive_view[p])
+            member = pool_membership(nq, pools, bucket, pool_mask=pm)
             ids = np.asarray(_sharded_oblivious_scan(
                 self._C_all, jnp.asarray(Q), jnp.asarray(member),
                 mesh=self.mesh, axis=self.axis,
@@ -847,8 +954,7 @@ class ShardedBackend(DeltaAwareBackend):
             self.last_filter_bytes = (bucket * st.d * 4
                                       + self.ivf.centroids.nbytes)
             return ids, vout, evals
-        cand, valid = layout_pools(nq, pools, kp,
-                                   pool_mask=lambda p: st.alive_view[p])
+        cand, valid = layout_pools(nq, pools, kp, pool_mask=pm)
         ids, vout = _sharded_pool_scan(
             self._C_all, jnp.asarray(Q), jnp.asarray(cand),
             jnp.asarray(valid), mesh=self.mesh, axis=self.axis, kp=kp)
@@ -880,9 +986,13 @@ class ShardedBackend(DeltaAwareBackend):
             qd = jnp.asarray(self.adc_codebook.encode_query(Q))
         else:
             qd = jnp.asarray(self.adc_codebook.lut(Q))
+        sm = self.health.serve_mask()
+        n_up = int(sm.sum())
         ids_p, d_p, vis_p = [], [], []
         hops_t = edges_t = 0
         for s in range(self.n_shards):
+            if not sm[s]:
+                continue       # dead group: no replica to walk (§16)
             lo, hi = s * per, (s + 1) * per
             if self.quantization is None:
                 db = (self._C_all[lo:hi],)
@@ -904,6 +1014,12 @@ class ShardedBackend(DeltaAwareBackend):
             vis_p.append(np.asarray(visited))
             hops_t += int(np.asarray(hops).sum())
             edges_t += int(np.asarray(edges).sum())
+        if not ids_p:                  # every shard group is down
+            self.last_n_hops = self.last_n_edges_scanned = 0
+            self.last_filter_bytes = 0
+            self.last_scan_trace = np.zeros((nq, 0), np.int32)
+            return (np.zeros((nq, kp2), np.int32),
+                    np.zeros((nq, kp2), bool), 0)
         ids = np.concatenate(ids_p, axis=1)
         dists = np.concatenate(d_p, axis=1)
         order = np.argsort(dists, axis=1, kind="stable")[:, :kp2]
@@ -913,9 +1029,9 @@ class ShardedBackend(DeltaAwareBackend):
         self.last_n_edges_scanned = edges_t
         row_bytes = (st.d * 4 if self.quantization is None
                      else self.adc_codebook.code_bytes_per_vector())
-        self.last_filter_bytes = (edges_t + nq * self.n_shards) * row_bytes
+        self.last_filter_bytes = (edges_t + nq * n_up) * row_bytes
         self.last_scan_trace = np.concatenate(vis_p, axis=1)
-        return safe, valid, edges_t + nq * self.n_shards
+        return safe, valid, edges_t + nq * n_up
 
     # ----------------------------------------------------------- refine
 

@@ -1,0 +1,329 @@
+"""Replicated shards + degraded-mode failover (repro.resilience,
+DESIGN.md §16).
+
+The availability contract: with `PlacementSpec.n_replicas > 1` each
+shard group answers while at least one replica lives.  One dead replica
+is INVISIBLE — bit-identical ids, `degraded=False`, zero new compiles on
+the healthy path.  A fully-dead group degrades the answer instead of
+failing it: searches keep returning exact ids over the alive shards'
+rows, stamped `SearchResult.degraded` / `SearchStats.n_shards_down`,
+and reviving the group restores bit-identical healthy answers.  The
+degraded path itself compiles at most one new executable (the masked
+flat scan) on its first use and zero thereafter.
+
+Shard counts above the local device count skip; CI runs this file under
+`XLA_FLAGS=--xla_force_host_platform_device_count=8` (resilience-smoke).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import resilience as R
+from repro.api import PlacementSpec
+from repro.api.protocol import PROTOCOL_VERSION, SearchResult
+from repro.core import dcpe
+from repro.core.wireformat import pack
+from repro.data import synth
+from repro.serving.runtime import Collection, VirtualClock, jit_cache_size
+from repro.serving.search_engine import SearchStats
+
+D = 16
+N = 480
+K = 8
+N_SHARDS = 4
+BACKENDS = ("flat", "ivf", "graph")
+
+
+def _need_devices(n):
+    if n > jax.device_count():
+        pytest.skip(f"needs {n} devices, have {jax.device_count()} "
+                    f"(run under XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=8)")
+
+
+# ---------------------------------------------------------------------------
+# ShardHealthRegistry semantics (no devices needed).
+# ---------------------------------------------------------------------------
+
+class TestHealthRegistry:
+    def test_replica_masking_and_group_down(self):
+        h = R.ShardHealthRegistry(4, 2)
+        assert h.healthy and not h.degraded
+        h.kill(1, 0)
+        assert h.n_replicas_down == 1 and h.n_groups_down == 0
+        assert not h.degraded                 # replica 1 still serves
+        assert h.serve_mask().tolist() == [True] * 4
+        h.kill(1, 1)
+        assert h.degraded and h.n_groups_down == 1
+        assert h.serve_mask().tolist() == [True, False, True, True]
+        h.revive(1, 0)
+        assert not h.degraded and h.n_replicas_down == 1
+        h.revive(1, 1)
+        assert h.healthy
+
+    def test_epoch_bumps_only_on_real_transitions(self):
+        h = R.ShardHealthRegistry(2, 2)
+        e0 = h.epoch
+        h.kill(0, 0)
+        e1 = h.epoch
+        assert e1 != e0
+        h.kill(0, 0)                          # idempotent: no new epoch
+        assert h.epoch == e1
+        h.revive(1, 1)                        # already up: no new epoch
+        assert h.epoch == e1
+        h.revive(0, 0)
+        assert h.epoch != e1
+
+    def test_bounds_and_snapshot(self):
+        h = R.ShardHealthRegistry(2, 1)
+        with pytest.raises(ValueError, match="out of range"):
+            h.kill(2, 0)
+        with pytest.raises(ValueError, match="out of range"):
+            h.kill(0, 1)
+        h.kill(1, 0)
+        snap = h.snapshot()
+        assert snap["n_groups_down"] == 1 and snap["n_replicas_down"] == 1
+        assert snap["up"].tolist() == [[True], [False]]
+        with pytest.raises(ValueError):
+            R.ShardHealthRegistry(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Wire surface: additive fields, old payloads decode healthy.
+# ---------------------------------------------------------------------------
+
+def _stats(**kw):
+    base = dict(latency_s=0.0, filter_dist_evals=0, refine_comparisons=0,
+                bytes_up=0, bytes_down=0, n_queries=1, backend="flat")
+    base.update(kw)
+    return SearchStats(**base)
+
+
+class TestWireSurface:
+    def test_stats_default_healthy(self):
+        s = _stats()
+        assert s.n_shards_down == 0 and s.degraded is False
+
+    def test_search_result_roundtrips_degraded(self):
+        res = SearchResult(ids=np.arange(6).reshape(2, 3),
+                           stats=_stats(degraded=True, n_shards_down=2))
+        back = SearchResult.from_bytes(res.to_bytes())
+        assert back.degraded is True
+        assert back.stats.n_shards_down == 2
+        np.testing.assert_array_equal(back.ids, res.ids)
+
+    def test_pre_resilience_payload_decodes_healthy(self):
+        """A peer from before DESIGN.md §16 omits the failover keys —
+        the additive contract says that decodes as a healthy answer."""
+        old_stats = {k: v for k, v in
+                     vars(_stats()).items()
+                     if k not in ("degraded", "n_shards_down")}
+        data = pack("search-result", PROTOCOL_VERSION,
+                    arrays={"ids": np.zeros((1, 3), np.int64)},
+                    meta={"stats": old_stats})
+        back = SearchResult.from_bytes(data)
+        assert back.degraded is False
+        assert back.stats.n_shards_down == 0
+
+    def test_placement_n_replicas_validation(self):
+        with pytest.raises(ValueError, match="n_replicas must be >= 1"):
+            PlacementSpec(kind="sharded", n_shards=2, n_replicas=0)
+        with pytest.raises(ValueError, match="single placement"):
+            PlacementSpec(kind="single", n_replicas=2)
+
+    def test_placement_n_replicas_roundtrip_and_default(self):
+        p = PlacementSpec(kind="sharded", n_shards=2, n_replicas=3)
+        assert PlacementSpec.from_dict(p.to_dict()) == p
+        assert PlacementSpec.from_bytes(p.to_bytes()) == p
+        assert p.resolve(8).n_replicas == 3
+        # pre-§16 dict payloads omit the key -> default 1
+        d = p.to_dict()
+        d.pop("n_replicas")
+        assert PlacementSpec.from_dict(d).n_replicas == 1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end failover on a live sharded collection.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ds():
+    return synth.make_dataset("sift1m", n=N, n_queries=4, d=D, k_gt=10,
+                              seed=3)
+
+
+def _collection(ds, backend):
+    placement = PlacementSpec(kind="sharded", n_shards=N_SHARDS,
+                              n_replicas=2).resolve(jax.device_count())
+    kw = dict(n_partitions=8, nprobe=4) if backend == "ivf" else {}
+    col = Collection("t", f"fo-{backend}", D,
+                     sap_beta=dcpe.suggest_beta(ds.base, fraction=0.05),
+                     seed=6, backend=backend, placement=placement,
+                     max_batch=4, max_wait_ms=1.0, **kw)
+    col.insert(ds.base)
+    col.compact()
+    return col
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_failover_replica_group_revive(ds, backend):
+    _need_devices(N_SHARDS)
+    col = _collection(ds, backend)
+    try:
+        user = col.new_user()
+        enc = [user.encrypt_query(q) for q in ds.queries]
+        health = col.health
+        assert health is not None and health.n_replicas == 2
+
+        baseline = [col.search(*e, K) for e in enc]
+        ids0, stats0 = col.search_batch(
+            np.stack([e[0] for e in enc]), np.stack([e[1] for e in enc]), K)
+        assert stats0.degraded is False and stats0.n_shards_down == 0
+
+        # ---- one replica down: INVISIBLE -------------------------------
+        health.kill(1, 1)
+        for e, want in zip(enc, baseline):
+            np.testing.assert_array_equal(col.search(*e, K), want)
+        _, stats1 = col.search_batch(
+            np.stack([e[0] for e in enc]), np.stack([e[1] for e in enc]), K)
+        assert stats1.degraded is False and stats1.n_shards_down == 0
+
+        # ---- whole group down: labelled partial answer -----------------
+        health.kill(1, 0)
+        bucket = col._backend._row_bucket(max(col.store.n_total, 1))
+        per = bucket // N_SHARDS
+        dead_rows = set(range(per, 2 * per))
+        got, statsd = col.search_batch(
+            np.stack([e[0] for e in enc]), np.stack([e[1] for e in enc]), K)
+        assert statsd.degraded is True and statsd.n_shards_down == 1
+        returned = set(int(i) for i in np.asarray(got).ravel() if i >= 0)
+        assert returned, "degraded search returned nothing"
+        assert not (returned & dead_rows), \
+            "degraded answer leaked ids from the dead shard group"
+        # deterministic: the degraded answer replays bit-identically,
+        # through both the direct and the scheduled path
+        got2, _ = col.search_batch(
+            np.stack([e[0] for e in enc]), np.stack([e[1] for e in enc]), K)
+        np.testing.assert_array_equal(got, got2)
+        sched = [col.search(*e, K) for e in enc]
+        for row, srow in zip(got, sched):
+            np.testing.assert_array_equal(np.asarray(row), srow)
+
+        # ---- zero steady-state recompiles in degraded mode -------------
+        n_compiled = jit_cache_size()
+        for e in enc:
+            col.search(*e, K)
+        col.search_batch(
+            np.stack([e[0] for e in enc]), np.stack([e[1] for e in enc]), K)
+        assert jit_cache_size() == n_compiled, \
+            "degraded serving recompiled after its first masked call"
+
+        # telemetry labels the degraded flushes
+        assert col.telemetry.snapshot()["n_degraded_answers"] >= 1
+
+        # ---- revive: bit-identical healthy answers ---------------------
+        health.revive(1, 0)
+        health.revive(1, 1)
+        for e, want in zip(enc, baseline):
+            np.testing.assert_array_equal(col.search(*e, K), want)
+        _, statsr = col.search_batch(
+            np.stack([e[0] for e in enc]), np.stack([e[1] for e in enc]), K)
+        assert statsr.degraded is False and statsr.n_shards_down == 0
+    finally:
+        col.close()
+
+
+def test_all_groups_down_returns_empty_not_crash(ds):
+    _need_devices(N_SHARDS)
+    col = _collection(ds, "graph")
+    try:
+        user = col.new_user()
+        e = user.encrypt_query(ds.queries[0])
+        for s in range(N_SHARDS):
+            col.health.kill(s, 0)
+            col.health.kill(s, 1)
+        ids, stats = col.search_batch(e[0][None], e[1][None], K)
+        assert stats.degraded is True
+        assert stats.n_shards_down == N_SHARDS
+        assert set(np.asarray(ids).ravel().tolist()) == {-1}
+    finally:
+        col.close()
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan drives kill/revive/straggler deterministically.
+# ---------------------------------------------------------------------------
+
+def test_faultplan_kill_revive_through_scheduler(ds):
+    _need_devices(N_SHARDS)
+    col = _collection(ds, "flat")
+    try:
+        user = col.new_user()
+        e = user.encrypt_query(ds.queries[0])
+        plan = (R.FaultPlan()
+                .kill_shard(at_call=2, shard=2, replica=0)
+                .kill_shard(at_call=2, shard=2, replica=1)
+                .revive_shard(at_call=4, shard=2)
+                .revive_shard(at_call=4, shard=2, replica=1))
+        plan.install(col)
+        f1 = col.submit(*e, K, want_stats=True).result(timeout=30)
+        assert f1[1].degraded is False          # call 1: healthy
+        f2 = col.submit(*e, K, want_stats=True).result(timeout=30)
+        assert f2[1].degraded is True           # call 2: group killed
+        assert f2[1].n_shards_down == 1
+        col.submit(*e, K).result(timeout=30)    # call 3: still degraded
+        f4 = col.submit(*e, K, want_stats=True).result(timeout=30)
+        assert f4[1].degraded is False          # call 4: revived
+        np.testing.assert_array_equal(f4[0], f1[0])
+    finally:
+        col.close()
+
+
+def test_faultplan_straggler_advances_virtual_clock():
+    """The straggler event is a deterministic VirtualClock advance at
+    engine call N — no real waiting, assertable to the exact second."""
+    clock = VirtualClock()
+
+    class _Sched:
+        def _run_batch(self, *a, **kw):
+            return "ok"
+
+    class _Col:
+        batcher = _Sched()
+
+    col = _Col()
+    plan = R.FaultPlan(clock=clock).straggler(at_call=2, delay_s=0.75)
+    plan.install(col)
+    col.batcher._run_batch()
+    t1 = clock.now()
+    col.batcher._run_batch()                    # straggles
+    assert clock.now() == pytest.approx(t1 + 0.75)
+    col.batcher._run_batch()
+    assert clock.now() == pytest.approx(t1 + 0.75)
+    assert plan.n_engine_calls == 3
+
+
+def test_faultplan_engine_error_then_quarantine(ds):
+    """An InjectedFault that outlives every retry attempt is quarantined
+    to its own request — the seam the scheduler-level suite covers with
+    a fake engine, proven here against the real one."""
+    col = Collection("t", "fp-q", D, seed=2, max_batch=4, max_wait_ms=1.0)
+    try:
+        col.insert(np.random.default_rng(0).normal(
+            size=(64, D)).astype(np.float32))
+        user = col.new_user()
+        e = user.encrypt_query(np.zeros(D, np.float32))
+        # default retry = 2 attempts; error both -> quarantine
+        plan = R.FaultPlan().engine_error(at_call=2, n=2)
+        plan.install(col)
+        ok1 = col.search(*e, K)                 # call 1 healthy
+        with pytest.raises(R.InjectedFault):
+            col.search(*e, K)                   # calls 2+3 both fault
+        np.testing.assert_array_equal(col.search(*e, K), ok1)
+        snap = col.telemetry.snapshot()
+        assert snap["n_quarantined"] == 1
+        assert snap["n_retries"] >= 1
+    finally:
+        col.close()

@@ -1,0 +1,407 @@
+"""Crash-safe ingestion: WAL, background checkpoints, recovery
+(repro.resilience, DESIGN.md §16).
+
+The durability contract under test: **acked means recoverable** — a
+mutation whose call returned has been fsync'd to the WAL, and
+`recover()` (checkpoint + WAL-tail replay through the public ingestion
+methods) reconstructs bit-identical store state and bit-identical
+search ids after a kill at ANY point.  The seeded kill-restart sweep at
+the bottom drives random interleavings of insert/delete/compact/
+checkpoint with a crash injected around a random fsync, across
+flat/ivf/graph backends and both schedulers, and compares the recovered
+collection against an oracle that applied exactly the acknowledged ops.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro import resilience as R
+from repro.serving.runtime import Collection, VirtualClock
+
+D = 8
+
+
+def _rows(rng, n):
+    return rng.normal(size=(n, D)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# WAL unit behaviour: framing, rotation, torn tails, truncation.
+# ---------------------------------------------------------------------------
+
+class TestWal:
+    def test_append_replay_round_trip(self, tmp_path):
+        w = R.WriteAheadLog(tmp_path)
+        a = {"C_sap": np.arange(12, dtype=np.float32).reshape(3, 4),
+             "C_dce": np.ones((3, 4, 2), np.float32)}
+        assert w.append("insert", a) == 1
+        assert w.append("delete", {"rows": np.array([1], np.int64)}) == 2
+        assert w.append("compact") == 3
+        w.close()
+        w2 = R.WriteAheadLog(tmp_path)
+        recs = list(w2.replay())
+        assert [(r.seq, r.op) for r in recs] == \
+            [(1, "insert"), (2, "delete"), (3, "compact")]
+        np.testing.assert_array_equal(recs[0].arrays["C_sap"], a["C_sap"])
+        np.testing.assert_array_equal(recs[0].arrays["C_dce"], a["C_dce"])
+        assert w2.last_seq == 3          # appends continue the sequence
+        assert w2.append("compact") == 4
+        w2.close()
+
+    def test_segment_rotation_and_replay_order(self, tmp_path):
+        w = R.WriteAheadLog(tmp_path, segment_bytes=2048)
+        for i in range(40):
+            w.append("insert", {"C_sap": np.full((2, D), i, np.float32),
+                                "C_dce": np.zeros((2, 4, 2), np.float32)})
+        segs = sorted(p for p in os.listdir(tmp_path)
+                      if p.endswith(".seg"))
+        assert len(segs) > 1, "rotation never triggered"
+        w.close()
+        w2 = R.WriteAheadLog(tmp_path, segment_bytes=2048)
+        seqs = [r.seq for r in w2.replay()]
+        assert seqs == list(range(1, 41))
+        w2.close()
+
+    def test_torn_tail_dropped_and_physically_truncated(self, tmp_path):
+        w = R.WriteAheadLog(tmp_path)
+        w.append("compact")
+        w.append("compact")
+        w.close()
+        seg = sorted(tmp_path.glob("wal-*.seg"))[-1]
+        good = seg.stat().st_size
+        with open(seg, "ab") as f:       # simulate a torn final frame
+            f.write(b"PWAL\x01\x02garbage")
+        w2 = R.WriteAheadLog(tmp_path)
+        assert [r.seq for r in w2.replay()] == [1, 2]
+        assert seg.stat().st_size == good, "torn tail not truncated"
+        assert w2.append("compact") == 3   # and the log keeps going
+        w2.close()
+
+    def test_corruption_in_non_final_segment_raises(self, tmp_path):
+        w = R.WriteAheadLog(tmp_path, segment_bytes=512)
+        for _ in range(20):
+            w.append("insert", {"C_sap": np.zeros((1, D), np.float32),
+                                "C_dce": np.zeros((1, 4, 2), np.float32)})
+        w.close()
+        first = sorted(tmp_path.glob("wal-*.seg"))[0]
+        raw = bytearray(first.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF       # flip a payload bit mid-segment
+        first.write_bytes(bytes(raw))
+        # mid-log damage can never be a torn tail: reopen/replay refuses
+        with pytest.raises(R.WalCorruptionError):
+            list(R.WriteAheadLog(tmp_path, segment_bytes=512).replay())
+
+    def test_truncate_through_drops_whole_prefix_segments(self, tmp_path):
+        w = R.WriteAheadLog(tmp_path, segment_bytes=512)
+        for _ in range(30):
+            w.append("insert", {"C_sap": np.zeros((1, D), np.float32),
+                                "C_dce": np.zeros((1, 4, 2), np.float32)})
+        n_before = len(list(tmp_path.glob("wal-*.seg")))
+        assert n_before > 2
+        removed = w.truncate_through(15)
+        assert removed >= 1
+        assert len(list(tmp_path.glob("wal-*.seg"))) < n_before
+        # only whole prefix segments go: every record after seq 15
+        # survives (some earlier ones may too — truncation is lazy)
+        seqs = [r.seq for r in w.replay()]
+        assert seqs == list(range(seqs[0], 31)) and seqs[0] <= 16
+        w.close()
+
+    def test_replay_after_seq_skips_prefix(self, tmp_path):
+        w = R.WriteAheadLog(tmp_path)
+        for _ in range(5):
+            w.append("compact")
+        assert [r.seq for r in w.replay(after_seq=3)] == [4, 5]
+        w.close()
+
+
+# ---------------------------------------------------------------------------
+# Collection + WAL + checkpoint integration.
+# ---------------------------------------------------------------------------
+
+def _fresh(seed=11, backend="flat", **kw):
+    kw.setdefault("compact_every", 64)
+    return Collection("t", "c", D, seed=seed, backend=backend, **kw)
+
+
+class TestRecovery:
+    def test_wal_only_recovery_bit_identical(self, tmp_path):
+        rng = np.random.default_rng(0)
+        col = _fresh()
+        wal = R.WriteAheadLog(tmp_path)
+        R.attach_wal(col, wal)
+        col.insert(_rows(rng, 40))
+        col.delete([1, 7])
+        col.compact()
+        col.insert(_rows(rng, 10))
+        dig = col.store.state_digest()
+        wal.close()
+        col.close()
+        col2, rep = R.recover(lambda: _fresh(), wal_dir=tmp_path)
+        assert not rep.had_checkpoint
+        assert rep.n_replayed == 4
+        assert col2.store.state_digest() == dig
+        assert col2.telemetry.snapshot()["n_wal_replayed"] == 4
+        col2.close()
+
+    def test_checkpoint_plus_tail_replay(self, tmp_path):
+        rng = np.random.default_rng(1)
+        ck = tmp_path / "col.ppcol"
+        wd = tmp_path / "wal"
+        col = _fresh()
+        wal = R.WriteAheadLog(wd)
+        R.attach_wal(col, wal)
+        col.insert(_rows(rng, 30))
+        R.AsyncCheckpointer(col, ck).checkpoint()   # truncates the WAL
+        col.insert(_rows(rng, 5))                   # tail beyond it
+        col.delete([3])
+        dig = col.store.state_digest()
+        wal.close()
+        col.close()
+        col2, rep = R.recover(lambda: _fresh(), checkpoint_path=ck,
+                              wal_dir=wd)
+        assert rep.had_checkpoint and rep.checkpoint_seq == 1
+        assert rep.n_replayed == 2                  # tail only
+        assert col2.store.state_digest() == dig
+        col2.close()
+
+    def test_async_checkpoint_never_blocks_serving(self, tmp_path):
+        """trigger() returns immediately (the copy-on-write snapshot is
+        the only locked part); searches proceed while the worker
+        serializes and fsyncs in the background."""
+        rng = np.random.default_rng(2)
+        col = _fresh()
+        col.insert(_rows(rng, 64))
+        u = col.new_user()
+        cq, tq = u.encrypt_query(_rows(rng, 1)[0])
+        want, _ = col.search_batch(cq[None], tq[None], 3)
+        cp = R.AsyncCheckpointer(col, tmp_path / "c.ppcol")
+        t = cp.trigger()
+        assert isinstance(t, threading.Thread)
+        got, _ = col.search_batch(cq[None], tq[None], 3)  # not blocked
+        np.testing.assert_array_equal(want, got)
+        cp.join()
+        assert (tmp_path / "c.ppcol").exists()
+        assert col.telemetry.snapshot()["n_checkpoints"] == 1
+        col.close()
+
+    def test_checkpoint_every_n_ops(self, tmp_path):
+        rng = np.random.default_rng(3)
+        col = _fresh()
+        cp = R.AsyncCheckpointer(col, tmp_path / "c.ppcol",
+                                 every_n_ops=10)
+        col.insert(_rows(rng, 8))
+        cp.note_ops(8)
+        assert not (tmp_path / "c.ppcol").exists()
+        col.insert(_rows(rng, 8))
+        cp.note_ops(8)                  # crosses the threshold
+        cp.join()
+        assert (tmp_path / "c.ppcol").exists()
+        col.close()
+
+    @pytest.mark.parametrize("mode,survives", [
+        ("crash_before_fsync", False), ("crash_after_fsync", True)])
+    def test_crash_around_fsync(self, tmp_path, mode, survives):
+        """before-fsync: the torn record was never acked and recovery
+        drops it.  after-fsync: durable-but-unacked — recovery replays
+        it (at-least-once on unacked ops)."""
+        rng = np.random.default_rng(4)
+        col = _fresh()
+        wal = R.WriteAheadLog(tmp_path)
+        R.attach_wal(col, wal)
+        plan = R.FaultPlan()
+        getattr(plan, mode)(at_record=2)
+        plan.install(col)
+        col.insert(_rows(rng, 20))                  # record 1: acked
+        with pytest.raises(R.SimulatedCrash):
+            col.insert(_rows(rng, 6))               # record 2: crash
+        col.close()
+        col2, rep = R.recover(lambda: _fresh(), wal_dir=tmp_path)
+        assert col2.store.n_total == (26 if survives else 20)
+        assert rep.n_replayed == (2 if survives else 1)
+        col2.close()
+
+
+# ---------------------------------------------------------------------------
+# Seeded kill-restart durability sweep: random interleavings of
+# insert/delete/compact/checkpoint with a crash at a random WAL record,
+# across backends x schedulers.  Zero acknowledged-write loss, and the
+# recovered collection answers bit-identically to an oracle that
+# applied exactly the acknowledged (plus durable-unacked) ops.
+# ---------------------------------------------------------------------------
+
+def _apply_ops(col, ops):
+    for op, arg in ops:
+        if op == "insert":
+            col.insert_encrypted(*arg)
+        elif op == "delete":
+            col.delete(arg)
+        elif op == "compact":
+            col.compact()
+
+
+@pytest.mark.parametrize("backend", ["flat", "ivf", "graph"])
+@pytest.mark.parametrize("sched", ["flush", "continuous"])
+def test_kill_restart_sweep(tmp_path, backend, sched):
+    seed0 = {"flat": 100, "ivf": 200, "graph": 300}[backend]
+    for case in range(2):
+        seed = seed0 + case
+        rng = np.random.default_rng(seed)
+        base = tmp_path / f"case{case}"
+        wd, ck = base / "wal", base / "col.ppcol"
+
+        def fresh():
+            return _fresh(seed=7, backend=backend, scheduler=sched,
+                          max_wait_ms=0.5, compact_every=48)
+
+        col = fresh()
+        wal = R.WriteAheadLog(wd)
+        R.attach_wal(col, wal)
+        owner = col.owner
+        cp = R.AsyncCheckpointer(col, ck)
+
+        # random op script; crash at a random WAL record inside it
+        n_ops = int(rng.integers(6, 12))
+        crash_at = int(rng.integers(2, n_ops + 1))
+        mode = ("crash_before_fsync", "crash_after_fsync")[
+            int(rng.integers(2))]
+        plan = R.FaultPlan()
+        getattr(plan, mode)(at_record=crash_at)
+        plan.install(col)
+
+        applied, crashed_op = [], None
+        for i in range(n_ops + 3):       # a few extra: crash must land
+            r = rng.random()
+            if r < 0.55 or col.store.n_alive < 4:
+                enc = owner.encrypt_vectors(
+                    _rows(rng, int(rng.integers(4, 16))))
+                op = ("insert", enc)
+            elif r < 0.75:
+                alive = np.flatnonzero(col.store.alive_view)
+                pick = rng.choice(alive, size=min(2, alive.size),
+                                  replace=False)
+                op = ("delete", sorted(int(x) for x in pick))
+            elif r < 0.9:
+                op = ("compact", None)
+            else:
+                cp.checkpoint()          # durable; not a WAL op
+                continue
+            try:
+                _apply_ops(col, [op])
+                applied.append(op)       # acked
+            except R.SimulatedCrash:
+                crashed_op = op
+                break
+        assert crashed_op is not None, "crash never landed"
+        col.close()
+
+        # recover from disk; oracle replays exactly the acked ops (plus
+        # the durable-but-unacked crashed op in after-fsync mode)
+        col2, rep = R.recover(
+            fresh, checkpoint_path=ck if ck.exists() else None,
+            wal_dir=wd)
+        oracle = fresh()
+        expect = applied + ([crashed_op]
+                            if mode == "crash_after_fsync" else [])
+        _apply_ops(oracle, expect)
+        assert col2.store.state_digest() == oracle.store.state_digest(), \
+            f"seed {seed}: acknowledged-write loss ({mode})"
+
+        # bit-identical post-recovery search ids, through the scheduler
+        user = oracle.new_user()
+        for qi in range(3):
+            q = _rows(rng, 1)[0]
+            cq, tq = user.encrypt_query(q)
+            np.testing.assert_array_equal(
+                col2.search(cq, tq, 5), oracle.search(cq, tq, 5),
+                err_msg=f"seed {seed} query {qi} diverged after recovery")
+        col2.close()
+        oracle.close()
+
+
+# ---------------------------------------------------------------------------
+# Clock-seam runner port (the retired repro.ft surface).
+# ---------------------------------------------------------------------------
+
+class TestRunnerPort:
+    def test_ft_shim_warns_and_reexports(self):
+        import importlib
+        import repro.ft.runner as shim
+        with pytest.warns(DeprecationWarning):
+            importlib.reload(shim)
+        assert shim.ResilientRunner is R.ResilientRunner
+        assert shim.RetryPolicy is R.RetryPolicy
+        from repro.ft import StragglerWatchdog
+        assert StragglerWatchdog is R.StragglerWatchdog
+
+    def test_backoff_runs_on_virtual_clock(self):
+        """Restart backoff consumes VIRTUAL seconds — no real sleeping
+        (the whole point of the clock-seam port)."""
+        clock = VirtualClock()
+        calls = {"n": 0}
+        ckpt = {"step": 0, "state": 0}
+
+        def step(state, batch):
+            calls["n"] += 1
+            if calls["n"] == 3:
+                raise RuntimeError("transient")
+            return state + batch, {"loss": 0.0}
+
+        runner = R.ResilientRunner(
+            step,
+            save_fn=lambda s, st: ckpt.update(step=s, state=st),
+            restore_fn=lambda: (ckpt["step"], ckpt["state"]),
+            policy=R.RetryPolicy(max_restarts=2, backoff_s=5.0),
+            checkpoint_every=2, clock=clock)
+
+        done = {}
+
+        def drive():
+            done["out"] = runner.run(0, 0, 6, get_batch=lambda s: 1)
+
+        t = threading.Thread(target=drive)
+        t.start()
+        clock.wait_for_waiters(1)        # runner parked in backoff
+        clock.advance(5.0)
+        t.join(timeout=10)
+        assert not t.is_alive()
+        state, step_n, _ = done["out"]
+        assert (state, step_n) == (6, 6)   # replay healed the failure
+        assert runner.restarts == 1
+
+    def test_straggler_watchdog_redispatches_on_virtual_clock(self):
+        clock = VirtualClock()
+        wd = R.StragglerWatchdog(factor=3.0, clock=clock)
+        for _ in range(8):
+            wd.observe(0.01)
+
+        def fast():
+            return "ok"
+
+        def slow():
+            clock.advance(1.0)          # a shard 100x the median
+            return "slow"
+
+        out = wd.run_sharded([fast, slow, fast],
+                             fallback_fn=lambda i: f"backup{i}")
+        assert out == ["ok", "backup1", "ok"]
+        assert wd.redispatches == 1
+
+    def test_sleep_on_virtual_clock(self):
+        clock = VirtualClock()
+        woke = threading.Event()
+
+        def sleeper():
+            R.sleep_on(clock, 2.0)
+            woke.set()
+
+        t = threading.Thread(target=sleeper)
+        t.start()
+        clock.wait_for_waiters(1)
+        assert not woke.is_set()
+        clock.advance(2.0)
+        t.join(timeout=10)
+        assert woke.is_set()

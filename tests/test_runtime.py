@@ -196,9 +196,11 @@ def test_discard_after_completion_keeps_result():
                                       5 + np.arange(K))
 
 
-def test_malformed_request_fails_its_flush_not_the_scheduler():
-    """A bad request's flush errors onto its futures; the worker thread
-    survives and keeps serving later requests (liveness regression)."""
+def test_malformed_request_cannot_doom_its_flush_or_the_scheduler():
+    """A ragged request breaks its flush's batch assembly (np.stack), but
+    per-request retry (DESIGN.md §16) re-runs each rider alone: the
+    batchmate still gets its answer, the ragged request is answered at
+    its own shape, and the worker thread keeps serving later requests."""
     eng = FakeEngine()
     eng.gate.clear()
     vc = VirtualClock()
@@ -208,10 +210,12 @@ def test_malformed_request_fails_its_flush_not_the_scheduler():
                         np.zeros(2 * D + 16, np.float32), K)  # ragged Q
         vc.advance(0.021)
         eng.gate.set()
-        with pytest.raises(ValueError):          # np.stack shape mismatch
-            bad.result(timeout=10)
-        with pytest.raises(ValueError):
-            good1.result(timeout=10)             # same doomed flush
+        np.testing.assert_array_equal(good1.result(timeout=10),
+                                      1 + np.arange(K))   # batchmate survives
+        np.testing.assert_array_equal(bad.result(timeout=10),
+                                      0 + np.arange(K))   # solo, own shape
+        solo_shapes = [s for s, _ in eng.calls]
+        assert (1, D) in solo_shapes and (1, D + 3) in solo_shapes
         good2 = mb.submit(*_req(2), K)           # scheduler still alive
         vc.advance(0.021)
         np.testing.assert_array_equal(good2.result(timeout=10),

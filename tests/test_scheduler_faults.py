@@ -1,12 +1,15 @@
-"""Fault injection against both serving schedulers (DESIGN.md §12).
+"""Fault injection against both serving schedulers (DESIGN.md §12, §16).
 
 The liveness contract: a fault — the engine raising mid-step, a client
 cancelling a request that is already being computed, `close()` landing
-while a drain is in flight — fails ONLY the affected futures.  The
-scheduler thread survives (or exits cleanly on close), later requests
-are served correctly, and nothing wedges.  Exercised on the fake engine
-for both schedulers, and on real engines under single and sharded
-placement via an injected `_run_batch` wrapper.
+while a drain is in flight — never takes the scheduler down.  Under the
+default `EngineRetryPolicy` a transient batch failure is recovered
+per-request (each rider re-runs individually at an already-compiled
+shape); under `max_attempts=1` the pre-resilience batch-wide failure is
+restored.  Either way the scheduler thread survives, later requests are
+served correctly, and nothing wedges.  A *poison* query — one that
+fails every attempt — is quarantined alone: its batchmates still get
+their results (the regression this file pins down).
 """
 
 import threading
@@ -19,20 +22,26 @@ import pytest
 from repro.core import dcpe
 from repro.data import synth
 from repro.serving.runtime import Collection, MicroBatcher, SlotLoop
+from repro.serving.runtime.batcher import EngineRetryPolicy
 from repro.serving.search_engine import SearchStats
 
 D = 18
 K = 5
 KINDS = ("flush", "continuous")
 
+# restores the pre-resilience contract: a failed batch fails its riders
+NO_RETRY = EngineRetryPolicy(max_attempts=1)
+
 
 class FaultyEngine:
-    """Deterministic ids (base = round(Q[i,0]), +arange(k)) with two
-    fault hooks: `fail_next` raises once mid-step; `in_call`/`gate`
-    expose the window while a step is being computed."""
+    """Deterministic ids (base = round(Q[i,0]), +arange(k)) with fault
+    hooks: `fail_next` raises once; `poison` (a set of query bases)
+    raises whenever a poisoned query rides the call — including its own
+    retries; `in_call`/`gate` expose the window while a step computes."""
 
     def __init__(self):
         self.fail_next = False
+        self.poison = set()
         self.in_call = threading.Event()
         self.gate = threading.Event()
         self.gate.set()
@@ -43,11 +52,13 @@ class FaultyEngine:
         try:
             self.gate.wait(timeout=10.0)
             self.n_calls += 1
+            Q = np.atleast_2d(Q)
+            base = np.round(Q[:, 0]).astype(np.int64)
             if self.fail_next:
                 self.fail_next = False
                 raise RuntimeError("injected engine fault")
-            Q = np.atleast_2d(Q)
-            base = np.round(Q[:, 0]).astype(np.int64)
+            if self.poison & set(base.tolist()):
+                raise RuntimeError("poison query fault")
             ids = base[:, None] + np.arange(k)[None, :]
             return ids, SearchStats(latency_s=0.0, filter_dist_evals=0,
                                     refine_comparisons=0, bytes_up=0,
@@ -71,12 +82,54 @@ def _req(i):
 
 
 @pytest.mark.parametrize("kind", KINDS)
-def test_engine_fault_fails_only_that_step(kind):
-    """A raising step fails exactly the futures riding it; the worker
-    survives and the very next step succeeds (slots/buckets freed)."""
+def test_transient_fault_recovered_per_request(kind):
+    """Default policy: a one-shot batch failure is invisible to the
+    riders — each re-runs individually and resolves with exact ids."""
     eng = FaultyEngine()
     eng.gate.clear()
     with _mk(kind, eng) as sched:
+        eng.fail_next = True
+        futs = [sched.submit(*_req(i), K) for i in (1, 2)]
+        eng.gate.set()
+        for i, fut in zip((1, 2), futs):
+            np.testing.assert_array_equal(fut.result(timeout=10),
+                                          i + np.arange(K))
+        assert sched.n_retries == 2          # one retry per rider
+        assert sched.n_quarantined == 0
+        if kind == "continuous":
+            assert sched.n_active == 0
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_poison_query_quarantined_alone(kind):
+    """THE batch-blast regression: a query that fails every attempt is
+    quarantined with its own exception; its batchmates still answer."""
+    eng = FaultyEngine()
+    eng.poison = {2}
+    eng.gate.clear()
+    with _mk(kind, eng) as sched:
+        futs = {i: sched.submit(*_req(i), K) for i in (1, 2, 3)}
+        eng.gate.set()
+        with pytest.raises(RuntimeError, match="poison query fault"):
+            futs[2].result(timeout=10)
+        for i in (1, 3):                     # batchmates unharmed
+            np.testing.assert_array_equal(futs[i].result(timeout=10),
+                                          i + np.arange(K))
+        assert sched.n_quarantined == 1
+        # quarantine is terminal for that request only: new submits of
+        # non-poison queries keep working
+        np.testing.assert_array_equal(
+            sched.submit(*_req(7), K).result(timeout=10), 7 + np.arange(K))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_engine_fault_fails_only_that_step_no_retry(kind):
+    """max_attempts=1: the pre-resilience contract — a raising step
+    fails exactly the futures riding it; the worker survives and the
+    very next step succeeds (slots/buckets freed)."""
+    eng = FaultyEngine()
+    eng.gate.clear()
+    with _mk(kind, eng, retry_policy=NO_RETRY) as sched:
         eng.fail_next = True
         doomed = [sched.submit(*_req(i), K) for i in (1, 2)]
         eng.gate.set()
@@ -93,7 +146,7 @@ def test_engine_fault_fails_only_that_step(kind):
 @pytest.mark.parametrize("kind", KINDS)
 def test_repeated_faults_never_wedge_the_scheduler(kind):
     eng = FaultyEngine()
-    with _mk(kind, eng) as sched:
+    with _mk(kind, eng, retry_policy=NO_RETRY) as sched:
         for i in range(1, 6):
             eng.fail_next = True
             with pytest.raises(RuntimeError):
@@ -164,9 +217,31 @@ def test_cancelled_requests_dropped_by_close(kind):
         dropped.result(timeout=0)
 
 
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        EngineRetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        EngineRetryPolicy(backoff_s=-1.0)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_parity_assertion_never_retried(kind):
+    """AssertionError is a deterministic bug (verify_parity), not a
+    transient fault: no retry, the failure propagates immediately."""
+
+    def bad_engine(Q, T, k, ratio_k=8.0, ef_search=96):
+        raise AssertionError("parity mismatch")
+
+    with _mk(kind, bad_engine) as sched:
+        with pytest.raises(AssertionError, match="parity mismatch"):
+            sched.submit(*_req(1), K).result(timeout=10)
+        assert sched.n_retries == 0
+
+
 # ---------------------------------------------------------------------------
 # Real engines, single + sharded placement: inject a one-shot fault into
-# the collection's _run_batch and require full recovery with exact ids.
+# the collection's _run_batch and require transparent recovery with
+# exact ids (DESIGN.md §16: the fault is invisible to the client).
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
@@ -204,11 +279,11 @@ def test_real_engine_fault_recovery(ds, kind, placement_kind):
             return real(Q, T, k, **kw)
 
         col.batcher._run_batch = faulty
-        with pytest.raises(RuntimeError, match="injected mid-stream"):
-            col.search(*enc[0], K)
-        # the scheduler recovered: the whole stream still answers with
-        # ids bit-identical to the pre-fault baseline
+        # default retry: the one-shot fault is recovered per-request —
+        # the whole stream answers bit-identically to the baseline and
+        # the client never sees the exception
         for e, want in zip(enc, baseline):
             np.testing.assert_array_equal(col.search(*e, K), want)
+        assert col.telemetry.snapshot()["n_retries"] >= 1
     finally:
         col.close()
